@@ -1,0 +1,111 @@
+"""Paper §5.3 / Fig. 10 (and Fig. 5): host-memory usage and throughput of
+Select-N vs (SLO-aware) FlexGen. Model: OPT-13B, seq 64.
+
+Paper claims: Select-N uses 2.37x (Fig. 10) / 2.1x (Fig. 5) more host memory
+and reaches up to 1.85x (Fig. 10) / 1.9x (Fig. 5) the throughput, because
+FlexGen's worst-case static estimates (peak-FLOPs compute, 1/n bus share)
+under-offload, leaving less GPU memory for KV and thus smaller batches.
+
+Two regimes are reported (the paper's Fig. 5 presumes a runnable naive mode,
+which fp16 OPT-13B on a 24 GB A10 does not admit — 25.7 GB of weights):
+
+  * SLO-limited (HBM 32 GB headroom, SLO = naive x factor): isolates the
+    decision quality — how much host memory each system dares to use for a
+    given slack. Reproduces the memory-ratio claim.
+  * capacity-forced (HBM 24 GB, the paper's A10): model must offload to run
+    at all; reproduces the max-batch / throughput claim. SLO = 4x modeled
+    naive — the transfer-byte floor ((W - HBM)/link_bw) makes tighter SLOs
+    arithmetically impossible at 24 GB/s; see fig13.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (BenchResult, Claim, flexgen_decide,
+                               interval_str, kv_bytes_for, non_stack_bytes,
+                               selectn_decide, times_for)
+from repro.configs.paper_models import OPT_13B
+from repro.core import costs
+from repro.core.hardware import A10
+
+SEQ, OUT = 64, 64
+BATCHES = [4, 8, 16, 32]
+SLO_FACTORS_A = [1.1, 1.2, 1.3, 1.5]   # SLO-limited regime (32 GB)
+SLO_FACTOR_B = 4.0                     # capacity-forced regime (24 GB)
+
+
+def run() -> BenchResult:
+    cfg = OPT_13B
+    ns = non_stack_bytes(cfg)
+    total_seq = SEQ + OUT
+    rows = []
+
+    # ---- regime A: SLO-limited -------------------------------------------
+    mem_ratios = []
+    b = 8
+    kv = kv_bytes_for(cfg, b, total_seq)
+    times = times_for(cfg, b, total_seq, "decode")
+    lf = costs.layer_flops(cfg, b, 1, total_seq)
+    for fac in SLO_FACTORS_A:
+        slo = fac * times.t_iter_no_offload_s
+        sn = selectn_decide(times, slo, 32e9, ns, kv)
+        fg = flexgen_decide(times, slo, 32e9, ns, kv, lf, A10,
+                            bw_assumed=1.0 / A10.devices_per_bus)
+        ratio = sn.host_bytes / fg.host_bytes if fg.host_bytes else float("inf")
+        mem_ratios.append(ratio)
+        rows.append({
+            "regime": "slo_limited", "batch": b, "slo_factor": fac,
+            "sn_interval": interval_str(sn.interval),
+            "sn_host_GiB": sn.host_bytes / 2**30,
+            "fg_host_GiB": fg.host_bytes / 2**30,
+            "host_ratio": ratio,
+            "sn_tpot_ms": sn.iter_s * 1e3, "fg_tpot_ms": fg.iter_s * 1e3,
+        })
+
+    # ---- regime B: capacity-forced ---------------------------------------
+    best = {"sn": (0, 0.0), "fg": (0, 0.0)}     # batch, tok/s
+    for b in BATCHES:
+        kv = kv_bytes_for(cfg, b, total_seq)
+        times = times_for(cfg, b, total_seq, "decode")
+        lf = costs.layer_flops(cfg, b, 1, total_seq)
+        slo = SLO_FACTOR_B * times.t_iter_no_offload_s
+        sn = selectn_decide(times, slo, A10.hbm_bytes, ns, kv)
+        fg = flexgen_decide(times, slo, A10.hbm_bytes, ns, kv, lf, A10,
+                            bw_assumed=1.0 / A10.devices_per_bus)
+        rows.append({
+            "regime": "capacity", "batch": b, "slo_factor": SLO_FACTOR_B,
+            "sn_interval": interval_str(sn.interval),
+            "sn_host_GiB": sn.host_bytes / 2**30,
+            "fg_host_GiB": fg.host_bytes / 2**30,
+            "host_ratio": (sn.host_bytes / fg.host_bytes
+                           if fg.feasible and fg.host_bytes else float("inf")),
+            "sn_tpot_ms": sn.iter_s * 1e3 if sn.feasible else float("inf"),
+            "fg_tpot_ms": fg.iter_s * 1e3 if fg.feasible else float("inf"),
+        })
+        if sn.feasible:
+            best["sn"] = (b, b / sn.iter_s)
+        if fg.feasible:
+            best["fg"] = (b, b / fg.iter_s)
+
+    thr_ratio = best["sn"][1] / best["fg"][1] if best["fg"][1] else float("inf")
+    claims = [
+        Claim("fig10a host memory Select-N vs FlexGen (SLO-limited)",
+              "2.37x (2.1x in fig5)",
+              f"{min(mem_ratios):.2f}x..{max(mem_ratios):.2f}x",
+              ok=max(mem_ratios) > 1.4,
+              note="driver: FlexGen's static 1/n bus-share worst case "
+                   "(Obs #3) + one-layer vs group prefetch"),
+        Claim("fig10b max supportable batch (capacity-forced)",
+              "FlexGen supports smaller batches",
+              f"Select-N {best['sn'][0]} vs FlexGen {best['fg'][0]}",
+              ok=best["fg"][0] <= best["sn"][0]),
+        Claim("fig10b throughput at best batch (capacity-forced)",
+              "up to 1.85x (1.9x in fig5)", f"{thr_ratio:.2f}x",
+              ok=thr_ratio > 1.0,
+              note="smaller than paper: our modeled FlexGen gets the full "
+                   "actual bus at runtime; the paper's also pays kernel-level "
+                   "overheads we don't model"),
+    ]
+    return BenchResult("fig10_memory_throughput", rows, claims)
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -1,0 +1,74 @@
+"""Paper §5.6 / Fig. 13: supporting models larger than device memory.
+OPT-13B and LLaMA2-13B (both ~25.7 GB fp16) on a 24 GB A10, batches 1..32.
+
+Paper claims: both models run via offloading with TPOT below 100 ms at every
+batch size. The qualitative claim (larger-than-HBM models are runnable with
+bounded, batch-stable TPOT) reproduces; the 100 ms absolute value does not
+survive byte arithmetic — the memory-forced offload is >= 5 layers x 26 ms
+of transfer per token on the stated 24 GB/s link (see rows) — so we report
+our modeled floor alongside it.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (BenchResult, Claim, interval_str, kv_bytes_for,
+                               non_stack_bytes, times_for, weight_bytes_total)
+from repro.configs.paper_models import LLAMA2_13B, OPT_13B
+from repro.core.coordinator import max_interval_for_memory
+from repro.core.interval import iter_time_with_interval
+
+SEQ, OUT = 64, 64
+BATCHES = [1, 2, 4, 8, 16, 32]
+HBM = 24e9
+
+
+def run() -> BenchResult:
+    rows = []
+    runnable = True
+    tpots = {}
+    for cfg in (OPT_13B, LLAMA2_13B):
+        ns = non_stack_bytes(cfg)
+        for b in BATCHES:
+            kv = kv_bytes_for(cfg, b, SEQ + OUT)
+            times = times_for(cfg, b, SEQ + OUT, "decode")
+            # min achievable TPOT: offload only the memory-forced layers
+            # (largest interval whose resident set + KV fits)
+            max_i = max_interval_for_memory(
+                times.num_layers, times.layer_bytes, HBM - ns - kv)
+            feasible = max_i >= 1
+            tpot = iter_time_with_interval(times, max_i) if feasible \
+                else float("inf")
+            rows.append({
+                "model": cfg.name, "batch": b,
+                "weights_GiB": weight_bytes_total(cfg) / 2**30,
+                "interval": interval_str(max_i),
+                "tpot_ms": tpot * 1e3,
+                "tok_s": b / tpot if feasible else 0.0,
+            })
+            runnable &= feasible
+            tpots.setdefault(cfg.name, []).append(tpot)
+
+    spread = max(max(v) / min(v) for v in tpots.values())
+    worst_ms = max(max(v) for v in tpots.values()) * 1e3
+    claims = [
+        Claim("fig13 larger-than-HBM models are runnable",
+              "both 13B models execute on 24 GB",
+              "runnable at every batch" if runnable else "infeasible cells",
+              ok=runnable),
+        Claim("fig13 TPOT grows sub-linearly with batch",
+              "batch 1..32 with modest TPOT growth (efficient batching)",
+              f"max/min spread {spread:.2f}x over 32x batch growth",
+              ok=spread < 3.0,
+              note="transfer-bound: TPOT tracks offloaded bytes (KV "
+                   "displaces resident layers), not compute"),
+        Claim("fig13 TPOT < 100 ms",
+              "below 100 ms at all batches", f"up to {worst_ms:.0f} ms",
+              ok=False,
+              note="not achievable at 24 GB/s x fp16 by byte arithmetic: "
+                   ">= (weights - HBM)/link_bw per token; the paper's "
+                   "absolute number implies a faster effective link"),
+    ]
+    return BenchResult("fig13_large_models", rows, claims)
+
+
+if __name__ == "__main__":
+    print(run().render())

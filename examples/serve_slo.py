@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests under a latency SLO.
+
+End-to-end driver of the paper's kind (serving): continuous batching,
+record-based admission, Select-N offload interval.
+
+    PYTHONPATH=src python examples/serve_slo.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen2.5-3b", "--requests", "10",
+          "--tpot-slo-ms", "80", "--ttft-slo-ms", "400",
+          "--hbm-gb", "0.04", "--max-batch", "4", "--max-seq", "64"])

@@ -1,0 +1,165 @@
+"""Offline performance analyzer (§4.4).
+
+Runs on a dedicated machine with no bus contention. For every (batch, seq)
+bucket it obtains per-layer compute time — *measured*, never estimated from
+peak FLOPs (Observation #2) — plus the layer transfer time, and tabulates the
+optimal offloading interval for every SLO on the 2 ms grid.
+
+Two measurement modes:
+  * "wallclock": time the jitted layer on the current backend (what runs on a
+    real TPU host; also what the determinism tests exercise on CPU);
+  * "model":     analytic roofline estimate from the hardware preset (used by
+    the paper-figure benchmarks to reproduce the A10 numbers without an A10;
+    recorded in the record's provenance field).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import costs
+from repro.core.hardware import HardwareModel
+from repro.core.interval import LayerTimes, NO_OFFLOAD, optimal_interval
+from repro.core.record import PerformanceRecord
+from repro.models import spec as S
+from repro.models import transformer as T
+from repro.models.model import build_model
+
+
+def _time_fn(fn: Callable, *args, repeats: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@dataclasses.dataclass
+class MeasuredTimes:
+    t_compute_s: float       # one scan unit (pattern period)
+    t_transfer_s: float      # one scan unit's weights over the host link
+    t_rest_s: float
+    unit_bytes: int
+    num_units: int
+
+
+class PerformanceAnalyzer:
+    def __init__(self, cfg: ModelConfig, hw: HardwareModel,
+                 measure: str = "wallclock", link_share: float = 1.0):
+        self.cfg = cfg
+        self.hw = hw
+        self.measure = measure
+        self.link_share = link_share
+        self.model = build_model(cfg)
+        self._params_one = None  # single-unit params, lazily built
+
+    # ---- per-(batch, seq) measurement ---------------------------------------
+    def _single_unit_params(self):
+        if self._params_one is None:
+            import dataclasses as dc
+            cfg1 = dc.replace(self.cfg, num_layers=len(self.cfg.pattern))
+            m1 = build_model(cfg1)
+            self._params_one = (m1, m1.init(jax.random.PRNGKey(0)))
+        return self._params_one
+
+    def measure_times(self, batch: int, seq: int, phase: str) -> MeasuredTimes:
+        cfg = self.cfg
+        p, r = T.pattern_info(cfg)
+        unit_bytes = costs.unit_weight_bytes(cfg)
+        # Per-device transferred bytes scale with the TP shard; the analyzer
+        # works in whole-instance terms (every host moves its shard in
+        # parallel), so full unit bytes over one link is the faithful unit.
+        t_transfer = self.hw.transfer_time(unit_bytes, self.link_share)
+
+        if self.measure == "model":
+            if phase == "prefill":
+                fl = sum(costs.layer_flops(cfg, batch, seq, seq, j)
+                         for j in range(p))
+                by = sum(costs.layer_act_bytes(cfg, batch, seq, seq, j)
+                         for j in range(p))
+            else:
+                fl = sum(costs.layer_flops(cfg, batch, 1, seq, j)
+                         for j in range(p))
+                by = sum(costs.layer_act_bytes(cfg, batch, 1, seq, j)
+                         for j in range(p))
+            t_compute = self.hw.exec_time(fl, by)
+            rest = self.hw.exec_time(
+                2 * batch * (seq if phase == "prefill" else 1)
+                * cfg.d_model * cfg.padded_vocab(),
+                cfg.padded_vocab() * cfg.d_model * 2)
+            return MeasuredTimes(t_compute, t_transfer, rest, unit_bytes, r)
+
+        # wallclock: run one scan unit for real
+        m1, params1 = self._single_unit_params()
+        if phase == "prefill":
+            tokens = jnp.zeros((batch, seq), jnp.int32)
+            pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
+                                   (batch, seq))
+
+            def unit_fn(params, tokens):
+                x = T.embed_tokens(m1.cfg, params, tokens)
+                ctx = T.SeqCtx(positions=pos, virtual_kv=m1.virtual_kv)
+                x, _, _ = T.apply_stack_seq(m1.cfg, params["blocks"], x, ctx)
+                return x
+
+            t_unit = _time_fn(jax.jit(unit_fn), params1, tokens)
+        else:
+            caches = m1.init_cache(jax.random.PRNGKey(1), batch, seq)
+            tok = jnp.zeros((batch,), jnp.int32)
+            posv = jnp.full((batch,), seq - 1, jnp.int32)
+
+            def unit_fn(params, tok, caches):
+                x = T.embed_tokens(m1.cfg, params, tok[:, None])
+                x, nc = T.apply_stack_decode(m1.cfg, params["blocks"], x,
+                                             posv, caches, m1.virtual_kv)
+                return x, nc
+
+            t_unit = _time_fn(jax.jit(unit_fn), params1, tok, caches)
+        return MeasuredTimes(t_unit, t_transfer, 0.1 * t_unit, unit_bytes, r)
+
+    def layer_times(self, batch: int, seq: int, phase: str) -> LayerTimes:
+        mt = self.measure_times(batch, seq, phase)
+        return LayerTimes(
+            t_compute_s=mt.t_compute_s, t_transfer_s=mt.t_transfer_s,
+            num_layers=mt.num_units, layer_bytes=mt.unit_bytes,
+            t_rest_s=mt.t_rest_s)
+
+    # ---- record generation ----------------------------------------------------
+    def generate_record(self, slos_s: Sequence[float], batches: Sequence[int],
+                        seqs: Sequence[int], phase: str) -> PerformanceRecord:
+        rec = PerformanceRecord(
+            model_name=self.cfg.name, hardware=self.hw.name, phase=phase,
+            batches=sorted(batches), seqs=sorted(seqs), measure=self.measure)
+        for b in rec.batches:
+            for s in rec.seqs:
+                times = self.layer_times(b, s, phase)
+                for slo in slos_s:
+                    rec.set(slo, b, s, optimal_interval(times, slo))
+        return rec
+
+
+def determinism_check(cfg: ModelConfig, batch: int, seq: int,
+                      iters: int = 5) -> dict:
+    """Empirically verify the paper's premise: per-iteration layer compute
+    time is deterministic (CV below a few percent)."""
+    an = PerformanceAnalyzer(cfg, hw=_dummy_hw(), measure="wallclock")
+    ts = [an.measure_times(batch, seq, "decode").t_compute_s
+          for _ in range(iters)]
+    ts = np.asarray(ts)
+    return {"mean_s": float(ts.mean()), "std_s": float(ts.std()),
+            "cv": float(ts.std() / ts.mean())}
+
+
+def _dummy_hw() -> HardwareModel:
+    from repro.core.hardware import A10
+    return A10

@@ -1,0 +1,172 @@
+"""Offloading interval — the paper's central abstraction (§4.3).
+
+An interval of ``i`` means: of every i consecutive layers, the last one's
+weights live in host memory and are prefetched starting at the *first* layer
+of the interval, so (i-1) layers of compute hide the transfer. ``i = 1``
+degenerates to DeepSpeed (everything offloaded); ``i > L`` means no
+offloading.
+
+The algebra below converts between (SLO, measured layer times) and intervals,
+and computes the memory/bandwidth consequences a plan has — the quantities
+the coordinator (§4.5) trades off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+NO_OFFLOAD = 10**9  # sentinel interval: everything resident
+
+# Relative tolerance for SLO feasibility comparisons (float accumulation).
+_FEAS_RTOL = 1e-9
+
+
+def _feasible(t: float, slo_s: float) -> bool:
+    return t <= slo_s * (1.0 + _FEAS_RTOL) + 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerTimes:
+    """Deterministic per-iteration timing of one model on one platform."""
+    t_compute_s: float      # per layer (uniform; see per_layer for hybrids)
+    t_transfer_s: float     # per layer host->device at full link bandwidth
+    num_layers: int
+    layer_bytes: int        # weight bytes of one layer (per instance shard)
+    t_rest_s: float = 0.0   # non-stack time per iteration (embed/logits/...)
+
+    @property
+    def t_iter_no_offload_s(self) -> float:
+        return self.num_layers * self.t_compute_s + self.t_rest_s
+
+
+def max_offloadable_layers(times: LayerTimes, slo_s: float) -> int:
+    """Paper §4.4: L_offload = floor(t_compute_total * (1+delta) / t_transfer)
+    where delta is the SLO headroom over the no-offload iteration time.
+
+    Interpretation: every offloaded layer costs one transfer; transfers
+    overlap compute, so the total transfer time must fit inside the compute
+    time plus the SLO slack.
+    """
+    t0 = times.t_iter_no_offload_s
+    if slo_s < t0 or times.t_transfer_s <= 0:
+        return 0
+    delta = (slo_s - t0) / t0
+    total_compute = times.num_layers * times.t_compute_s
+    budget = total_compute * (1.0 + delta) + times.t_rest_s * delta
+    return min(times.num_layers, int(budget / times.t_transfer_s))
+
+
+def paper_interval_formula(times: LayerTimes, slo_s: float) -> int:
+    """The paper's closed form: floor(L / L_offload). NOTE: this is a lower
+    bound, not always feasible — it assumes each transfer can overlap *all*
+    compute, but an interval-i transfer only overlaps its own group's (i-1)
+    layers. Our property tests exhibit violations (e.g. t_c == t_t, zero
+    slack => interval 1, 2x the SLO). See DESIGN.md §9.
+    """
+    l_off = max_offloadable_layers(times, slo_s)
+    if l_off <= 0:
+        return NO_OFFLOAD
+    return max(1, math.floor(times.num_layers / l_off))
+
+
+def optimal_interval(times: LayerTimes, slo_s: float) -> int:
+    """Smallest SLO-feasible interval: the paper's closed form as the initial
+    guess, verified against the exact schedule latency and bumped until
+    feasible (still O(L) worst case, done offline by the analyzer)."""
+    guess = paper_interval_formula(times, slo_s)
+    if guess >= NO_OFFLOAD:
+        return NO_OFFLOAD
+    for i in range(guess, times.num_layers + 1):
+        if _feasible(iter_time_with_interval(times, i), slo_s):
+            return i
+    return NO_OFFLOAD
+
+
+def iter_time_with_interval(times: LayerTimes, interval: int) -> float:
+    """Analytic iteration latency under interval ``i`` with Select-N's
+    group-start prefetch and a single copy stream (paper Fig. 7).
+
+    Matches ``simulator.simulate_iteration`` for uniform layer times
+    (property-tested).
+    """
+    if interval >= times.num_layers + 1 or interval >= NO_OFFLOAD:
+        return times.t_iter_no_offload_s
+    i, tc, tt = interval, times.t_compute_s, times.t_transfer_s
+    groups = times.num_layers // i
+    t = 0.0
+    copy_free = 0.0
+    for g in range(groups):
+        group_start = t
+        xfer_start = max(group_start, copy_free)
+        xfer_done = xfer_start + tt
+        copy_free = xfer_done
+        t = group_start + (i - 1) * tc          # resident layers
+        t = max(t, xfer_done) + tc              # offloaded layer
+    t += (times.num_layers - groups * i) * tc   # remainder layers (resident)
+    return t + times.t_rest_s
+
+
+def min_feasible_interval(times: LayerTimes, slo_s: float) -> int:
+    """Exact search: smallest interval whose simulated latency meets slo."""
+    for i in range(1, times.num_layers + 1):
+        if _feasible(iter_time_with_interval(times, i), slo_s):
+            return i
+    return NO_OFFLOAD
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadPlan:
+    """Concrete placement for a stack of ``num_units`` scan units."""
+    num_units: int
+    interval: int
+
+    @property
+    def enabled(self) -> bool:
+        return 1 <= self.interval <= self.num_units
+
+    @property
+    def num_groups(self) -> int:
+        return self.num_units // self.interval if self.enabled else 0
+
+    @property
+    def num_offloaded(self) -> int:
+        return self.num_groups
+
+    @property
+    def num_resident(self) -> int:
+        return self.num_units - self.num_offloaded
+
+    @property
+    def tail_units(self) -> int:
+        """Units after the last full group; always resident."""
+        return self.num_units - self.num_groups * self.interval if self.enabled \
+            else self.num_units
+
+    def offloaded_indices(self) -> list[int]:
+        if not self.enabled:
+            return []
+        return [g * self.interval + self.interval - 1
+                for g in range(self.num_groups)]
+
+    # ---- resource accounting ------------------------------------------------
+    def host_bytes(self, layer_bytes: int) -> int:
+        return self.num_offloaded * layer_bytes
+
+    def device_bytes(self, layer_bytes: int) -> int:
+        # resident layers + two transfer buffers (current + prefetched)
+        bufs = 2 if self.enabled else 0
+        return (self.num_resident + bufs) * layer_bytes
+
+    def link_bytes_per_iter(self, layer_bytes: int) -> int:
+        return self.num_offloaded * layer_bytes
+
+    def link_rate(self, layer_bytes: int, t_iter_s: float) -> float:
+        """Host-link bandwidth this plan consumes (paper Fig. 8 lines 4-13)."""
+        if t_iter_s <= 0:
+            return 0.0
+        return self.link_bytes_per_iter(layer_bytes) / t_iter_s
+
+
+def plan_for(num_units: int, interval: int) -> OffloadPlan:
+    return OffloadPlan(num_units=num_units, interval=interval)

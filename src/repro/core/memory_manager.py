@@ -1,0 +1,339 @@
+"""Runtime memory manager (§4.3): applies an OffloadPlan to a model.
+
+The layer stack (pattern-period scan units, leaves stacked [R, ...]) is
+re-grouped into
+
+    resident  [G, i-1, ...]   -- device HBM
+    offloaded [G, ...]        -- pinned_host
+    tail      [r, ...]        -- device HBM (units after the last full group)
+
+and the step functions run a scan over G groups. Inside one group, an
+explicit in-jit ``device_put`` moves the offloaded unit's weights to device
+memory *before* the resident-unit scan (paper Fig. 7: the prefetch is issued
+when the first layer of the interval starts computing), so (i-1) units of
+compute hide one host transfer — XLA's latency-hiding scheduler has the
+structural slack to overlap the copy. Verified to lower on both the TPU
+target semantics and the XLA CPU backend (dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.interval import OffloadPlan
+from repro.models import layers as L
+from repro.models import spec as S
+from repro.models import transformer as T
+from repro.models.model import Model
+from repro.models.spec import TensorSpec
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Splitting stacked trees by plan
+# ---------------------------------------------------------------------------
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def _split_array(a: jax.Array, plan: OffloadPlan):
+    g, i = plan.num_groups, plan.interval
+    used = g * i if plan.enabled else 0
+    head = a[:used]
+    if plan.enabled:
+        head = head.reshape(g, i, *a.shape[1:])
+        resident = head[:, : i - 1]
+        offloaded = head[:, i - 1]
+    else:
+        resident = a[:0].reshape(0, 1, *a.shape[1:])
+        offloaded = a[:0]
+    tail = a[used:]
+    return resident, offloaded, tail
+
+
+def _split_spec(s: TensorSpec, plan: OffloadPlan):
+    g, i = plan.num_groups, plan.interval
+    r = s.shape[0]
+    rest, logical = s.shape[1:], s.logical[1:]
+    mk = lambda lead: dataclasses.replace(
+        s, shape=(*lead, *rest), logical=("stack",) * len(lead) + logical,
+        fan_in_axes=tuple(a + len(lead) - 1 for a in s.fan_in_axes))
+    if plan.enabled:
+        resident = mk((g, i - 1))
+        offloaded = mk((g,))
+        tail = mk((r - g * i,))
+    else:
+        resident = mk((0, 1))
+        offloaded = mk((0,))
+        tail = mk((r,))
+    return resident, offloaded, tail
+
+
+def split_stacked(tree: Any, plan: OffloadPlan) -> dict[str, Any]:
+    """Split every leaf (leading dim R) into the three placement groups."""
+    def split(leaf):
+        if isinstance(leaf, TensorSpec):
+            return _split_spec(leaf, plan)
+        return _split_array(leaf, plan)
+
+    parts = jax.tree.map(split, tree, is_leaf=_is_leaf)
+    pick = lambda k: jax.tree.map(
+        lambda p: p[k], parts,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+        and not isinstance(x, TensorSpec))
+    return {"resident": pick(0), "offloaded": pick(1), "tail": pick(2)}
+
+
+def split_model_params(params: Params, plan: OffloadPlan) -> Params:
+    """Model params/spec tree -> offload layout (blocks replaced)."""
+    out = dict(params)
+    out["blocks"] = split_stacked(params["blocks"], plan)
+    return out
+
+
+def merge_model_params(split: Params, plan: OffloadPlan) -> Params:
+    """Inverse of split_model_params (arrays only) — checkpoint round-trips."""
+    blk = split["blocks"]
+    g, i = plan.num_groups, plan.interval
+
+    def merge(res, off, tail):
+        if plan.enabled:
+            head = jnp.concatenate([res, off[:, None]], axis=1)
+            head = head.reshape(g * i, *res.shape[2:])
+        else:
+            head = tail[:0]
+        return jnp.concatenate([head, tail], axis=0)
+
+    merged = jax.tree.map(merge, blk["resident"], blk["offloaded"], blk["tail"])
+    out = dict(split)
+    out["blocks"] = merged
+    return out
+
+
+def offload_memory_kind_fn(path: tuple) -> str | None:
+    """memory_kind for spec.shardings(): pinned_host under blocks/offloaded."""
+    keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+    if "blocks" in keys:
+        i = keys.index("blocks")
+        if i + 1 < len(keys) and keys[i + 1] == "offloaded":
+            return "pinned_host"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Grouped step functions
+# ---------------------------------------------------------------------------
+
+
+def _prefetch(tree: Any, shardings=None):
+    """Explicit prefetch: device_put to device-memory shardings at the group
+    start (paper Fig. 7 — the copy is issued before the resident-unit
+    compute). Without shardings (plain device-resident params, e.g. the CPU
+    demo engine), identity: nothing to move."""
+    if shardings is None:
+        return tree
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def _scan_units(cfg: ModelConfig, apply_unit, x, units_params, units_caches,
+                unroll: bool = False):
+    """lax.scan over a stacked group of units; handles the 0-length case.
+
+    unroll=True emits a straight-line program: the per-unit cache slices
+    become *static*, so XLA updates them in place instead of a
+    dynamic-slice/dynamic-update-slice round trip over the whole stacked
+    cache every layer (§Perf A3 — halves decode HBM traffic)."""
+    n = jax.tree.leaves(units_params)[0].shape[0]
+    if n == 0:
+        return x, units_caches
+
+    def body(carry, xs):
+        p, c = xs
+        x2, nc = apply_unit(carry, p, c)
+        return x2, nc
+
+    return jax.lax.scan(body, x, (units_params, units_caches),
+                        unroll=n if unroll else 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadRuntime:
+    """Bundles a model + plan into offload-aware step callables."""
+    model: Model
+    plan: OffloadPlan
+    # Device-memory shardings for one offloaded unit (leading stack dim
+    # dropped); when set, the group body issues an explicit device_put
+    # prefetch. None => params already device-resident.
+    device_shardings: Any = None
+    # Unroll the per-unit scans in decode (static cache slices update in
+    # place; see _scan_units). Off for training/prefill where the scan keeps
+    # the program compact and remat-friendly.
+    unroll_decode: bool = False
+
+    # ----- decode --------------------------------------------------------------
+    def decode_step(self, params_split: Params, tokens: jax.Array,
+                    pos: jax.Array, caches_split: Any,
+                    enc_pos: jax.Array | None = None):
+        cfg, model = self.model.cfg, self.model
+        vkv = model.virtual_kv
+
+        def apply_unit(x, pslices, cslices):
+            new = []
+            for j, blk in enumerate(cfg.pattern):
+                x, nc = T.apply_block_decode(cfg, blk, pslices[j], x, pos,
+                                             cslices[j], vkv, enc_pos)
+                new.append(nc)
+            return x, new
+
+        x = T.embed_tokens(cfg, params_split, tokens[:, None])
+        blk = params_split["blocks"]
+        cch = caches_split
+
+        # Single two-index dynamic slice [g] / [g, j] straight out of the
+        # carried cache stacks — one ds/dus per layer instead of slicing the
+        # whole group block and re-slicing inside (§Perf hillclimb C: the
+        # nested-scan double slice was ~40% extra decode HBM traffic).
+        def _cache_at(tree, g, j=None):
+            nlead = 1 if j is None else 2
+            def one(t):
+                starts = ((g,) if j is None else (g, j)) \
+                    + (0,) * (t.ndim - nlead)
+                sizes = (1,) * nlead + t.shape[nlead:]
+                return jax.lax.dynamic_slice(t, starts, sizes).reshape(
+                    t.shape[nlead:])
+            return jax.tree.map(one, tree)
+
+        def _cache_set(tree, new, g, j=None):
+            nlead = 1 if j is None else 2
+            def one(t, n):
+                starts = ((g,) if j is None else (g, j)) \
+                    + (0,) * (t.ndim - nlead)
+                return jax.lax.dynamic_update_slice(
+                    t, n.reshape((1,) * nlead + n.shape), starts)
+            return jax.tree.map(one, tree, new)
+
+        new_caches = {}
+        g = self.plan.num_groups
+        if g > 0:
+            def group_body(carry, xs):
+                x, res_c, off_c = carry
+                gi, res_p, off_p = xs
+                off_dev = _prefetch(off_p, self.device_shardings)
+                for j in range(self.plan.interval - 1):
+                    pj = jax.tree.map(lambda t: t[j], res_p)
+                    x, nc = apply_unit(x, pj, _cache_at(res_c, gi, j))
+                    res_c = _cache_set(res_c, nc, gi, j)
+                x, noc = apply_unit(x, off_dev, _cache_at(off_c, gi))
+                off_c = _cache_set(off_c, noc, gi)
+                return (x, res_c, off_c), None
+
+            (x, nrc, noc), _ = jax.lax.scan(
+                group_body, (x, cch["resident"], cch["offloaded"]),
+                (jnp.arange(g), blk["resident"], blk["offloaded"]))
+            new_caches["resident"], new_caches["offloaded"] = nrc, noc
+        else:
+            new_caches["resident"] = cch["resident"]
+            new_caches["offloaded"] = cch["offloaded"]
+        x, new_caches["tail"] = _scan_units(cfg, apply_unit, x, blk["tail"],
+                                            cch["tail"], self.unroll_decode)
+        x = L.apply_norm(cfg, params_split["final_norm"], x)
+        logits = T.lm_logits(cfg, params_split, x)[:, 0]
+        return logits, new_caches
+
+    # ----- prefill --------------------------------------------------------------
+    def prefill(self, params_split: Params, inputs: dict, cache_len: int,
+                attn_impl: str = "chunked"):
+        cfg, model = self.model.cfg, self.model
+        enc_out = enc_pos = None
+        if cfg.encoder_layers > 0:
+            enc_out, enc_pos = model.encode(params_split, inputs["enc_embeds"],
+                                            attn_impl)
+        x = T.embed_tokens(cfg, params_split, inputs["tokens"])
+        if cfg.frontend is not None and cfg.family != "audio":
+            x = jnp.concatenate(
+                [inputs["frontend_embeds"].astype(x.dtype), x], axis=1)
+        b, s, _ = x.shape
+        posm = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        ctx = T.SeqCtx(positions=posm, want_cache=True, cache_len=cache_len,
+                       virtual_kv=model.virtual_kv, enc_out=enc_out,
+                       enc_pos=enc_pos, attn_impl=attn_impl)
+
+        def apply_unit(x, pslices, _c):
+            caches = []
+            for j, blk in enumerate(cfg.pattern):
+                x, c, _a = T.apply_block_seq(cfg, blk, pslices[j], x, ctx)
+                caches.append(c)
+            return x, caches
+
+        blk = params_split["blocks"]
+
+        def group_body(x, xs):
+            res_p, off_p = xs
+            off_dev = _prefetch(off_p, self.device_shardings)
+            n = jax.tree.leaves(res_p)[0].shape[0]
+            if n:
+                def body(carry, p):
+                    x2, c = apply_unit(carry, p, None)
+                    return x2, c
+                x, res_caches = jax.lax.scan(body, x, res_p)
+            else:
+                res_caches = None
+            x, off_caches = apply_unit(x, off_dev, None)
+            return x, (res_caches, off_caches)
+
+        caches: dict[str, Any] = {}
+        if self.plan.num_groups > 0:
+            x, (rc, oc) = jax.lax.scan(group_body, x,
+                                       (blk["resident"], blk["offloaded"]))
+            caches["resident"], caches["offloaded"] = rc, oc
+        else:
+            # No offload groups: nothing cached under these sections (None is
+            # a consistent empty pytree for the decode-side scans).
+            caches["resident"] = None
+            caches["offloaded"] = None
+        n_tail = jax.tree.leaves(blk["tail"])[0].shape[0]
+        if n_tail:
+            def body(carry, p):
+                x2, c = apply_unit(carry, p, None)
+                return x2, c
+            x, caches["tail"] = jax.lax.scan(body, x, blk["tail"])
+        else:
+            caches["tail"] = None
+        x = L.apply_norm(cfg, params_split["final_norm"], x)
+        logits = T.lm_logits(cfg, params_split, x[:, -1:])[:, 0]
+        return logits, caches, enc_pos
+
+    # ----- cache helpers ---------------------------------------------------------
+    def split_caches(self, caches: Any):
+        return split_stacked(caches, self.plan)
+
+    def cache_spec_split(self, batch: int, cache_len: int, enc_len: int = 0):
+        return split_stacked(
+            self.model.cache_spec(batch, cache_len, enc_len), self.plan)
+
+    def spec_split(self) -> Params:
+        return split_model_params(self.model.spec, self.plan)
+
+    # ----- accounting ---------------------------------------------------------------
+    def memory_report(self) -> dict:
+        from repro.core import costs
+        ub = costs.unit_weight_bytes(self.model.cfg)
+        p, r = T.pattern_info(self.model.cfg)
+        other = S.tree_bytes(self.model.spec) - ub * r
+        return {
+            "unit_bytes": ub,
+            "host_bytes": self.plan.host_bytes(ub),
+            "device_stack_bytes": self.plan.device_bytes(ub),
+            "device_other_bytes": other,
+            "link_bytes_per_iter": self.plan.link_bytes_per_iter(ub),
+        }
+
+

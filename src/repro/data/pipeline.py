@@ -1,0 +1,109 @@
+"""Deterministic synthetic data pipeline.
+
+The paper's workload is a "randomly designed dataloader" (§5.1) — workload
+content does not change the systems behaviour (deterministic layer times), so
+a seeded token stream is the faithful substrate. The pipeline is
+host-sharded: every host materializes only its slice of the global batch
+(Philox counter-based, so step N is reproducible from (seed, step, host)
+without any coordination), then assembles a global jax.Array for the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.frontends import frontend_positions
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    # synthetic request mix for serving benches
+    mean_prompt_len: int = 256
+    mean_output_len: int = 64
+
+
+class SyntheticTokenStream:
+    """Deterministic [B, S] token/label batches for training."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, dcfg: DataConfig,
+                 mesh: Mesh | None = None):
+        self.cfg, self.shape, self.dcfg = cfg, shape, dcfg
+        self.mesh = mesh
+        self.n_front = frontend_positions(cfg, shape)
+
+    def _host_batch(self, step: int, lo: int, hi: int) -> dict[str, np.ndarray]:
+        """Rows [lo, hi) of the global batch at ``step``."""
+        cfg, shape = self.cfg, self.shape
+        rng = np.random.Generator(np.random.Philox(
+            key=self.dcfg.seed, counter=[step, lo, 0, 0]))
+        s_tok = shape.seq_len - (self.n_front
+                                 if cfg.frontend and cfg.family != "audio" else 0)
+        toks = rng.integers(0, cfg.vocab_size, size=(hi - lo, s_tok + 1),
+                            dtype=np.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.encoder_layers > 0:
+            out["enc_embeds"] = rng.standard_normal(
+                (hi - lo, shape.seq_len, cfg.d_model), dtype=np.float32) * 0.02
+        elif cfg.frontend is not None:
+            out["frontend_embeds"] = rng.standard_normal(
+                (hi - lo, self.n_front, cfg.d_model), dtype=np.float32) * 0.02
+        return out
+
+    def batch(self, step: int) -> dict[str, jax.Array]:
+        b = self.shape.global_batch
+        if self.mesh is None:
+            host = self._host_batch(step, 0, b)
+            return {k: jnp.asarray(v) for k, v in host.items()}
+        # Host-sharded assembly: every process builds its addressable rows.
+        out = {}
+        host = self._host_batch(step, 0, b)  # single-process container
+        for k, v in host.items():
+            spec = P(("pod", "data") if "pod" in self.mesh.axis_names
+                     else ("data",), *([None] * (v.ndim - 1)))
+            arr = jnp.asarray(v)
+            if v.dtype == np.float32 and k != "tokens":
+                arr = arr.astype(jnp.bfloat16)
+            out[k] = jax.device_put(arr, NamedSharding(self.mesh, spec))
+        return out
+
+    def __iter__(self) -> Iterator[dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticRequest:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    ttft_slo_s: float
+    tpot_slo_s: float
+    arrival_s: float
+
+
+def request_stream(dcfg: DataConfig, n: int, *, ttft_slo_s: float,
+                   tpot_slo_s: float, rate_per_s: float = 4.0
+                   ) -> list[SyntheticRequest]:
+    """Poisson arrivals with geometric lengths (paper §5.1 style)."""
+    rng = np.random.Generator(np.random.Philox(key=dcfg.seed + 1))
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate_per_s)
+        out.append(SyntheticRequest(
+            rid=i,
+            prompt_len=int(np.clip(rng.geometric(
+                1.0 / dcfg.mean_prompt_len), 8, 4096)),
+            max_new_tokens=int(np.clip(rng.geometric(
+                1.0 / dcfg.mean_output_len), 4, 1024)),
+            ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s, arrival_s=t))
+    return out

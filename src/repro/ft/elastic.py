@@ -1,0 +1,59 @@
+"""Elastic re-meshing: resume a job on a different device count.
+
+A checkpoint carries no mesh information — leaves are full logical arrays
+(assembled per-host shards). On restart we rebuild the mesh from whatever
+devices exist, re-resolve shardings through the same rules, and restore. The
+data-parallel axis absorbs the size change; tensor-parallel degree is kept
+stable by preference (re-sharding TP changes per-device layouts but stays
+correct — the rules' divisibility fallback guards impossible splits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.ft import checkpoint as ckpt
+from repro.models import spec as S
+from repro.models.model import build_model
+from repro.sharding.rules import make_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+
+    @staticmethod
+    def for_devices(n_devices: int, tp_preference: int = 16) -> "ElasticPlan":
+        """Factor n_devices into (data, model), keeping TP stable when the
+        device count allows it and degrading gracefully otherwise."""
+        tp = tp_preference
+        while tp > 1 and n_devices % tp != 0:
+            tp //= 2
+        return ElasticPlan((n_devices // tp, tp), ("data", "model"))
+
+    def make_mesh(self):
+        return jax.make_mesh(
+            self.mesh_shape, self.axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(self.axis_names))
+
+
+def resume(cfg: ModelConfig, directory: str, *, tp_preference: int = 16
+           ) -> tuple[Any, dict, Any]:
+    """Restore the latest checkpoint onto a mesh built from current devices.
+
+    Returns (params, extra, mesh)."""
+    step = ckpt.latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    plan = ElasticPlan.for_devices(len(jax.devices()), tp_preference)
+    mesh = plan.make_mesh()
+    rules = make_rules(cfg, mesh)
+    model = build_model(cfg, tp=mesh.shape["model"])
+    target = S.abstract(model.spec)
+    shardings = S.shardings(model.spec, mesh, rules)
+    params, extra = ckpt.restore_checkpoint(directory, step, target, shardings)
+    return params, extra, mesh

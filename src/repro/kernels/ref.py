@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels. Dense, O(S^2) memory — used only
+for correctness validation at small shapes."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        kv_len: int | None = None) -> jax.Array:
+    """q: [B,H,Sq,D]; k/v: [B,V,Sk,D] with V | H. Returns [B,H,Sq,D]."""
+    b, h, sq, d = q.shape
+    vh, sk = k.shape[1], k.shape[2]
+    g = h // vh
+    qf = q.reshape(b, vh, g, sq, d).astype(jnp.float32) / math.sqrt(d)
+    s = jnp.einsum("bvgqd,bvkd->bvgqk", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    valid = jnp.ones((sq, sk), bool)
+    if causal:
+        # decode-style offset: query position sq-1 aligns with kv position
+        # kv_len-1 when sq != sk
+        off = (kv_len if kv_len is not None else sk) - sq
+        valid &= kpos <= qpos + off
+        if window > 0:
+            valid &= kpos > qpos + off - window
+    if kv_len is not None:
+        valid &= kpos < kv_len
+    s = jnp.where(valid[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bvgqk,bvkd->bvgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def ref_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               context_lens: jax.Array, *,
+                               window: int = 0) -> jax.Array:
+    """q: [B,H,D]; pages: [npages, page, V, D]; block_tables: [B, nb];
+    context_lens: [B]. Returns [B,H,D]."""
+    b, h, d = q.shape
+    npages, page, vh, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    g = h // vh
+
+    def per_req(qr, bt, cl):
+        k = k_pages[bt]          # [nb, page, V, D]
+        v = v_pages[bt]
+        k = k.reshape(nb * page, vh, d)
+        v = v.reshape(nb * page, vh, d)
+        qf = qr.reshape(vh, g, d).astype(jnp.float32) / math.sqrt(d)
+        s = jnp.einsum("vgd,svd->vgs", qf, k.astype(jnp.float32))
+        kpos = jnp.arange(nb * page)
+        valid = kpos < cl
+        if window > 0:
+            valid &= kpos >= cl - window
+        s = jnp.where(valid[None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        o = jnp.einsum("vgs,svd->vgd", p, v.astype(jnp.float32))
+        return o.reshape(h, d).astype(qr.dtype)
+
+    return jax.vmap(per_req)(q, block_tables, context_lens)

@@ -1,0 +1,317 @@
+"""Multi-pod dry run: lower + compile every (architecture × input-shape ×
+mesh) cell on the production meshes, record memory/cost/collective analysis.
+
+This proves the distribution config is coherent without real hardware:
+sharding mismatches, compile-time OOMs, and unsupported collectives all fail
+here. Results feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+NOTE: the os.environ lines below MUST run before any other import (jax locks
+the device count at first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+      --shape decode_32k --mesh both --offload-interval 4
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import Counter
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED_ARCHS, LM_SHAPES, cell_is_runnable,
+                           get_config, get_shape)
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core import costs
+from repro.core.interval import NO_OFFLOAD, OffloadPlan
+from repro.core.memory_manager import (OffloadRuntime,
+                                       offload_memory_kind_fn,
+                                       split_model_params)
+from repro.launch import hlo_costs
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import spec as S
+from repro.models.frontends import encoder_len
+from repro.models.model import build_model
+from repro.models.transformer import pattern_info
+from repro.models.spec import tree_map_spec
+from repro.sharding.rules import make_rules, named_sharding, sharding_context
+from repro.training.train_loop import (TrainConfig, build_train_step,
+                                       opt_state_spec)
+
+# ---------------------------------------------------------------------------
+# Collective-byte extraction from compiled HLO
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"= (?:\([^)]*\)|\S+) (all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def _result_bytes(line: str, op_start: int) -> int:
+    # result shape(s) sit between '=' and the opcode:
+    #   %all-reduce.2 = f32[4,256]{1,0} all-reduce(%dot.1), ...
+    eq = line.find("=")
+    if eq < 0:
+        return 0
+    region = line[eq + 1: op_start]
+    total = 0
+    for m in _SHAPE_RE.finditer(region):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, default_group: int) -> dict:
+    """Per-device wire bytes by collective kind (ring-model factors).
+
+    Counts sync collectives and async -start ops (the -done halves are
+    skipped to avoid double counting)."""
+    out: Counter = Counter()
+    count: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line[m.start(1): m.start(1) + 30]:
+            continue
+        kind = m.group(1)
+        rb = _result_bytes(line, m.start(1))
+        gm = _GROUPS_RE.search(line)
+        g = int(gm.group(2)) if gm else default_group
+        g = max(g, 2)
+        if kind == "all-gather":
+            moved = rb * (g - 1) / g
+        elif kind == "all-reduce":
+            moved = 2 * rb * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = rb * (g - 1)
+        elif kind == "all-to-all":
+            moved = rb * (g - 1) / g
+        else:  # collective-permute
+            moved = rb
+        out[kind] += int(moved)
+        count[kind] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return {"bytes": dict(out), "count": dict(count)}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, interval: int,
+               unroll_decode: bool = False) -> tuple[Any, tuple, dict]:
+    """Returns (fn, example_args (SDS), meta). fn is ready for jit."""
+    rules = make_rules(cfg, mesh, step=shape.step, global_batch=shape.global_batch)
+    model = build_model(cfg, tp=mesh.shape["model"])
+    ins = input_specs(cfg, shape, mesh, rules)
+    meta: dict[str, Any] = {}
+
+    if shape.step == "train":
+        pspec = model.spec
+        params_sds = S.abstract_with_sharding(pspec, mesh, rules)
+        opt_sds = S.abstract_with_sharding(opt_state_spec(model), mesh, rules)
+        step = build_train_step(model, TrainConfig())
+        batch = {k: v for k, v in ins.items()}
+
+        def fn(params, opt_state, batch):
+            with sharding_context(mesh, rules):
+                return step(params, opt_state, batch)
+
+        meta["donate"] = (0, 1)  # params + opt state update in place
+        return fn, (params_sds, opt_sds, batch), meta
+
+    def _dev_shardings(pspec):
+        # device-memory shardings for one offloaded unit (drop stack dim)
+        return tree_map_spec(
+            lambda ts: named_sharding(mesh, rules, ts.shape[1:],
+                                      ts.logical[1:], memory_kind="device"),
+            pspec["blocks"]["offloaded"])
+
+    if shape.step == "prefill":
+        plan = OffloadPlan(pattern_info(cfg)[1], interval)
+        rt = OffloadRuntime(model=model, plan=plan)
+        pspec = rt.spec_split()
+        if plan.enabled:
+            rt = OffloadRuntime(model=model, plan=plan,
+                                device_shardings=_dev_shardings(pspec))
+        params_sds = S.abstract_with_sharding(pspec, mesh, rules,
+                                              offload_memory_kind_fn)
+        meta["offload"] = rt.memory_report()
+
+        def fn(params, inputs):
+            with sharding_context(mesh, rules):
+                return rt.prefill(params, inputs, cache_len=shape.seq_len)
+
+        return fn, (params_sds, ins), meta
+
+    # decode
+    plan = OffloadPlan(pattern_info(cfg)[1], interval)
+    rt = OffloadRuntime(model=model, plan=plan, unroll_decode=unroll_decode)
+    pspec = rt.spec_split()
+    if plan.enabled:
+        rt = OffloadRuntime(model=model, plan=plan,
+                            device_shardings=_dev_shardings(pspec),
+                            unroll_decode=unroll_decode)
+    params_sds = S.abstract_with_sharding(pspec, mesh, rules,
+                                          offload_memory_kind_fn)
+    enc = encoder_len(cfg, shape)
+    cspec = rt.cache_spec_split(shape.global_batch, shape.seq_len, enc)
+    caches_sds = S.abstract_with_sharding(cspec, mesh, rules)
+    meta["offload"] = rt.memory_report()
+    meta["cache_bytes_global"] = S.tree_bytes(
+        rt.model.cache_spec(shape.global_batch, shape.seq_len, enc))
+    enc_pos = ins.get("enc_pos")
+
+    meta["donate"] = (3,)  # in-place KV/state cache update
+
+    def fn(params, tokens, pos, caches, enc_pos=None):
+        with sharding_context(mesh, rules):
+            return rt.decode_step(params, tokens, pos, caches, enc_pos)
+
+    args = (params_sds, ins["tokens"], ins["pos"], caches_sds)
+    if enc_pos is not None:
+        args = args + (enc_pos,)
+    return fn, args, meta
+
+
+def run_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, mesh_name: str,
+             interval: int = NO_OFFLOAD, verbose: bool = True,
+             unroll_decode: bool = False) -> dict:
+    t0 = time.time()
+    res: dict[str, Any] = {
+        "arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+        "interval": None if interval >= NO_OFFLOAD else interval,
+        "unroll_decode": unroll_decode or None,
+    }
+    try:
+        fn, args, meta = build_cell(cfg, shape, mesh, interval, unroll_decode)
+        donate = meta.pop("donate", ())
+        with sharding_context(mesh, make_rules(cfg, mesh, step=shape.step, global_batch=shape.global_batch)):
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_comp = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        ndev = mesh.devices.size
+        # While-aware accounting: XLA's aggregate counts loop bodies once
+        # and charges whole buffers to slice fusions (see hlo_costs.py).
+        hc = hlo_costs.analyze(txt, default_group=ndev)
+        coll = {"bytes": {**{k: int(v) for k, v in
+                             hc.collective_bytes.items()},
+                          "total": int(hc.collective_total)},
+                "count": hc.collective_count}
+
+        res.update({
+            "ok": True,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_comp, 1),
+            "flops_per_device": hc.flops,
+            "bytes_accessed_per_device": hc.hbm_bytes_native,
+            "bytes_accessed_as_compiled": hc.hbm_bytes,
+            "xla_raw": {"flops": ca.get("flops", 0.0),
+                        "bytes_accessed": ca.get("bytes accessed", 0.0)},
+            "collectives": coll,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_bytes": ma.peak_memory_in_bytes,
+            },
+            **meta,
+        })
+        # our own host/device accounting (CPU memory_analysis cannot separate)
+        rules = make_rules(cfg, mesh, step=shape.step, global_batch=shape.global_batch)
+        model = build_model(cfg, tp=mesh.shape["model"])
+        res["param_bytes_global"] = S.tree_bytes(model.spec)
+        res["model_flops_global"] = costs.model_flops(cfg, shape)
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        res.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    res["wall_s"] = round(time.time() - t0, 1)
+    if verbose:
+        stat = "OK " if res.get("ok") else "FAIL"
+        print(f"[{stat}] {cfg.name:24s} {shape.name:12s} {mesh_name:8s} "
+              f"wall={res['wall_s']:7.1f}s "
+              + (f"peak={res['memory']['peak_bytes']/2**30:.2f}GiB "
+                 f"coll={res['collectives']['bytes']['total']/2**30:.2f}GiB"
+                 if res.get("ok") else res["error"][:160]),
+              flush=True)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--offload-interval", type=int, default=0,
+                    help="also lower the offloaded variant at this interval")
+    ap.add_argument("--unroll-decode", action="store_true",
+                    help="unroll decode layer scans (perf experiment A3; "
+                         "measured slower — kept for reproducibility)")
+    ap.add_argument("--out", default="reports/dryrun.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(LM_SHAPES)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2x16x16", make_production_mesh(multi_pod=True)))
+
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            shape = get_shape(shape_name)
+            ok, why = cell_is_runnable(cfg, shape)
+            if not ok:
+                results.append({"arch": arch, "shape": shape_name,
+                                "skipped": why})
+                print(f"[SKIP] {arch:24s} {shape_name:12s} {why}", flush=True)
+                continue
+            for mesh_name, mesh in meshes:
+                results.append(run_cell(cfg, shape, mesh, mesh_name,
+                                        unroll_decode=args.unroll_decode))
+                if args.offload_interval and shape.step != "train":
+                    results.append(run_cell(cfg, shape, mesh, mesh_name,
+                                            interval=args.offload_interval))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_fail = sum(1 for r in results if r.get("ok") is False)
+    n_skip = sum(1 for r in results if "skipped" in r)
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed, {n_skip} skipped "
+          f"-> {args.out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,465 @@
+"""While-loop-aware cost extraction from compiled HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, regardless of
+trip count — a ``lax.scan`` over 64 layers under-reports FLOPs by 64x; its
+"bytes accessed" also counts whole-buffer operands of slice fusions (a
+one-token cache update "accesses" the entire multi-GiB cache). Both make the
+aggregate useless for roofline work on scan-structured models.
+
+This module re-derives the three roofline inputs from ``compiled.as_text()``:
+
+  * ``flops``            — dot/convolution shape math + elementwise counts,
+                            each op weighted by the product of trip counts of
+                            the while loops enclosing it;
+  * ``hbm_bytes``        — per-op operand+result traffic with slice-aware
+                            fusion accounting (a fused dynamic-slice read
+                            counts the slice, not the buffer);
+  * ``collective_bytes`` — per-device wire bytes under ring models
+                            (all-gather (g-1)/g, all-reduce 2(g-1)/g,
+                            reduce-scatter (g-1), all-to-all (g-1)/g,
+                            collective-permute 1), trip-count weighted.
+
+Validated against unrolled-loop ground truth in tests/test_hlo_costs.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import Counter, defaultdict
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(%s)\[([0-9,]*)\]" % "|".join(_DTYPE_BYTES))
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^(?:\([^)]*\)|[\w\[\]\{\},.\- ]+?)\s+([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"\(((?:%[\w\.\-]+(?:,\s*)?)+)\)")
+_CALLS_RE = re.compile(r"calls=(%[\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=(%[\w\.\-]+), body=(%[\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "and", "or", "xor", "not", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "compare", "select", "clamp",
+    "remainder", "atan2", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic",
+}
+_TRANSCENDENTAL = {"exponential", "exponential-minus-one", "log", "log-plus-one",
+                   "tanh", "rsqrt", "sqrt", "cbrt", "logistic", "sine",
+                   "cosine", "tan", "erf", "expm1", "log1p"}
+_ZERO_FLOP = {"copy", "bitcast", "reshape", "transpose", "broadcast", "iota",
+              "constant", "parameter", "get-tuple-element", "tuple", "slice",
+              "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+              "convert", "reduce-precision", "pad", "concatenate", "reverse",
+              "fusion", "while", "conditional", "call", "custom-call",
+              "partition-id", "replica-id", "bitcast-convert", "copy-start",
+              "copy-done", "after-all", "rng-bit-generator", "domain",
+              "optimization-barrier", "infeed", "outfeed", "map", "sort"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result: str          # result type text (before the opcode)
+    operands: list[str]
+    attrs: str           # full remainder of the line (no metadata)
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.split(" metadata={")[0].rstrip()
+        line = re.sub(r"/\*[^*]*\*/", "", line)   # strip /*index=N*/ comments
+        stripped = line.strip()
+        if not stripped:
+            continue
+        # computation header: `%name (args) -> type {` or `ENTRY %name ...`
+        if stripped.endswith("{") and ("(" in stripped) and "= " not in stripped:
+            header = stripped
+            if header.startswith("ENTRY"):
+                header = header[len("ENTRY"):].strip()
+            name = header.split()[0].rstrip("(")
+            name = name.split("(")[0]
+            cur = Computation(name=name, ops=[])
+            comps[name] = cur
+            if header.startswith("ENTRY") or "ENTRY" in raw:
+                comps["__entry__"] = cur
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        om = _OPCODE_RE.match(rest)
+        opcode = om.group(1) if om else ""
+        # result type = text before the opcode token
+        result = rest[: om.start(1)] if om else rest
+        # operands: first (%...) group after the opcode
+        operands: list[str] = []
+        if om:
+            after = rest[om.end(1):]
+            pm = _OPERANDS_RE.match(after)
+            if pm:
+                operands = [o.strip() for o in pm.group(1).split(",")]
+        cur.ops.append(Op(name, opcode, result, operands, rest, line))
+        if "ENTRY" in raw.split("=")[0]:
+            comps["__entry__"] = cur
+    return comps
+
+
+def _entry(comps: dict[str, Computation], hlo: str) -> Computation:
+    if "__entry__" in comps:
+        return comps["__entry__"]
+    m = re.search(r"^ENTRY\s+(%[\w\.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return comps[m.group(1)]
+    raise ValueError("no ENTRY computation found")
+
+
+def _trip_count(cond: Computation, shapes: dict[str, str]) -> int:
+    """Loop bound from the condition: max integer constant referenced."""
+    best = 1
+    for op in cond.ops:
+        for m in _CONST_RE.finditer(op.attrs):
+            best = max(best, int(m.group(1)))
+        for o in op.operands:
+            d = shapes.get(o, "")
+            cm = _CONST_RE.search(d)
+            if cm:
+                best = max(best, int(cm.group(1)))
+    return best
+
+
+def _multipliers(comps: dict[str, Computation], entry: Computation,
+                 defs: dict[str, str]) -> dict[str, float]:
+    """Execution count per computation (product of enclosing trip counts).
+    Fusion/call targets inherit the caller's count; while bodies multiply."""
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    order = [entry.name]
+    seen = {entry.name}
+    while order:
+        cname = order.pop(0)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            wm = _WHILE_RE.search(op.attrs)
+            if op.opcode == "while" and wm:
+                cond_n, body_n = wm.groups()
+                trips = _trip_count(comps[cond_n], defs) if cond_n in comps \
+                    else 1
+                for tgt, f in ((body_n, trips), (cond_n, trips + 1)):
+                    mult[tgt] += m * f
+                    if tgt not in seen:
+                        seen.add(tgt)
+                        order.append(tgt)
+                continue
+            cm = _CALLS_RE.search(op.attrs)
+            if cm:
+                tgt = cm.group(1)
+                mult[tgt] += m
+                if tgt not in seen:
+                    seen.add(tgt)
+                    order.append(tgt)
+            bm = _BRANCHES_RE.search(op.attrs)
+            if bm:
+                for tgt in (t.strip() for t in bm.group(1).split(",")):
+                    mult[tgt] += m
+                    if tgt not in seen:
+                        seen.add(tgt)
+                        order.append(tgt)
+    return dict(mult)
+
+
+def _op_flops(op: Op, defs: dict[str, str]) -> float:
+    if op.opcode in _ZERO_FLOP or not op.opcode:
+        return 0.0
+    elems = _shape_elems(op.result)
+    if op.opcode == "dot":
+        k = 1
+        cm = _CONTRACT_RE.search(op.attrs)
+        if cm and op.operands:
+            lhs_dims = _shape_dims(defs.get(op.operands[0], ""))
+            for idx in (int(x) for x in cm.group(1).split(",") if x):
+                if idx < len(lhs_dims):
+                    k *= lhs_dims[idx]
+        return 2.0 * elems * k
+    if op.opcode == "convolution":
+        # 2 * result * (kernel elems / output features): output feature dim
+        # appears in both kernel and result, divide it out.
+        kern = _shape_elems(defs.get(op.operands[1], "")) if len(op.operands) > 1 else 1
+        rdims = _shape_dims(op.result)
+        out_f = rdims[-1] if rdims else 1
+        return 2.0 * elems * max(kern // max(out_f, 1), 1)
+    if op.opcode == "reduce" or op.opcode == "reduce-window":
+        src = _shape_elems(defs.get(op.operands[0], "")) if op.operands else elems
+        return float(max(src, elems))
+    if op.opcode in _TRANSCENDENTAL or op.opcode in _ELEMENTWISE:
+        return float(elems)
+    if op.opcode in _COLLECTIVES or op.opcode.endswith("-done"):
+        return 0.0
+    return float(elems)   # conservative default for rare ops
+
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+# Size-preserving ops treated as transparent aliases of their first operand
+# when classifying fusion-parameter traffic (on TPU bf16 there is no convert;
+# the XLA-CPU f32 round-trip must not count as a full-buffer read).
+_PASSTHROUGH = {"convert", "bitcast", "copy", "reshape", "transpose",
+                "bitcast-convert", "reduce-precision"}
+
+
+def _fusion_bytes(comp: Computation, defs: dict[str, str],
+                  call_operands: list[str], result_text: str) -> float:
+    """Slice-aware traffic of one fusion execution: params read through
+    slices count the slice size; whole-buffer writes through
+    dynamic-update-slice count the update size."""
+    params = [op for op in comp.ops if op.opcode == "parameter"]
+    param_bytes = {op.name: _shape_bytes(op.result) for op in params}
+    # alias chains: value name -> root parameter (through pass-through ops)
+    alias: dict[str, str] = {p: p for p in param_bytes}
+
+    def root(name: str) -> str | None:
+        return alias.get(name)
+
+    # classify each param: sliced-only or fully read
+    sliced: dict[str, float] = {}
+    fully: set[str] = set()
+    dus_write: float | None = None
+    for op in comp.ops:
+        if op.opcode in _PASSTHROUGH and op.operands:
+            r = root(op.operands[0])
+            if r is not None:
+                alias[op.name] = r
+                continue
+        if op.opcode in ("dynamic-update-slice", "scatter") \
+                and len(op.operands) >= 2:
+            # in-place update: read+write the update window, not the buffer
+            base = root(op.operands[0])
+            upd = op.operands[2] if op.opcode == "scatter" \
+                and len(op.operands) >= 3 else op.operands[1]
+            upd_root = root(upd)
+            ub = (param_bytes.get(upd_root or "", 0)
+                  or _shape_bytes(defs.get(upd, ""))
+                  or _shape_bytes(comp_result(comp, upd)))
+            if upd_root is not None:
+                fully.add(upd_root)
+            if op.opcode == "scatter" and len(op.operands) >= 3:
+                ir = root(op.operands[1])
+                if ir is not None:
+                    fully.add(ir)      # indices are read
+            if base is not None:
+                fully.discard(base)
+                sliced.setdefault(base, 0.0)
+                dus_write = float(ub or 0.0)
+            # index operands are scalars; ignore
+            continue
+        for pos, o in enumerate(op.operands):
+            r = root(o)
+            if r is None:
+                continue
+            if op.opcode in _SLICE_OPS and pos == 0:
+                sliced[r] = sliced.get(r, 0.0) + _shape_bytes(op.result)
+            else:
+                fully.add(r)
+    read = 0.0
+    for p, b in param_bytes.items():
+        if p in fully:
+            read += b
+        elif p in sliced:
+            read += sliced[p]
+        # unused params: 0
+    write = dus_write if dus_write is not None else _shape_bytes(result_text)
+    return read + write
+
+
+def comp_result(comp: Computation, name: str) -> str:
+    for op in comp.ops:
+        if op.name == name:
+            return op.result
+    return ""
+
+
+def _op_bytes(op: Op, defs: dict[str, str],
+              comps: dict[str, Computation]) -> float:
+    if op.opcode in ("parameter", "constant", "get-tuple-element", "tuple",
+                     "bitcast", "while", "conditional", "call",
+                     "after-all", "partition-id", "replica-id", ""):
+        return 0.0
+    if op.opcode in _COLLECTIVES or op.opcode.endswith(("-start", "-done")):
+        return 0.0            # wire traffic accounted separately
+    if op.opcode == "fusion":
+        cm = _CALLS_RE.search(op.attrs)
+        if cm and cm.group(1) in comps:
+            return _fusion_bytes(comps[cm.group(1)], defs, op.operands,
+                                 op.result)
+    res = _shape_bytes(op.result)
+    if op.opcode in _SLICE_OPS:
+        return 2.0 * res      # read slice + write result
+    if op.opcode == "dynamic-update-slice":
+        upd = _shape_bytes(defs.get(op.operands[1], "")) if len(op.operands) > 1 else res
+        return 2.0 * upd      # read update + write region (in-place)
+    if op.opcode == "scatter":
+        upd = _shape_bytes(defs.get(op.operands[2], "")) if len(op.operands) > 2 else res
+        idx = _shape_bytes(defs.get(op.operands[1], "")) if len(op.operands) > 1 else 0
+        return 2.0 * upd + idx
+    ops_b = sum(_shape_bytes(defs.get(o, "")) for o in op.operands)
+    return res + ops_b
+
+
+def _collective_moved(op: Op, defs: dict[str, str], default_group: int) -> tuple[str, float]:
+    kind = op.opcode.replace("-start", "")
+    rb = _shape_bytes(op.result)
+    if op.opcode.endswith("-start"):
+        # result of a start op is a tuple (operand, result[, contexts]);
+        # use the operand sizes instead to avoid double counting
+        rb = sum(_shape_bytes(defs.get(o, "")) for o in op.operands) or rb // 2
+    gm = _GROUPS_RE.search(op.attrs)
+    g = int(gm.group(2)) if gm else default_group
+    g = max(g, 2)
+    if kind == "all-gather":
+        moved = rb * (g - 1) / g
+    elif kind == "all-reduce":
+        moved = 2 * rb * (g - 1) / g
+    elif kind == "reduce-scatter":
+        moved = rb * (g - 1)
+    elif kind == "all-to-all":
+        moved = rb * (g - 1) / g
+    else:                      # collective-permute
+        moved = rb
+    return kind, moved
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    hbm_bytes: float          # as compiled (XLA-CPU f32/layout artifacts in)
+    hbm_bytes_native: float   # excluding pure data-movement artifact ops
+    collective_bytes: dict[str, float]
+    collective_count: dict[str, int]
+    trip_weighted: bool = True
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_ARTIFACT_ONLY = _PASSTHROUGH | {"parameter", "constant", "broadcast",
+                                 "tuple", "get-tuple-element", "iota"}
+
+
+def _is_artifact(op: Op, comps: dict[str, Computation]) -> bool:
+    """Pure data-movement ops a TPU-native lowering would not materialize:
+    top-level copies (donation/layout), and fusions containing only
+    convert/copy/transpose/broadcast chains (the XLA-CPU bf16->f32 round
+    trips and layout normalizations)."""
+    if op.opcode == "copy":
+        return True
+    if op.opcode == "fusion":
+        cm = _CALLS_RE.search(op.attrs)
+        if cm and cm.group(1) in comps:
+            return all(o.opcode in _ARTIFACT_ONLY
+                       for o in comps[cm.group(1)].ops)
+    return False
+
+
+def analyze(hlo: str, default_group: int = 2) -> HloCosts:
+    comps = parse_module(hlo)
+    entry = _entry(comps, hlo)
+    defs: dict[str, str] = {}
+    for comp in comps.values():
+        if comp.name == "__entry__":
+            continue
+        for op in comp.ops:
+            defs[op.name] = op.result if op.opcode != "constant" \
+                else op.result + " " + op.attrs
+    mult = _multipliers({k: v for k, v in comps.items()
+                         if k != "__entry__"}, entry, defs)
+
+    flops = 0.0
+    hbm = 0.0
+    hbm_native = 0.0
+    coll: Counter = Counter()
+    ccount: Counter = Counter()
+    fused_names = set()
+    for comp in comps.values():
+        if comp.name == "__entry__":
+            continue
+        for op in comp.ops:
+            cm = _CALLS_RE.search(op.attrs)
+            if op.opcode == "fusion" and cm:
+                fused_names.add(cm.group(1))
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        inside_fusion = cname in fused_names
+        for op in comp.ops:
+            if not inside_fusion:
+                b = m * _op_bytes(op, defs, comps)
+                hbm += b
+                if not _is_artifact(op, comps):
+                    hbm_native += b
+            flops += m * _op_flops(op, defs)
+            if op.opcode in _COLLECTIVES and not op.opcode.endswith("-done"):
+                kind, moved = _collective_moved(op, defs, default_group)
+                coll[kind] += m * moved
+                ccount[kind] += int(m)
+    return HloCosts(flops=flops, hbm_bytes=hbm, hbm_bytes_native=hbm_native,
+                    collective_bytes=dict(coll),
+                    collective_count=dict(ccount))

@@ -1,0 +1,53 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+no device allocation) for every model input of a (arch × shape) cell."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.frontends import encoder_len, frontend_positions
+from repro.sharding.rules import Rules, named_sharding
+
+
+def _sds(mesh: Mesh, rules: Rules, shape: tuple[int, ...],
+         logical: tuple, dtype) -> jax.ShapeDtypeStruct:
+    s = named_sharding(mesh, rules, shape, logical)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=s)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, rules: Rules
+                ) -> dict[str, Any]:
+    """Step-function inputs for the cell (excl. params/caches, built from the
+    model spec trees)."""
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    out: dict[str, Any] = {}
+
+    if shape.step in ("train", "prefill"):
+        n_front = frontend_positions(cfg, shape)
+        if cfg.encoder_layers > 0:
+            out["enc_embeds"] = _sds(mesh, rules, (b, encoder_len(cfg, shape), d),
+                                     ("batch", None, None), jnp.bfloat16)
+            s_tok = s
+        else:
+            if cfg.frontend is not None:
+                out["frontend_embeds"] = _sds(mesh, rules, (b, n_front, d),
+                                              ("batch", None, None),
+                                              jnp.bfloat16)
+            s_tok = s - (n_front if cfg.family != "audio" else 0)
+        out["tokens"] = _sds(mesh, rules, (b, s_tok), ("batch", None),
+                             jnp.int32)
+        if shape.step == "train":
+            out["labels"] = _sds(mesh, rules, (b, s_tok), ("batch", None),
+                                 jnp.int32)
+    else:  # decode
+        out["tokens"] = _sds(mesh, rules, (b,), ("batch",), jnp.int32)
+        out["pos"] = _sds(mesh, rules, (b,), ("batch",), jnp.int32)
+        if cfg.encoder_layers > 0:
+            out["enc_pos"] = _sds(mesh, rules, (b, encoder_len(cfg, shape)),
+                                  ("batch", None), jnp.int32)
+    return out

@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state. The dry-run forces 512 host devices *before* any
+jax import (see dryrun.py); smoke tests and benches see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods = 512
+    chips (pod, data, model). Nothing binds to pod=2 — the same rules extend
+    to any pod count."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_spec(spec: str):
+    """'16x16' -> (data, model); '2x16x16' -> (pod, data, model);
+    '1x1' -> degenerate single-device mesh for CPU smoke runs."""
+    dims = tuple(int(x) for x in spec.lower().split("x"))
+    if len(dims) == 2:
+        axes = ("data", "model")
+    elif len(dims) == 3:
+        axes = ("pod", "data", "model")
+    else:
+        raise ValueError(f"mesh spec {spec!r}")
+    return jax.make_mesh(dims, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))

@@ -1,0 +1,88 @@
+"""End-to-end serving driver: SLO-aware engine with Select-N offloading.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+        --requests 12 --tpot-slo-ms 60 --hbm-gb 0.05
+
+Builds the offline performance record (the analyzer's two-stage step 1),
+starts an engine, replays a synthetic request stream, and reports SLO
+attainment + throughput. ``--peer`` starts a second engine sharing the host
+link to exercise the per-bus coordinator (step 2).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.reduced import reduce_config
+from repro.core.analyzer import PerformanceAnalyzer
+from repro.core.hardware import PRESETS
+from repro.data.pipeline import DataConfig, request_stream
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.request import Request
+
+
+def build_engine(name: str, cfg, hw, ecfg: EngineConfig,
+                 slo_grid_s, measure: str = "model") -> ServingEngine:
+    model = build_model(cfg)
+    an = PerformanceAnalyzer(cfg, hw, measure=measure)
+    batches = [1, 2, 4, 8, 16, 32, 64, 128]
+    seqs = [16, 32, 64, 128, 256, 512, 1024]
+    batches = [b for b in batches if b <= ecfg.max_batch * 2]
+    seqs = [s for s in seqs if s <= max(ecfg.max_seq * 2, 32)]
+    rec_p = an.generate_record(slo_grid_s, batches, seqs, "prefill")
+    rec_d = an.generate_record(slo_grid_s, batches, seqs, "decode")
+    return ServingEngine(name, model, hw, rec_p, rec_d, an.layer_times, ecfg)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--hw", default="a10", choices=list(PRESETS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--ttft-slo-ms", type=float, default=500.0)
+    ap.add_argument("--tpot-slo-ms", type=float, default=100.0)
+    ap.add_argument("--hbm-gb", type=float, default=0.05)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--peer", action="store_true",
+                    help="second engine on the same host link (coordinator)")
+    args = ap.parse_args(argv)
+
+    cfg = reduce_config(get_config(args.arch))
+    hw = PRESETS[args.hw]
+    ecfg = EngineConfig(max_batch=args.max_batch, max_seq=args.max_seq,
+                        hbm_budget_bytes=args.hbm_gb * 1e9)
+    slos = [0.002 * k for k in range(1, 120)]
+    eng = build_engine("e0", cfg, hw, ecfg, slos)
+    peers = []
+    if args.peer:
+        peers.append(build_engine("e1", cfg, hw, ecfg, slos))
+
+    rng = np.random.default_rng(0)
+    stream = request_stream(DataConfig(seed=0, mean_prompt_len=12,
+                                       mean_output_len=8), args.requests,
+                            ttft_slo_s=args.ttft_slo_ms / 1e3,
+                            tpot_slo_s=args.tpot_slo_ms / 1e3)
+    reqs = [Request(rid=r.rid,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        min(r.prompt_len, args.max_seq // 2)
+                                        ).astype(np.int32),
+                    max_new_tokens=min(r.max_new_tokens, args.max_seq // 4),
+                    ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
+                    arrival_s=r.arrival_s) for r in stream]
+
+    out = eng.run(reqs, peers=peers or None,
+                  link_bw=hw.host_link_bw if peers else None)
+    summary = {k: v for k, v in out.items() if k != "per_request"}
+    summary["final_interval"] = (None if eng.interval >= 10**9
+                                 else eng.interval)
+    print(json.dumps(summary, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

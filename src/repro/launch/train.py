@@ -1,0 +1,113 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --reduced --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ck
+
+On a cluster this runs under one process per host with the production mesh;
+on this container it runs reduced configs on CPU (the same code path:
+sharded data pipeline, remat, AdamW, async checkpoints, watchdog, elastic
+resume).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.configs.reduced import reduce_config
+from repro.data.pipeline import DataConfig, SyntheticTokenStream
+from repro.ft import checkpoint as ckpt
+from repro.ft.watchdog import StepWatchdog, WatchdogConfig
+from repro.launch.mesh import make_mesh_from_spec
+from repro.models import spec as S
+from repro.models.model import build_model
+from repro.sharding.rules import make_rules, sharding_context
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import (TrainConfig, build_train_step,
+                                       init_train_state, opt_state_spec)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--dp-compress", default="none",
+                    choices=["none", "bf16", "int8_ef"])
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    mesh = make_mesh_from_spec(args.mesh)
+    rules = make_rules(cfg, mesh)
+    model = build_model(cfg, tp=mesh.shape.get("model", 1))
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=args.lr, warmup_steps=2,
+                                             total_steps=args.steps),
+                       microbatches=args.microbatches,
+                       dp_compress=args.dp_compress)
+    step_fn = build_train_step(model, tcfg)
+
+    def wrapped(params, opt_state, batch):
+        with sharding_context(mesh, rules):
+            return step_fn(params, opt_state, batch)
+
+    jstep = jax.jit(wrapped, donate_argnums=(0, 1))
+
+    start_step = 0
+    if args.resume and args.ckpt_dir and (ckpt.latest_step(args.ckpt_dir)
+                                          is not None):
+        last = ckpt.latest_step(args.ckpt_dir)
+        target = {"params": S.abstract(model.spec),
+                  "opt": S.abstract(opt_state_spec(model))}
+        restored, extra = ckpt.restore_checkpoint(args.ckpt_dir, last, target)
+        params, opt_state = restored["params"], restored["opt"]
+        start_step = extra.get("step", last)
+        print(f"resumed from step {start_step}")
+    else:
+        params, opt_state = init_train_state(model, jax.random.PRNGKey(0))
+
+    ds = SyntheticTokenStream(cfg, shape, DataConfig(seed=0),
+                              mesh if mesh.devices.size > 1 else None)
+    saver = ckpt.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    wd = StepWatchdog(WatchdogConfig())
+    losses = []
+    for s in range(start_step, args.steps):
+        batch = ds.batch(s)
+        if args.microbatches > 1:
+            batch = jax.tree.map(
+                lambda x: x.reshape(args.microbatches, -1, *x.shape[1:]),
+                batch)
+        wd.start()
+        params, opt_state, metrics = jstep(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = wd.stop()
+        losses.append(loss)
+        print(f"step {s:4d} loss {loss:.4f} lr {float(metrics['lr']):.2e} "
+              f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms",
+              flush=True)
+        if saver and (s + 1) % args.ckpt_every == 0:
+            saver.save(s + 1, {"params": params, "opt": opt_state},
+                       extra={"step": s + 1})
+    if saver:
+        saver.wait()
+    return {"losses": losses, "straggler_events": wd.events}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,616 @@
+"""Layer library: norms, RoPE, attention (3 impls), MLP, MoE, Mamba, xLSTM.
+
+All functions are pure; parameters are dicts of arrays described by TensorSpec
+trees (see spec.py). Activation sharding is expressed through
+``repro.sharding.rules.shard`` logical constraints, so the same code runs on a
+single CPU device (constraints no-op) and on the production mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MambaConfig, XLSTMConfig
+from repro.models.spec import TensorSpec
+from repro.sharding.rules import shard
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_spec(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": TensorSpec((d,), (None,), init="ones"),
+                "bias": TensorSpec((d,), (None,), init="zeros")}
+    return {"scale": TensorSpec((d,), (None,), init="ones")}
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int32)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., seq, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attn_spec(cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    spec: Params = {
+        "wq": TensorSpec((d, h, hd), ("fsdp", "heads", "head_dim")),
+        "wk": TensorSpec((d, kv, hd), ("fsdp", "kv", "head_dim")),
+        "wv": TensorSpec((d, kv, hd), ("fsdp", "kv", "head_dim")),
+        "wo": TensorSpec((h, hd, d), ("heads", "head_dim", "fsdp"),
+                         fan_in_axes=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = TensorSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = TensorSpec((kv, hd), ("kv", "head_dim"), init="zeros")
+        spec["bv"] = TensorSpec((kv, hd), ("kv", "head_dim"), init="zeros")
+    return spec
+
+
+def _expand_kv(x: jax.Array, virtual: int) -> jax.Array:
+    """[..., kv, hd] -> [..., virtual, hd] by repetition (vLLM-style)."""
+    kv = x.shape[-2]
+    if virtual == kv:
+        return x
+    reps = virtual // kv
+    return jnp.repeat(x, reps, axis=-2)
+
+
+def qkv_project(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+                virtual_kv: int):
+    """x: [B, S, D] -> q [B,S,H,hd], k/v [B,S,V,hd] (virtual heads, roped)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k = _expand_kv(k, virtual_kv)
+    v = _expand_kv(v, virtual_kv)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv", None)
+    v = shard(v, "batch", None, "kv", None)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, window: int, cross: bool) -> jax.Array:
+    """Additive mask bias: 0 where visible, -inf where masked.
+
+    q_pos: [..., Sq], k_pos: [..., Sk] (absolute positions; -1 = invalid slot).
+    """
+    valid = k_pos[..., None, :] >= 0
+    if not cross:
+        causal = k_pos[..., None, :] <= q_pos[..., None]
+        valid = valid & causal
+        if window > 0:
+            valid = valid & (q_pos[..., None] - k_pos[..., None, :] < window)
+    return jnp.where(valid, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attn_reference(cfg: ModelConfig, q, k, v, q_pos, k_pos,
+                   window: int = 0, cross: bool = False) -> jax.Array:
+    """Dense softmax attention (oracle / small shapes).
+
+    q: [B,Sq,H,hd], k/v: [B,Sk,V,hd] with V | H.
+    """
+    b, sq, h, hd = q.shape
+    vheads = k.shape[2]
+    g = h // vheads
+    qf = q.reshape(b, sq, vheads, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqvgk,bsvk->bvgqs", qf, kf) / math.sqrt(hd)
+    s = s + _mask_bias(q_pos, k_pos, window, cross)[:, None, None]
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bvgqs,bsvk->bqvgk", pr, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attn_chunked(cfg: ModelConfig, q, k, v, q_pos, k_pos,
+                 window: int = 0, cross: bool = False,
+                 chunk: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention, scanning KV in chunks.
+
+    Linear memory in Sk; this is the jnp analogue of the Pallas kernel and the
+    impl used at dry-run scale (32k/500k sequences).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    vheads = k.shape[2]
+    g = h // vheads
+    chunk = min(chunk, sk)
+    nc = (sk + chunk - 1) // chunk
+    pad = nc * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    qf = (q.reshape(b, sq, vheads, g, hd) / math.sqrt(hd))
+
+    kc = k.reshape(b, nc, chunk, vheads, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, vheads, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    m0 = jnp.full((b, vheads, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, vheads, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, vheads, g, sq, hd), jnp.float32)
+
+    def body(carry, ck):
+        m, l, acc = carry
+        k_i, v_i, kp_i = ck
+        s = jnp.einsum("bqvgk,bsvk->bvgqs", qf, k_i,
+                       preferred_element_type=jnp.float32)
+        s = s + _mask_bias(q_pos, kp_i, window, cross)[:, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        pexp = jnp.exp(s - m_safe[..., None])
+        scale = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        l = l * scale + jnp.sum(pexp, axis=-1)
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bvgqs,bsvk->bvgqk", pexp, v_i.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attn_out(cfg: ModelConfig, p: Params, o: jax.Array) -> jax.Array:
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return shard(y, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def mlp_spec(cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    spec = {
+        "w1": TensorSpec((d, f), ("fsdp", "mlp")),
+        "w2": TensorSpec((f, d), ("mlp", "fsdp")),
+    }
+    if cfg.gated_mlp:
+        spec["w3"] = TensorSpec((d, f), ("fsdp", "mlp"))
+    return spec
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    act = _ACTS[cfg.act]
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    if cfg.gated_mlp:
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    h = shard(h, "batch", None, "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    return shard(y, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, per-row capacity dispatch; EP when experts divide
+# the model axis, expert-TP otherwise — the rules engine decides)
+# ---------------------------------------------------------------------------
+
+
+def moe_spec(cfg: ModelConfig) -> Params:
+    assert cfg.moe is not None
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    spec = {
+        "router": TensorSpec((d, e), ("fsdp", None)),
+        "w1": TensorSpec((e, d, f), ("experts", "fsdp", "expert_mlp"), fan_in_axes=(1,)),
+        "w2": TensorSpec((e, f, d), ("experts", "expert_mlp", "fsdp"), fan_in_axes=(1,)),
+    }
+    if cfg.gated_mlp:
+        spec["w3"] = TensorSpec((e, d, f), ("experts", "fsdp", "expert_mlp"),
+                                fan_in_axes=(1,))
+    return spec
+
+
+def moe_capacity(cfg: ModelConfig, seq: int) -> int:
+    m = cfg.moe
+    assert m is not None
+    return max(1, int(math.ceil(seq * m.top_k / m.num_experts * m.capacity_factor)))
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jax.Array):
+    """x: [B, S, D]. Dispatch is per batch row so the sort/scatter stays local
+    to the data shard (no cross-device gather of activations).
+
+    Returns (y, aux_loss).
+    """
+    m = cfg.moe
+    assert m is not None
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    cap = moe_capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [B,S,E] f32
+    top_p, top_i = jax.lax.top_k(probs, k)   # [B,S,k]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch-style), per batch row then averaged.
+    me = jnp.mean(probs, axis=1)                                   # [B,E]
+    ce = jnp.mean(jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32), axis=1)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * e
+
+    def dispatch_row(xr, ir, pr):
+        # xr: [S,D], ir: [S,k] expert ids, pr: [S,k] weights
+        flat_e = ir.reshape(-1)                      # [S*k]
+        order = jnp.argsort(flat_e)                  # stable sort by expert
+        sorted_e = flat_e[order]
+        tok = order // k
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+        pos_in_e = jnp.arange(s * k) - seg_start[sorted_e]
+        keep = pos_in_e < cap
+        dest = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)
+        xe = jnp.zeros((e * cap + 1, d), xr.dtype).at[dest].set(xr[tok])
+        return xe[:-1].reshape(e, cap, d), (order, tok, dest, keep)
+
+    xe, (order, tok, dest, keep) = jax.vmap(dispatch_row)(x, top_i, top_p)
+    # "moe_batch" == "batch" for train/prefill; replicated at decode so the
+    # 2D-sharded expert weights stay put and only tokens move (§Perf A).
+    xe = shard(xe, "moe_batch", "experts", None, None)
+
+    act = _ACTS[cfg.act]
+    h = act(jnp.einsum("becd,edf->becf", xe, p["w1"]))
+    if cfg.gated_mlp:
+        h = h * jnp.einsum("becd,edf->becf", xe, p["w3"])
+    h = shard(h, "moe_batch", "experts", None, "expert_mlp")
+    ye = jnp.einsum("becf,efd->becd", h, p["w2"])
+    ye = shard(ye, "moe_batch", "experts", None, None)
+
+    def combine_row(ye_r, xr, order_r, tok_r, dest_r, keep_r, pr):
+        yflat = jnp.concatenate(
+            [ye_r.reshape(e * cap, d), jnp.zeros((1, d), ye_r.dtype)], axis=0)
+        w = pr.reshape(-1)[order_r] * keep_r.astype(pr.dtype)
+        contrib = yflat[dest_r] * w[:, None].astype(ye_r.dtype)
+        return jnp.zeros((s, d), ye_r.dtype).at[tok_r].add(contrib)
+
+    y = jax.vmap(combine_row)(ye, x, order, tok, dest, keep, top_p)
+    return shard(y, "batch", None, None), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, Mamba-1 style with chunked parallel scan)
+# ---------------------------------------------------------------------------
+
+
+def _mamba_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    mc = cfg.mamba or MambaConfig()
+    di = mc.expand * cfg.d_model
+    dtr = max(1, cfg.d_model // 16)
+    return di, mc.d_state, mc.d_conv, dtr
+
+
+def mamba_spec(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di, ds, dc, dtr = _mamba_dims(cfg)
+    return {
+        "w_in": TensorSpec((d, 2 * di), ("fsdp", "mlp")),
+        "conv_w": TensorSpec((dc, di), ("conv", "mlp")),
+        "conv_b": TensorSpec((di,), ("mlp",), init="zeros"),
+        "w_x": TensorSpec((di, dtr + 2 * ds), ("mlp", None)),
+        "w_dt": TensorSpec((dtr, di), (None, "mlp")),
+        "dt_bias": TensorSpec((di,), ("mlp",), init="zeros"),
+        "a_log": TensorSpec((di, ds), ("mlp", None), init="zeros"),
+        "d_skip": TensorSpec((di,), ("mlp",), init="ones"),
+        "w_out": TensorSpec((di, d), ("mlp", "fsdp")),
+    }
+
+
+def _mamba_gates(cfg: ModelConfig, p: Params, xz: jax.Array, conv_state=None):
+    """Shared projection math. xz: [B,S,D] input (pre in-proj)."""
+    di, ds, dc, dtr = _mamba_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", xz, p["w_in"])
+    x_in, z = jnp.split(proj, 2, axis=-1)  # [B,S,di]
+    return x_in, z
+
+
+def _causal_conv(x_in: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None):
+    """Depthwise causal conv. x_in [B,S,di], w [dc,di]. state [B,dc-1,di]."""
+    dc = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x_in.shape[0], dc - 1, x_in.shape[2]), x_in.dtype)
+    else:
+        pad = state.astype(x_in.dtype)
+    xp = jnp.concatenate([pad, x_in], axis=1)  # [B, S+dc-1, di]
+    out = sum(xp[:, i:i + x_in.shape[1], :] * w[i] for i in range(dc))
+    new_state = xp[:, -(dc - 1):, :] if dc > 1 else pad[:, :0]
+    return out + b, new_state
+
+
+def apply_mamba_seq(cfg: ModelConfig, p: Params, x: jax.Array,
+                    chunk: int = 32):
+    """Full-sequence selective scan (train/prefill). Returns (y, final_state).
+
+    Chunked: within a chunk, an associative scan materializes h per position
+    ([B,Q,di,ds] — the HBM-traffic hot spot the Pallas kernel removes);
+    across chunks a lax.scan carries h.
+    """
+    b, s, d = x.shape
+    di, ds, dc, dtr = _mamba_dims(cfg)
+    x_in, z = _mamba_gates(cfg, p, x)
+    x_conv, conv_state = _causal_conv(x_in, p["conv_w"], p["conv_b"], None)
+    x_conv = jax.nn.silu(x_conv)
+    xdb = jnp.einsum("bsi,ie->bse", x_conv, p["w_x"])
+    dt_raw, bmat, cmat = jnp.split(xdb, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_raw, p["w_dt"])
+                         + p["dt_bias"]).astype(jnp.float32)      # [B,S,di]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                   # [di,ds]
+    u = (dt * x_conv.astype(jnp.float32))                          # [B,S,di]
+
+    chunk = min(chunk, s)
+    nc = (s + chunk - 1) // chunk
+    pad = nc * chunk - s
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+
+    dt_c = dt.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)
+    u_c = u.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)
+    b_c = bmat.reshape(b, nc, chunk, ds).transpose(1, 0, 2, 3).astype(jnp.float32)
+    c_c = cmat.reshape(b, nc, chunk, ds).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+
+    def chunk_body(h, ck):
+        dt_i, u_i, b_i, c_i = ck                      # [B,Q,di] / [B,Q,ds]
+        decay = jnp.exp(dt_i[..., None] * a)          # [B,Q,di,ds]
+        inp = (u_i[..., None] * b_i[:, :, None, :])   # [B,Q,di,ds]
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, b1 * a2 + b2
+
+        dec_cum, h_all = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+        h_all = h_all + dec_cum * h[:, None]          # include carry-in
+        y_i = jnp.einsum("bqis,bqs->bqi", h_all, c_i)
+        return h_all[:, -1], y_i
+
+    hN, y = jax.lax.scan(chunk_body, h0, (dt_c, u_c, b_c, c_c))
+    y = y.transpose(1, 0, 2, 3).reshape(b, nc * chunk, di)[:, :s]
+    y = y + p["d_skip"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return shard(out, "batch", None, None), {"conv": conv_state, "ssm": hN}
+
+
+def apply_mamba_decode(cfg: ModelConfig, p: Params, x: jax.Array, cache: Params):
+    """Single-token step. x: [B,1,D]; cache {conv [B,dc-1,di], ssm [B,di,ds]}."""
+    b, _, d = x.shape
+    di, ds, dc, dtr = _mamba_dims(cfg)
+    x_in, z = _mamba_gates(cfg, p, x)
+    x_conv, conv_state = _causal_conv(x_in, p["conv_w"], p["conv_b"],
+                                      cache["conv"])
+    x_conv = jax.nn.silu(x_conv)
+    xdb = jnp.einsum("bsi,ie->bse", x_conv, p["w_x"])
+    dt_raw, bmat, cmat = jnp.split(xdb, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_raw, p["w_dt"])
+                         + p["dt_bias"]).astype(jnp.float32)[:, 0]   # [B,di]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[..., None] * a)                              # [B,di,ds]
+    u = dt * x_conv[:, 0].astype(jnp.float32)                       # [B,di]
+    h = cache["ssm"] * decay + u[..., None] * bmat[:, 0, None, :].astype(jnp.float32)
+    y = jnp.einsum("bis,bs->bi", h, cmat[:, 0].astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32) * x_conv[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, p["w_out"])[:, None]
+    return shard(out, "batch", None, None), {"conv": conv_state, "ssm": h}
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int) -> Params:
+    di, ds, dc, _ = _mamba_dims(cfg)
+    return {
+        "conv": TensorSpec((batch, dc - 1, di), ("batch", None, "mlp"),
+                           dtype=jnp.bfloat16, init="zeros"),
+        "ssm": TensorSpec((batch, di, ds), ("batch", "mlp", None),
+                          dtype=jnp.float32, init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) + sLSTM (scalar memory), sequential scans.
+# 125M-scale arch; sequential recurrence compiles compactly (lax.scan).
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg: ModelConfig) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    xc = cfg.xlstm or XLSTMConfig()
+    di = int(xc.proj_factor_mlstm * d)
+    dh = di // h
+    return {
+        "w_up": TensorSpec((d, 2 * di), ("fsdp", "mlp")),
+        "wq": TensorSpec((di, h, dh), ("mlp", "heads", None)),
+        "wk": TensorSpec((di, h, dh), ("mlp", "heads", None)),
+        "wv": TensorSpec((di, h, dh), ("mlp", "heads", None)),
+        "w_gates": TensorSpec((di, 2 * h), ("mlp", None)),  # i, f pre-acts
+        "w_down": TensorSpec((di, d), ("mlp", "fsdp")),
+    }
+
+
+def _mlstm_step(q, k, v, i_pre, f_pre, state):
+    """One mLSTM step (stabilized exponential gating).
+
+    q/k/v: [B,H,dh]; i_pre/f_pre: [B,H]; state: dict(C [B,H,dh,dh],
+    n [B,H,dh], m [B,H]).
+    """
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    fgate = jnp.exp(logf + state["m"] - m_new)
+    igate = jnp.exp(i_pre - m_new)
+    c = state["C"] * fgate[..., None, None] + \
+        igate[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = state["n"] * fgate[..., None] + igate[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    return num / den[..., None], {"C": c, "n": n, "m": m_new}
+
+
+def apply_mlstm_seq(cfg: ModelConfig, p: Params, x: jax.Array):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    xc = cfg.xlstm or XLSTMConfig()
+    di = int(xc.proj_factor_mlstm * d)
+    dh = di // h
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsi,ihk->bshk", xi, p["wq"]).astype(jnp.float32)
+    k = (jnp.einsum("bsi,ihk->bshk", xi, p["wk"]) / math.sqrt(dh)).astype(jnp.float32)
+    v = jnp.einsum("bsi,ihk->bshk", xi, p["wv"]).astype(jnp.float32)
+    gates = jnp.einsum("bsi,ig->bsg", xi, p["w_gates"]).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)  # [B,S,H]
+
+    state = {
+        "C": jnp.zeros((b, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((b, h, dh), jnp.float32),
+        "m": jnp.zeros((b, h), jnp.float32),
+    }
+
+    def body(st, xs):
+        qt, kt, vt, it, ft = xs
+        yt, st = _mlstm_step(qt, kt, vt, it, ft, st)
+        return st, yt
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(body, state, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["w_down"]), state
+
+
+def apply_mlstm_decode(cfg: ModelConfig, p: Params, x: jax.Array, cache: Params):
+    b, _, d = x.shape
+    h = cfg.num_heads
+    xc = cfg.xlstm or XLSTMConfig()
+    di = int(xc.proj_factor_mlstm * d)
+    dh = di // h
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bi,ihk->bhk", xi[:, 0], p["wq"]).astype(jnp.float32)
+    k = (jnp.einsum("bi,ihk->bhk", xi[:, 0], p["wk"]) / math.sqrt(dh)).astype(jnp.float32)
+    v = jnp.einsum("bi,ihk->bhk", xi[:, 0], p["wv"]).astype(jnp.float32)
+    gates = jnp.einsum("bi,ig->bg", xi[:, 0], p["w_gates"]).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+    y, state = _mlstm_step(q, k, v, i_pre, f_pre, cache)
+    y = y.reshape(b, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["w_down"]), state
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int) -> Params:
+    h = cfg.num_heads
+    xc = cfg.xlstm or XLSTMConfig()
+    di = int(xc.proj_factor_mlstm * cfg.d_model)
+    dh = di // h
+    f32 = jnp.float32
+    return {
+        "C": TensorSpec((batch, h, dh, dh), ("batch", "heads", None, None),
+                        dtype=f32, init="zeros"),
+        "n": TensorSpec((batch, h, dh), ("batch", "heads", None),
+                        dtype=f32, init="zeros"),
+        "m": TensorSpec((batch, h), ("batch", "heads"), dtype=f32, init="zeros"),
+    }
+
+
+def slstm_spec(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    return {
+        "w_x": TensorSpec((d, 4 * d), ("fsdp", "mlp")),   # i,f,z,o from input
+        "w_h": TensorSpec((d, 4 * d), (None, "mlp")),     # recurrent
+        "b": TensorSpec((4 * d,), ("mlp",), init="zeros"),
+    }
+
+
+def _slstm_step(pre, state):
+    """pre: [B,4D] (input contribution); state: c,n,h,m each [B,D]."""
+    d = state["c"].shape[-1]
+    it, ft, zt, ot = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + state["m"], it)
+    ig = jnp.exp(it - m_new)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    c = fg * state["c"] + ig * jnp.tanh(zt)
+    n = fg * state["n"] + ig
+    hh = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return hh, {"c": c, "n": n, "h": hh, "m": m_new}
+
+
+def apply_slstm_seq(cfg: ModelConfig, p: Params, x: jax.Array):
+    b, s, d = x.shape
+    xpre = jnp.einsum("bsd,de->bse", x, p["w_x"]) + p["b"]
+
+    state = {k: jnp.zeros((b, d), jnp.float32) for k in ("c", "n", "h", "m")}
+
+    def body(st, xp):
+        pre = xp.astype(jnp.float32) + jnp.einsum(
+            "bd,de->be", st["h"], p["w_h"].astype(jnp.float32))
+        hh, st = _slstm_step(pre, st)
+        return st, hh
+
+    state, ys = jax.lax.scan(body, state, xpre.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2).astype(x.dtype), state
+
+
+def apply_slstm_decode(cfg: ModelConfig, p: Params, x: jax.Array, cache: Params):
+    xpre = jnp.einsum("bd,de->be", x[:, 0], p["w_x"]) + p["b"]
+    pre = xpre.astype(jnp.float32) + jnp.einsum(
+        "bd,de->be", cache["h"], p["w_h"].astype(jnp.float32))
+    hh, state = _slstm_step(pre, cache)
+    return hh[:, None].astype(x.dtype), state
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int) -> Params:
+    d = cfg.d_model
+    return {k: TensorSpec((batch, d), ("batch", None), dtype=jnp.float32,
+                          init="zeros") for k in ("c", "n", "h", "m")}

@@ -1,0 +1,140 @@
+"""Model facade: build_model(cfg) -> Model with init / loss / prefill / decode.
+
+The decode path (``decode_step``) is what Select-N wraps: its parameter tree
+is re-grouped by the offload plan (core/memory_manager.py) while the math here
+stays unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import spec as S
+from repro.models import transformer as T
+from repro.sharding.rules import virtual_kv_heads
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    tp: int  # model-axis size the activation layout targets
+
+    # ---- specs ------------------------------------------------------------
+    @functools.cached_property
+    def spec(self) -> Params:
+        return T.model_spec(self.cfg)
+
+    @property
+    def virtual_kv(self) -> int:
+        return virtual_kv_heads(self.cfg, self.tp)
+
+    def cache_spec(self, batch: int, cache_len: int, enc_len: int = 0):
+        return T.cache_spec(self.cfg, batch, cache_len, self.virtual_kv,
+                            enc_len)
+
+    # ---- materialization ----------------------------------------------------
+    def init(self, key: jax.Array) -> Params:
+        return S.initialize(self.spec, key)
+
+    def init_cache(self, key: jax.Array, batch: int, cache_len: int,
+                   enc_len: int = 0) -> Any:
+        return S.initialize(self.cache_spec(batch, cache_len, enc_len), key)
+
+    # ---- encoder ------------------------------------------------------------
+    def encode(self, params: Params, enc_embeds: jax.Array,
+               attn_impl: str = "chunked"):
+        """Encoder forward (seamless). enc_embeds: [B, S_enc, D]."""
+        cfg = self.cfg
+        b, s, _ = enc_embeds.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        ctx = T.SeqCtx(positions=pos, virtual_kv=self.virtual_kv,
+                       attn_impl=attn_impl)
+        enc = params["encoder"]
+        x, _, _ = T.apply_stack_seq(
+            cfg, enc["blocks"], enc_embeds.astype(jnp.bfloat16), ctx,
+            pattern=(T.BlockSpec(mixer="attention", mlp="dense"),))
+        x = L.apply_norm(cfg, enc["final_norm"], x)
+        return x, pos
+
+    # ---- full-sequence forward ----------------------------------------------
+    def forward(self, params: Params, inputs: dict, *, want_cache: bool = False,
+                cache_len: int = 0, attn_impl: str = "chunked",
+                remat: bool = False):
+        """Returns (hidden [B,S,D], caches_or_None, aux, enc_pos_or_None).
+
+        inputs: {"tokens": [B,S_tok]} (+"frontend_embeds" [B,S_f,D] for vlm,
+        +"enc_embeds" [B,S_enc,D] for enc-dec audio).
+        """
+        cfg = self.cfg
+        enc_out = enc_pos = None
+        if cfg.encoder_layers > 0:
+            enc_out, enc_pos = self.encode(params, inputs["enc_embeds"],
+                                           attn_impl)
+
+        x = T.embed_tokens(cfg, params, inputs["tokens"])
+        if cfg.frontend is not None and cfg.family != "audio":
+            fe = inputs["frontend_embeds"].astype(x.dtype)
+            x = jnp.concatenate([fe, x], axis=1)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        ctx = T.SeqCtx(positions=pos, want_cache=want_cache,
+                       cache_len=cache_len or s, virtual_kv=self.virtual_kv,
+                       enc_out=enc_out, enc_pos=enc_pos, attn_impl=attn_impl)
+        x, caches, aux = T.apply_stack_seq(cfg, params["blocks"], x, ctx,
+                                           remat=remat)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        return x, caches, aux, enc_pos
+
+    # ---- losses ---------------------------------------------------------------
+    def loss_fn(self, params: Params, batch: dict, *, remat: bool = True,
+                attn_impl: str = "chunked"):
+        """batch: {"tokens" [B,S], "labels" [B,S], (+frontend/enc inputs)}."""
+        cfg = self.cfg
+        hidden, _, aux, _ = self.forward(params, batch, attn_impl=attn_impl,
+                                         remat=remat)
+        n_front = 0
+        if cfg.frontend is not None and cfg.family != "audio":
+            n_front = batch["frontend_embeds"].shape[1]
+            hidden = hidden[:, n_front:]
+        # NOTE: xent_loss_chunked exists as an alternative for big-vocab
+        # archs but is NOT wired in: measured on the compiled artifact it
+        # moved no HBM traffic (post-B2 the logits are ~2% of the memory
+        # term; attention scores dominate) and its per-chunk head re-reads
+        # added collective traffic. Recorded as refuted in §Perf B4.
+        logits = T.lm_logits(cfg, params, hidden)
+        loss = T.xent_loss(cfg, logits, batch["labels"])
+        return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+    # ---- serving steps ---------------------------------------------------------
+    def prefill(self, params: Params, inputs: dict, cache_len: int,
+                attn_impl: str = "chunked"):
+        """Returns (last-token logits [B,V], caches, enc_pos)."""
+        cfg = self.cfg
+        hidden, caches, _, enc_pos = self.forward(
+            params, inputs, want_cache=True, cache_len=cache_len,
+            attn_impl=attn_impl)
+        logits = T.lm_logits(cfg, params, hidden[:, -1:])[:, 0]
+        return logits, caches, enc_pos
+
+    def decode_step(self, params: Params, tokens: jax.Array, pos: jax.Array,
+                    caches: Any, enc_pos: jax.Array | None = None):
+        """One token for every row. tokens/pos: [B]. Returns (logits, caches)."""
+        cfg = self.cfg
+        x = T.embed_tokens(cfg, params, tokens[:, None])
+        x, new_caches = T.apply_stack_decode(
+            cfg, params["blocks"], x, pos, caches, self.virtual_kv, enc_pos)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = T.lm_logits(cfg, params, x)[:, 0]
+        return logits, new_caches
+
+
+def build_model(cfg: ModelConfig, tp: int = 1) -> Model:
+    return Model(cfg=cfg, tp=tp)

@@ -1,0 +1,326 @@
+"""SLO-aware serving engine with continuous batching and Select-N offloading.
+
+One engine = one model instance (one TP group on real hardware). Per
+iteration it: admits queued requests whose SLO is feasible (performance
+record + memory bound, §4.2's admission check), prefills them into free
+batch slots, runs one decode step for all active slots, and advances a
+*modeled* clock (LayerTimes under the current offload plan — token flow is
+real JAX compute; SLO timing is the deterministic analytic schedule, which on
+a real TPU host would be wall clock).
+
+The offloading interval is re-evaluated every iteration through the per-bus
+coordinator when the engine shares a link with peers (§4.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import costs
+from repro.core.coordinator import (InstanceState, coordinate,
+                                    max_interval_for_memory)
+from repro.core.hardware import HardwareModel
+from repro.core.interval import (LayerTimes, NO_OFFLOAD, OffloadPlan,
+                                 iter_time_with_interval)
+from repro.core.memory_manager import (OffloadRuntime, split_model_params,
+                                       split_stacked)
+from repro.core.record import PerformanceRecord
+from repro.models.model import Model
+from repro.models.transformer import pattern_info
+from repro.serving.kv_cache import PageConfig, PagedKVAllocator
+from repro.serving.request import Request, State
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_seq: int = 64
+    hbm_budget_bytes: float = 16e9
+    page_size: int = 16
+    greedy: bool = True          # greedy sampling
+
+
+class ServingEngine:
+    def __init__(self, name: str, model: Model, hw: HardwareModel,
+                 rec_prefill: PerformanceRecord, rec_decode: PerformanceRecord,
+                 times_fn: Callable[[int, int, str], LayerTimes],
+                 ecfg: EngineConfig = EngineConfig()):
+        self.name = name
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.hw = hw
+        self.rec = {"prefill": rec_prefill, "decode": rec_decode}
+        self.times_fn = times_fn
+        self.ecfg = ecfg
+        _, self.num_units = pattern_info(self.cfg)
+        self.unit_bytes = costs.unit_weight_bytes(self.cfg)
+
+        self.params = model.init(jax.random.PRNGKey(0))
+        self.clock_s = 0.0
+        self.interval = NO_OFFLOAD
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.rejected: list[Request] = []
+
+        # slot state
+        b = ecfg.max_batch
+        self.slot_req: list[Request | None] = [None] * b
+        self.tokens = np.zeros((b,), np.int32)
+        self.pos = np.zeros((b,), np.int32)
+        self.active = np.zeros((b,), bool)
+
+        kv_tok = max(costs.kv_cache_bytes(self.cfg, 1, 1,
+                                          self.model.virtual_kv), 1)
+        weight_free = (ecfg.hbm_budget_bytes
+                       - OffloadPlan(self.num_units, NO_OFFLOAD)
+                       .device_bytes(self.unit_bytes))
+        self.allocator = PagedKVAllocator(
+            max(int(weight_free), 0),
+            PageConfig(ecfg.page_size, bytes_per_token=kv_tok))
+
+        self._runtime: dict[int, OffloadRuntime] = {}
+        self._jit_decode: dict[int, Any] = {}
+        self._jit_prefill: dict[int, Any] = {}
+        self._params_split: dict[int, Any] = {}
+        self._caches: Any = None          # split layout for current interval
+
+    # ------------------------------------------------------------------ plan --
+    def _plan(self, interval: int) -> OffloadPlan:
+        return OffloadPlan(self.num_units, interval)
+
+    def set_interval(self, interval: int) -> None:
+        """Apply a (possibly new) offloading interval before the next
+        iteration (coordinator output). Re-splits params/caches lazily."""
+        if interval == self.interval:
+            return
+        old_rt = self._runtime.get(self.interval)
+        if self._caches is not None and old_rt is not None:
+            from repro.core.memory_manager import merge_model_params
+            merged = merge_model_params({"blocks": self._caches},
+                                        old_rt.plan)["blocks"]
+            self._caches = split_stacked(merged, self._plan(interval))
+        self.interval = interval
+        # re-account KV budget: resident bytes changed
+        kv_tok = max(costs.kv_cache_bytes(self.cfg, 1, 1,
+                                          self.model.virtual_kv), 1)
+        weight_free = (self.ecfg.hbm_budget_bytes
+                       - self._plan(interval).device_bytes(self.unit_bytes))
+        used = {rid: pages for rid, pages in self.allocator._by_req.items()}
+        self.allocator = PagedKVAllocator(
+            max(int(weight_free), 0), PageConfig(self.ecfg.page_size, kv_tok))
+        for rid, pages in used.items():
+            self.allocator._by_req[rid] = [
+                self.allocator._free.pop() for _ in pages
+                if self.allocator._free]
+
+    def _rt(self, interval: int) -> OffloadRuntime:
+        if interval not in self._runtime:
+            rt = OffloadRuntime(model=self.model, plan=self._plan(interval))
+            self._runtime[interval] = rt
+            self._params_split[interval] = split_model_params(
+                self.params, rt.plan)
+            self._jit_decode[interval] = jax.jit(rt.decode_step)
+        return self._runtime[interval]
+
+    # ------------------------------------------------------------ admission --
+    def instance_state(self, idle: bool | None = None) -> InstanceState:
+        waiting = self.queue[0] if self.queue else None
+        if waiting is not None:
+            seq = waiting.prompt_len + waiting.max_new_tokens
+            min_i = self.rec["decode"].lookup(waiting.tpot_slo_s,
+                                              self._active_batch() + 1, seq)
+        else:
+            min_i = self.interval if self.interval < NO_OFFLOAD else 1
+        times = self.times_fn(max(self._active_batch(), 1),
+                              self.ecfg.max_seq, "decode")
+        max_i = max_interval_for_memory(
+            self.num_units, self.unit_bytes,
+            self.ecfg.hbm_budget_bytes
+            - self.allocator.used_pages * self.allocator.page_bytes)
+        return InstanceState(
+            name=self.name, num_units=self.num_units,
+            unit_bytes=self.unit_bytes,
+            t_iter_s=iter_time_with_interval(
+                times, self.interval if self.interval else NO_OFFLOAD),
+            min_interval=min_i, max_interval=max_i,
+            idle=idle if idle is not None else self._active_batch() == 0
+            and not self.queue)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _active_batch(self) -> int:
+        return int(self.active.sum())
+
+    def _admit(self) -> None:
+        while self.queue:
+            req = self.queue[0]
+            free_slots = [i for i in range(self.ecfg.max_batch)
+                          if not self.active[i]]
+            if not free_slots:
+                return
+            total = req.prompt_len + req.max_new_tokens
+            if total > self.ecfg.max_seq:
+                req.state = State.REJECTED
+                req.reject_reason = "exceeds max_seq"
+                self.rejected.append(self.queue.pop(0))
+                continue
+            # SLO feasibility (paper: pass back to upper scheduler if not)
+            min_i = self.rec["decode"].lookup(
+                req.tpot_slo_s, self._active_batch() + 1, total)
+            max_i = max_interval_for_memory(
+                self.num_units, self.unit_bytes,
+                self.ecfg.hbm_budget_bytes
+                - self.allocator.used_pages * self.allocator.page_bytes)
+            if min_i > max_i:
+                req.state = State.REJECTED
+                req.reject_reason = (f"SLO infeasible: min interval {min_i} > "
+                                     f"max {max_i}")
+                self.rejected.append(self.queue.pop(0))
+                continue
+            if self.allocator.alloc(req.rid, total) is None:
+                return  # wait for memory
+            self.queue.pop(0)
+            self._prefill_into_slot(req, free_slots[0],
+                                    max(min_i, self.interval
+                                        if self.interval < NO_OFFLOAD else min_i))
+
+    # -------------------------------------------------------------- prefill --
+    def _prefill_into_slot(self, req: Request, slot: int, interval: int
+                           ) -> None:
+        req.state = State.PREFILLING
+        req.slot = slot
+        self.slot_req[slot] = req
+        rt = self._rt(self.interval)
+        if self.interval not in self._jit_prefill:
+            self._jit_prefill[self.interval] = jax.jit(
+                rt.prefill, static_argnames=("cache_len",))
+        # prefill this request alone (chunked-prefill piggybacking is an
+        # engine-level extension; the paper separates phases)
+        inputs = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        logits, caches1, _ = self._jit_prefill[self.interval](
+            self._params_split[self.interval], inputs,
+            cache_len=self.ecfg.max_seq)
+        # modeled prefill latency = TTFT
+        times = self.times_fn(1, req.prompt_len, "prefill")
+        pre_i = self.rec["prefill"].lookup(req.ttft_slo_s, 1, req.prompt_len)
+        pre_i = max(pre_i, 1)
+        ttft = iter_time_with_interval(times, min(pre_i, NO_OFFLOAD))
+        req.ttft_s = ttft
+        self.clock_s += ttft
+
+        tok = int(np.argmax(np.asarray(logits[0])))
+        req.generated.append(tok)
+        self.tokens[slot] = tok
+        self.pos[slot] = req.prompt_len
+        self.active[slot] = True
+        req.state = State.DECODING
+        self._insert_cache(caches1, slot)
+
+    def _ensure_params(self, interval: int) -> int:
+        self._rt(interval)
+        return interval
+
+    def _insert_cache(self, caches1: Any, slot: int) -> None:
+        if self._caches is None:
+            rt = self._rt(self.interval)
+            spec = rt.cache_spec_split(self.ecfg.max_batch, self.ecfg.max_seq)
+            from repro.models import spec as S
+            self._caches = S.initialize(spec, jax.random.PRNGKey(1))
+            self._caches = jax.tree.map(lambda x: x * 0, self._caches)
+
+        def ins(c, n):
+            # c: [..., B, ...] stacked sections share layout with n at B=1
+            axis = _batch_axis(c.shape, n.shape)
+            idx = [slice(None)] * c.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return c.at[tuple(idx)].set(n)
+
+        # Empty placement sections come back as None from prefill (nothing
+        # cached there); the engine keeps its zero-size arrays for those.
+        for k in ("resident", "offloaded", "tail"):
+            if caches1.get(k) is None:
+                continue
+            self._caches[k] = jax.tree.map(ins, self._caches[k], caches1[k])
+
+    # ---------------------------------------------------------------- decode --
+    def step(self, peers: list["ServingEngine"] | None = None,
+             link_bw: float | None = None) -> None:
+        """One inference iteration: coordinate -> admit -> decode all slots."""
+        if peers is not None and link_bw is not None:
+            insts = [self.instance_state()] + [p.instance_state()
+                                               for p in peers]
+            res = coordinate(insts, link_bw)
+            if res.ok:
+                self.set_interval(res.intervals[self.name])
+                for p in peers:
+                    p.set_interval(res.intervals[p.name])
+        elif self.interval == 0:
+            self.set_interval(NO_OFFLOAD)
+
+        self._admit()
+        if self._active_batch() == 0:
+            return
+        rt = self._rt(self.interval)
+        fn = self._jit_decode[self.interval]
+        logits, self._caches = fn(
+            self._params_split[self.interval],
+            jnp.asarray(self.tokens), jnp.asarray(self.pos), self._caches)
+        logits = np.asarray(logits, np.float32)
+
+        times = self.times_fn(self._active_batch(), self.ecfg.max_seq,
+                              "decode")
+        dt = iter_time_with_interval(times, self.interval)
+        self.clock_s += dt
+
+        for slot in range(self.ecfg.max_batch):
+            if not self.active[slot]:
+                continue
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            tok = int(np.argmax(logits[slot]))
+            req.generated.append(tok)
+            req.tpot_s.append(dt)
+            self.tokens[slot] = tok
+            self.pos[slot] += 1
+            if req.done:
+                req.state = State.FINISHED
+                self.finished.append(req)
+                self.active[slot] = False
+                self.slot_req[slot] = None
+                self.allocator.free(req.rid)
+
+    def run(self, requests: list[Request], max_iters: int = 10_000,
+            peers=None, link_bw=None) -> dict:
+        for r in requests:
+            self.submit(r)
+        it = 0
+        while (self.queue or self._active_batch() > 0) and it < max_iters:
+            self.step(peers=peers, link_bw=link_bw)
+            it += 1
+        done = [r.metrics() for r in self.finished]
+        total_tokens = sum(m["tokens"] for m in done)
+        return {
+            "finished": len(self.finished),
+            "rejected": len(self.rejected),
+            "tokens": total_tokens,
+            "wall_modeled_s": self.clock_s,
+            "throughput_tok_s": total_tokens / self.clock_s
+            if self.clock_s > 0 else 0.0,
+            "slo_ok": all(m["ttft_ok"] and m["tpot_ok"] for m in done),
+            "per_request": done,
+        }
+
+
+def _batch_axis(cshape: tuple, nshape: tuple) -> int:
+    """Locate the batch axis: first axis where shapes differ."""
+    for a, (cs, ns) in enumerate(zip(cshape, nshape)):
+        if cs != ns:
+            return a
+    return 0

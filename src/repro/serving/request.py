@@ -1,0 +1,55 @@
+"""Serving request lifecycle."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    REJECTED = "rejected"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # [prompt_len] int32
+    max_new_tokens: int
+    ttft_slo_s: float
+    tpot_slo_s: float
+    arrival_s: float = 0.0
+    state: State = State.QUEUED
+    # runtime
+    slot: int = -1
+    generated: list[int] = dataclasses.field(default_factory=list)
+    ttft_s: float | None = None
+    tpot_s: list[float] = dataclasses.field(default_factory=list)
+    reject_reason: str = ""
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    def metrics(self) -> dict:
+        tpot = float(np.mean(self.tpot_s)) if self.tpot_s else 0.0
+        return {
+            "rid": self.rid,
+            "ttft_s": self.ttft_s,
+            "tpot_mean_s": tpot,
+            "tpot_p99_s": float(np.quantile(self.tpot_s, 0.99))
+            if self.tpot_s else 0.0,
+            "ttft_ok": self.ttft_s is not None and self.ttft_s
+            <= self.ttft_slo_s * (1 + 1e-9),
+            "tpot_ok": all(t <= self.tpot_slo_s * (1 + 1e-9)
+                           for t in self.tpot_s),
+            "tokens": len(self.generated),
+        }

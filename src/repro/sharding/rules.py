@@ -1,0 +1,207 @@
+"""Logical-axis sharding rules.
+
+Tensors are annotated with *logical* axis names ("batch", "heads", "mlp", ...).
+``resolve()`` maps them onto mesh axes with two safety properties that make
+every (arch × shape × mesh) cell compile:
+
+1. divisibility fallback — a candidate mesh-axis tuple is only used if the dim
+   size divides evenly; otherwise the next candidate (or replication) is used;
+2. no-double-use — a mesh axis is consumed at most once per PartitionSpec,
+   resolved greedily left-to-right. This is what makes e.g. the KV cache
+   ``[batch, cache_seq, kv, head_dim]`` shard batch over "data" for decode_32k
+   (batch=128) but *sequence* over "data" for long_500k (batch=1): batch=1
+   fails divisibility, leaving "data" free for cache_seq.
+
+The rules are derived from (ModelConfig, mesh): giant (param_fsdp) archs add
+the data axes as a candidate for parameter "fsdp" dims; MoE expert dims try
+the model axis (EP) and otherwise leave TP to the per-expert FFN dims.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Rules = dict[str, list[tuple[str, ...]]]
+
+
+def virtual_kv_heads(cfg: ModelConfig, tp: int) -> int:
+    """Number of *stored* KV heads after replication for tensor parallelism.
+
+    Smallest v with v % kv == 0, v % tp == 0, heads % v == 0 (the standard
+    vLLM/MaxText KV replication scheme). Falls back to kv (no expansion) when
+    impossible — then attention is not head-sharded on this mesh.
+    """
+    kv, h = cfg.num_kv_heads, cfg.num_heads
+    for mult in range(1, h // kv + 1):
+        v = kv * mult
+        if v % tp == 0 and h % v == 0:
+            return v
+    return kv
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, step: str = "train",
+               global_batch: int | None = None) -> Rules:
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    dp: tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
+    tp = mesh.shape["model"]
+
+    fsdp_cands: list[tuple[str, ...]] = [dp, ("data",)] if cfg.param_fsdp else []
+    expert_mlp_cands: list[tuple[str, ...]] = [("model",)]
+
+    # Weight-stationary decode pays when the batch amortizes the replicated
+    # weight reads; at tiny batches (long_500k: batch 1) the per-chip weight
+    # READ dominates the step and FSDP-style small shards win even with the
+    # per-token gathers (measured: jamba long_500k 37 ms fsdp vs 53 ms
+    # replicated). Threshold: one decode row per data shard.
+    ws_decode = step == "decode" and (
+        global_batch is None or global_batch >= mesh.shape.get("data", 1))
+
+    if ws_decode:
+        # Weight-stationary decode layout (§Perf hillclimb A): FSDP shards
+        # parameter *input* dims over "data", which makes XLA re-gather the
+        # weight shards on EVERY decode token (74 GB/token for grok-314b).
+        # At decode the dispatched MoE activations are tiny (one token per
+        # sequence, replicated via "moe_batch" below), so instead: drop the
+        # fsdp dim and shard the expert hidden dim over BOTH mesh axes —
+        # per-chip residency is unchanged or better and the collective
+        # traffic becomes O(tokens x d_model), not O(weight bytes). Dense
+        # MLP / mamba inner dims keep the 1D "model" rule: their activation
+        # paths stay batch-sharded, and a 2D weight shard there would make
+        # XLA re-gather the data component every token (observed on jamba).
+        fsdp_cands = []
+        expert_mlp_cands = [dp + ("model",) if has_pod
+                            else ("data", "model"),
+                            dp, ("data",), ("model",)]
+
+    # MoE dispatch activations: batch-sharded like everything else during
+    # train/prefill, but REPLICATED at decode — the dispatched tokens are a
+    # few MB while re-gathering 2D-sharded expert weights is tens of GB.
+    moe_batch: list[tuple[str, ...]] = [] if ws_decode \
+        else [dp, ("data",)]
+
+    # Sub-scale-TP remap (§Perf hillclimb B2): a small model on a big mesh
+    # wastes the model axis — TP-16 of a d_model~1k stack moves huge
+    # activation all-reduces and leaves 16x more tokens per chip than pure
+    # DP would (recurrence/attention traffic scales with tokens/chip). When
+    # the replicated train state (param + fp32 master + adamw moments + grad
+    # ~ 18 B/param) of the non-embedding stack fits comfortably on one chip,
+    # fold the model axis into data parallelism and replicate the stack;
+    # embeddings stay vocab-sharded on the model axis (they dominate params
+    # for small-vocab-heavy archs but train sparsely).
+    d = cfg.d_model
+    embed_params = cfg.padded_vocab() * d * (1 if cfg.tie_embeddings else 2)
+    stack_params = max(cfg.num_params() - embed_params, 0)
+    # Recurrent mixers (sLSTM/mLSTM) are excluded: their per-token scans make
+    # XLA reduce recurrent-weight grads across the batch axes INSIDE the
+    # token loop, and widening the batch axes multiplies that wire traffic
+    # (measured 4.7x worse on xlstm-125m; see EXPERIMENTS.md §Perf B3).
+    attention_only = all(b.mixer == "attention" for b in cfg.pattern)
+    small_dp = (step == "train" and attention_only
+                and stack_params * 18 < 10e9)
+    batch_cands: list[tuple[str, ...]] = [dp, ("data",)]
+    if small_dp:
+        batch_cands = [dp + ("model",) if has_pod else ("data", "model"),
+                       dp, ("data",)]
+
+    rules: Rules = {
+        # activations -------------------------------------------------------
+        "batch": batch_cands,
+        "moe_batch": moe_batch,
+        "seq": [],                      # sharded only via explicit SP paths
+        "embed": [],                    # activation d_model dim
+        "heads": [] if small_dp else [("model",)],
+        "kv": [] if small_dp else [("model",)],   # virtual kv (post expand)
+        "head_dim": [],
+        "mlp": [] if small_dp else [("model",)],
+        "expert_mlp": [] if small_dp else expert_mlp_cands,
+        "experts": [] if small_dp else [("model",)],
+        "capacity": [],
+        # caches -------------------------------------------------------------
+        "cache_seq": [dp, ("data",)],   # only wins when batch couldn't shard
+        "state": [] if small_dp else [("model",)],  # SSM/recurrent inner dim
+        # params --------------------------------------------------------------
+        "fsdp": fsdp_cands,             # param in-dims for giant archs
+        "vocab": [("model",)],
+        "stack": [],                    # scan-stacked layer dim: never sharded
+        "conv": [],
+        None: [],
+    }
+    return rules
+
+
+def resolve(
+    shape: Sequence[int],
+    logical: Sequence[str | None],
+    rules: Rules,
+    mesh: Mesh,
+) -> P:
+    """Map logical axis names to a PartitionSpec honouring divisibility and
+    single-use of mesh axes (greedy, left-to-right)."""
+    assert len(shape) == len(logical), (shape, logical)
+    used: set[str] = set()
+    out: list[tuple[str, ...] | None] = []
+    for dim, name in zip(shape, logical):
+        placed: tuple[str, ...] | None = None
+        for cand in rules.get(name, []):
+            if any(a in used for a in cand):
+                continue
+            size = math.prod(mesh.shape[a] for a in cand)
+            if size > 1 and dim % size == 0:
+                placed = cand
+                used.update(cand)
+                break
+        out.append(placed)
+    # trim trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Context: model code calls shard(x, "batch", "seq", ...) without threading
+# mesh/rules through every function signature.
+# ---------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh | None, rules: Rules | None):
+    prev = getattr(_ctx, "val", None)
+    _ctx.val = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.val = prev
+
+
+def current_context() -> tuple[Mesh | None, Rules | None]:
+    val = getattr(_ctx, "val", None)
+    return val if val is not None else (None, None)
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside a context."""
+    mesh, rules = current_context()
+    if mesh is None or rules is None:
+        return x
+    spec = resolve(x.shape, logical, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(
+    mesh: Mesh, rules: Rules, shape: Sequence[int], logical: Sequence[str | None],
+    memory_kind: str | None = None,
+) -> NamedSharding:
+    spec = resolve(shape, logical, rules, mesh)
+    if memory_kind is None:
+        return NamedSharding(mesh, spec)
+    return NamedSharding(mesh, spec, memory_kind=memory_kind)

@@ -1,0 +1,67 @@
+"""Gradient compression for the cross-pod data-parallel reduction.
+
+Modes:
+  * "none":  fp32 psum (baseline);
+  * "bf16":  cast to bf16 before the all-reduce — halves wire bytes, the
+             standard large-cluster setting (Megatron/MaxText default);
+  * "int8_ef": per-tensor-scale int8 quantization with error feedback. The
+             residual (g - dequant(q)) is carried to the next step, so the
+             quantization bias vanishes in expectation. Wire volume 1/4 of
+             fp32; accumulation happens in int32 via psum.
+
+Used inside shard_map over the DP axes by train_loop.build_train_step.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _psum(tree: Any, axes) -> Any:
+    return jax.tree.map(lambda x: jax.lax.psum(x, axes), tree)
+
+
+def reduce_gradients(grads: Any, axes, mode: str = "none",
+                     error_state: Any = None) -> tuple[Any, Any]:
+    """All-reduce (mean) gradients across mesh ``axes`` under jit/shard_map.
+
+    Returns (reduced_grads, new_error_state). error_state is None unless
+    mode == "int8_ef".
+    """
+    nshards = 1
+    # inside shard_map, axis sizes come from the mesh via psum of ones
+    ones = jax.lax.psum(jnp.ones((), jnp.float32), axes)
+
+    if mode == "none":
+        red = _psum(jax.tree.map(lambda g: g.astype(jnp.float32), grads), axes)
+        return jax.tree.map(lambda g: g / ones, red), error_state
+
+    if mode == "bf16":
+        red = _psum(jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), axes)
+        return jax.tree.map(lambda g: g.astype(jnp.float32) / ones, red), \
+            error_state
+
+    if mode == "int8_ef":
+        if error_state is None:
+            error_state = jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(error_state)
+        red_leaves, err_leaves = [], []
+        for g, e in zip(flat_g, flat_e):
+            gf = g.astype(jnp.float32) + e
+            # Shared scale across shards (pmax), so the int32 psum dequantizes
+            # exactly: sum_i q_i * s == sum_i dequant(q_i).
+            scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axes) / 127.0
+            scale = jnp.maximum(scale, 1e-12)
+            q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            err_leaves.append(gf - q.astype(jnp.float32) * scale)
+            q_sum = jax.lax.psum(q.astype(jnp.int32), axes)
+            red_leaves.append(q_sum.astype(jnp.float32) * scale / ones)
+        return (jax.tree.unflatten(treedef, red_leaves),
+                jax.tree.unflatten(treedef, err_leaves))
+
+    raise ValueError(mode)

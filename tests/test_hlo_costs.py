@@ -1,0 +1,133 @@
+"""While-aware HLO cost extraction: scan bodies must be trip-count weighted
+(flops equal to the unrolled program), slice fusions must not charge whole
+buffers, collectives inside loops must scale."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_costs
+
+
+def _mm_body(x, w):
+    return jnp.tanh(x @ w), None
+
+
+def _costs(fn, *args, donate=()):
+    c = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+    return hlo_costs.analyze(c.as_text())
+
+
+def test_scan_flops_match_unrolled():
+    x = jnp.zeros((128, 256), jnp.float32)
+    ws = jnp.zeros((8, 256, 256), jnp.float32)
+
+    def scanned(x, ws):
+        out, _ = jax.lax.scan(_mm_body, x, ws)
+        return out
+
+    def unrolled(x, ws):
+        for i in range(ws.shape[0]):
+            x, _ = _mm_body(x, ws[i])
+        return x
+
+    fs = _costs(scanned, x, ws).flops
+    fu = _costs(unrolled, x, ws).flops
+    dot_flops = 2 * 8 * 128 * 256 * 256
+    assert fs == pytest.approx(fu, rel=1e-6)
+    assert fs == pytest.approx(dot_flops, rel=0.01)  # + tanh elementwise
+
+
+def test_scan_bytes_close_to_unrolled():
+    x = jnp.zeros((128, 256), jnp.float32)
+    ws = jnp.zeros((8, 256, 256), jnp.float32)
+
+    def scanned(x, ws):
+        out, _ = jax.lax.scan(_mm_body, x, ws)
+        return out
+
+    def unrolled(x, ws):
+        for i in range(ws.shape[0]):
+            x, _ = _mm_body(x, ws[i])
+        return x
+
+    bs = _costs(scanned, x, ws).hbm_bytes
+    bu = _costs(unrolled, x, ws).hbm_bytes
+    assert bs == pytest.approx(bu, rel=0.25)
+    # weights must be read once per layer: >= 8 * 256*256*4 bytes
+    assert bs >= 8 * 256 * 256 * 4
+
+
+def test_dus_cache_update_counts_slice_not_buffer():
+    cache = jnp.zeros((4, 32768, 128), jnp.bfloat16)
+    tok = jnp.zeros((4, 1, 128), jnp.bfloat16)
+
+    def upd(cache, tok, idx):
+        return jax.lax.dynamic_update_slice(cache, tok, (0, idx, 0))
+
+    b = _costs(upd, cache, tok, jnp.int32(5), donate=(0,)).hbm_bytes
+    assert b < 100_000, f"cache update charged {b} bytes (full buffer leak)"
+
+
+def test_full_cache_read_still_counted():
+    cache = jnp.zeros((4, 8192, 128), jnp.bfloat16)
+    q = jnp.zeros((4, 128), jnp.float32)
+
+    def attn(cache, q):
+        return jnp.einsum("bsd,bd->bs", cache.astype(jnp.float32), q)
+
+    r = _costs(attn, cache, q)
+    assert r.hbm_bytes >= cache.size * 2           # full cache read
+    assert r.flops == pytest.approx(2 * 4 * 8192 * 128, rel=0.05)
+
+
+def test_nested_scan_multiplies():
+    x = jnp.zeros((16, 64), jnp.float32)
+    ws = jnp.zeros((4, 3, 64, 64), jnp.float32)
+
+    def inner(x, ws3):
+        out, _ = jax.lax.scan(_mm_body, x, ws3)
+        return out
+
+    def outer(x, ws):
+        out, _ = jax.lax.scan(lambda c, w3: (inner(c, w3), None), x, ws)
+        return out
+
+    f = _costs(outer, x, ws).flops
+    assert f == pytest.approx(2 * 12 * 16 * 64 * 64, rel=0.01)
+
+
+_COLL_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.launch import hlo_costs
+    mesh = jax.make_mesh((8,), ("m",))
+    def f(xs):
+        def body(c, x):
+            s = jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(None)))
+            return c + s.sum(), None
+        out, _ = jax.lax.scan(body, jnp.float32(0), xs)
+        return out
+    xs = jnp.zeros((6, 1024), jnp.float32)
+    with mesh:
+        c = jax.jit(f, in_shardings=NamedSharding(mesh, P(None, "m")),
+                    out_shardings=NamedSharding(mesh, P())).lower(xs).compile()
+    r = hlo_costs.analyze(c.as_text(), default_group=8)
+    n = sum(r.collective_count.values())
+    assert n >= 6, f"collectives not trip-weighted: {r.collective_count}"
+    print("OK", r.collective_count)
+""")
+
+
+def test_collectives_trip_weighted():
+    out = subprocess.run([sys.executable, "-c", _COLL_SCRIPT],
+                         capture_output=True, text=True,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

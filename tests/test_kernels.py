@@ -1,0 +1,149 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes, dtypes, GQA groupings, masks, and paged layouts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk_qkv(b, h, vh, sq, sk, d, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (b, h, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (b, vh, sk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (b, vh, sk, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,vh,sq,sk,d", [
+    (1, 4, 4, 64, 64, 64),       # MHA square
+    (2, 8, 2, 128, 128, 64),     # GQA
+    (1, 8, 1, 96, 96, 128),      # MQA, non-multiple seq (padding path)
+    (1, 4, 4, 256, 256, 32),     # multi q/kv blocks
+])
+def test_flash_causal(dtype, b, h, vh, sq, sk, d):
+    q, k, v = _mk_qkv(b, h, vh, sq, sk, d, dtype)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              interpret=True)
+    want = ref.ref_flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_sliding_window(window):
+    q, k, v = _mk_qkv(1, 4, 2, 128, 128, 64, jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=32, block_k=32, interpret=True)
+    want = ref.ref_flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_noncausal_cross():
+    q, k, v = _mk_qkv(2, 4, 4, 32, 80, 64, jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, block_q=32, block_k=32,
+                              interpret=True)
+    want = ref.ref_flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_kv_len_mask():
+    q, k, v = _mk_qkv(1, 4, 4, 64, 128, 64, jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, kv_len=100,
+                              block_q=32, block_k=32, interpret=True)
+    want = ref.ref_flash_attention(q, k, v, causal=False, kv_len=100)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_style_offset():
+    """sq < sk with causal: queries are the LAST sq positions (chunked
+    prefill continuation)."""
+    q, k, v = _mk_qkv(1, 4, 4, 32, 128, 64, jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+    want = ref.ref_flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode
+# ---------------------------------------------------------------------------
+
+
+def _mk_paged(b, h, vh, d, npages, page, nb, dtype, seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (npages, page, vh, d), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (npages, page, vh, d), jnp.float32).astype(dtype)
+    # distinct page assignment per request
+    perm = jax.random.permutation(ks[3], npages)[: b * nb]
+    bt = perm.reshape(b, nb).astype(jnp.int32)
+    cl = jax.random.randint(ks[4], (b,), 1, nb * page + 1, jnp.int32)
+    return q, kp, vp, bt, cl
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,vh,d,page,nb", [
+    (2, 4, 4, 64, 16, 4),
+    (3, 8, 2, 64, 32, 3),     # GQA
+    (1, 8, 1, 128, 16, 8),    # MQA
+])
+def test_paged_decode(dtype, b, h, vh, d, page, nb):
+    q, kp, vp, bt, cl = _mk_paged(b, h, vh, d, b * nb + 3, page, nb, dtype)
+    got = ops.paged_decode_attention(q, kp, vp, bt, cl, interpret=True)
+    want = ref.ref_paged_decode_attention(q, kp, vp, bt, cl)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_paged_decode_sliding_window():
+    q, kp, vp, bt, cl = _mk_paged(2, 4, 2, 64, 19, 8, 9, jnp.float32)
+    cl = jnp.asarray([60, 33], jnp.int32)
+    got = ops.paged_decode_attention(q, kp, vp, bt, cl, window=20,
+                                     interpret=True)
+    want = ref.ref_paged_decode_attention(q, kp, vp, bt, cl, window=20)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_single_token_context():
+    q, kp, vp, bt, _ = _mk_paged(2, 4, 4, 64, 16, 2, 7, jnp.float32)
+    cl = jnp.asarray([1, 5], jnp.int32)
+    got = ops.paged_decode_attention(q, kp, vp, bt, cl, interpret=True)
+    want = ref.ref_paged_decode_attention(q, kp, vp, bt, cl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_matches_model_chunked_attention():
+    """Kernel and the jnp chunked implementation used at dry-run scale must
+    agree (they are the same algorithm at different layers)."""
+    from repro.configs import get_config
+    from repro.configs.reduced import reduce_config
+    from repro.models import layers as L
+
+    cfg = reduce_config(get_config("deepseek-7b"))
+    b, s, h, d = 2, 64, cfg.num_heads, cfg.resolved_head_dim
+    q = jax.random.normal(KEY, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(7), (b, s, h, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(8), (b, s, h, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32)
+    chunked = L.attn_chunked(cfg, q, k, v, pos, pos, chunk=16)
+    kern = ops.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), causal=True,
+                               block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(chunked),
+                               np.asarray(kern.transpose(0, 2, 1, 3)),
+                               rtol=2e-4, atol=2e-4)

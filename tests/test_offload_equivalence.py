@@ -1,0 +1,146 @@
+"""The offload-grouped step must compute exactly what the plain step computes
+— offloading is a *placement*, never a math change. Checked per interval and
+per architecture family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.reduced import reduce_config
+from repro.core.interval import NO_OFFLOAD, OffloadPlan
+from repro.core.memory_manager import (OffloadRuntime, merge_model_params,
+                                       split_model_params, split_stacked)
+from repro.models.frontends import stub_embeddings
+from repro.models.model import build_model
+from repro.models.transformer import pattern_info
+
+B, S = 2, 12
+
+
+def _mk(arch, layers=None):
+    cfg = reduce_config(get_config(arch))
+    if layers:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, num_layers=layers)
+    return cfg, build_model(cfg)
+
+
+def _inputs(cfg, key):
+    inputs = {}
+    if cfg.encoder_layers > 0:
+        inputs["enc_embeds"] = stub_embeddings(cfg, B, S, key)
+    elif cfg.frontend is not None:
+        inputs["frontend_embeds"] = stub_embeddings(
+            cfg, B, cfg.frontend.num_positions, key)
+    n_front = (cfg.frontend.num_positions
+               if cfg.frontend is not None and cfg.family != "audio" else 0)
+    inputs["tokens"] = jax.random.randint(key, (B, S - n_front), 0,
+                                          cfg.vocab_size, jnp.int32)
+    return inputs
+
+
+@pytest.mark.parametrize("arch,layers,interval", [
+    ("deepseek-7b", 6, 1),       # DeepSpeed degenerate case
+    ("deepseek-7b", 6, 2),
+    ("deepseek-7b", 6, 3),
+    ("deepseek-7b", 7, 3),       # remainder tail
+    ("deepseek-7b", 6, NO_OFFLOAD),
+    ("qwen2.5-3b", 4, 2),
+    ("h2o-danube-3-4b", 4, 2),   # SWA
+    ("grok-1-314b", 4, 2),       # MoE
+    ("jamba-1.5-large-398b", None, 2),  # hybrid: 2 periods, interval in units
+    ("xlstm-125m", 4, 2),
+    ("seamless-m4t-medium", 4, 2),      # enc-dec w/ cross caches
+    ("paligemma-3b", 4, 2),
+])
+def test_decode_equivalence(arch, layers, interval):
+    cfg, model = _mk(arch, layers)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    inputs = _inputs(cfg, key)
+    cache_len = S + 4
+
+    logits_p, caches, enc_pos = jax.jit(
+        lambda p, i: model.prefill(p, i, cache_len=cache_len))(params, inputs)
+    tok = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+
+    # Plain path
+    ref_logits, ref_caches = jax.jit(model.decode_step)(params, tok, pos,
+                                                        caches, enc_pos)
+
+    # Offload path
+    _, r = pattern_info(cfg)
+    plan = OffloadPlan(num_units=r, interval=interval)
+    rt = OffloadRuntime(model=model, plan=plan)
+    psplit = split_model_params(params, plan)
+    csplit = split_stacked(caches, plan)
+    off_logits, new_csplit = jax.jit(rt.decode_step)(psplit, tok, pos, csplit,
+                                                     enc_pos)
+
+    # bf16 tolerance: the grouped path slices params/caches differently
+    # (direct [g, j] dynamic slices vs scan xs), which changes XLA fusion
+    # boundaries and thus bf16 rounding. Exactness is asserted in f32 below.
+    np.testing.assert_allclose(np.asarray(off_logits, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               rtol=3e-2, atol=6e-2)
+
+
+def test_decode_equivalence_exact_f32():
+    """In f32 the grouped decode is bit-exact vs the plain step — offloading
+    is a placement, never a math change."""
+    cfg, model = _mk("deepseek-7b", 6)
+    key = jax.random.PRNGKey(0)
+    params = jax.tree.map(
+        lambda t: t.astype(jnp.float32) if t.dtype == jnp.bfloat16 else t,
+        model.init(key))
+    inputs = _inputs(cfg, key)
+    cache_len = S + 4
+    logits_p, caches, enc_pos = jax.jit(
+        lambda p, i: model.prefill(p, i, cache_len=cache_len))(params, inputs)
+    tok = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    ref_logits, _ = jax.jit(model.decode_step)(params, tok, pos, caches,
+                                               enc_pos)
+    for interval in (1, 2, 3):
+        plan = OffloadPlan(num_units=6, interval=interval)
+        rt = OffloadRuntime(model=model, plan=plan)
+        off_logits, _ = jax.jit(rt.decode_step)(
+            split_model_params(params, plan), tok, pos,
+            split_stacked(caches, plan), enc_pos)
+        np.testing.assert_array_equal(np.asarray(off_logits),
+                                      np.asarray(ref_logits))
+
+
+def test_offload_prefill_equivalence():
+    cfg, model = _mk("deepseek-7b", 6)
+    key = jax.random.PRNGKey(3)
+    params = model.init(key)
+    inputs = _inputs(cfg, key)
+    ref_logits, _, _ = jax.jit(
+        lambda p, i: model.prefill(p, i, cache_len=S))(params, inputs)
+
+    plan = OffloadPlan(num_units=6, interval=3)
+    rt = OffloadRuntime(model=model, plan=plan)
+    psplit = split_model_params(params, plan)
+    off_logits, caches, _ = jax.jit(
+        lambda p, i: rt.prefill(p, i, cache_len=S))(psplit, inputs)
+    np.testing.assert_allclose(np.asarray(off_logits, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    # prefill caches feed the offloaded decode directly
+    tok = jnp.argmax(off_logits, -1).astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    logits2, _ = jax.jit(rt.decode_step)(psplit, tok, pos, caches, None)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+def test_split_merge_roundtrip():
+    cfg, model = _mk("qwen2.5-3b", 6)
+    params = model.init(jax.random.PRNGKey(1))
+    plan = OffloadPlan(num_units=6, interval=4)  # G=1, tail=2
+    split = split_model_params(params, plan)
+    merged = merge_model_params(split, plan)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, merged)

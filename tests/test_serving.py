@@ -1,0 +1,109 @@
+"""Serving engine integration: continuous batching, SLO admission, offload
+interval switching, paged accounting."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.reduced import reduce_config
+from repro.core.analyzer import PerformanceAnalyzer
+from repro.core.hardware import A10
+from repro.core.interval import NO_OFFLOAD
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.kv_cache import PageConfig, PagedKVAllocator
+from repro.serving.request import Request
+
+
+def _mk_engine(name="e0", hbm_gb=0.05, max_batch=4, max_seq=48):
+    cfg = reduce_config(get_config("qwen2.5-3b"), d_model=32, heads=2,
+                        layers=8, d_ff=64, vocab=128)
+    model = build_model(cfg)
+    an = PerformanceAnalyzer(cfg, A10, measure="model")
+    batches = [1, 2, 4, 8]
+    seqs = [16, 32, 64]
+    slos = [0.002 * k for k in range(1, 30)]
+    rec_p = an.generate_record(slos, batches, seqs, "prefill")
+    rec_d = an.generate_record(slos, batches, seqs, "decode")
+    eng = ServingEngine(name, model, A10, rec_p, rec_d, an.layer_times,
+                        EngineConfig(max_batch=max_batch, max_seq=max_seq,
+                                     hbm_budget_bytes=hbm_gb * 1e9))
+    return eng, an
+
+
+def _reqs(n, prompt_len=8, new=6, ttft=1.0, tpot=1.0):
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, 100, prompt_len).astype(np.int32),
+                    max_new_tokens=new, ttft_slo_s=ttft, tpot_slo_s=tpot)
+            for i in range(n)]
+
+
+def test_engine_serves_batched_requests():
+    eng, _ = _mk_engine()
+    eng.set_interval(NO_OFFLOAD)
+    out = eng.run(_reqs(6), max_iters=500)
+    assert out["finished"] == 6
+    assert out["rejected"] == 0
+    assert out["tokens"] == 6 * 6
+    assert out["throughput_tok_s"] > 0
+    # all KV pages returned
+    assert eng.allocator.used_pages == 0
+
+
+def test_engine_continuous_batching_overlaps():
+    """More requests than slots: finishing requests free slots for queued."""
+    eng, _ = _mk_engine(max_batch=2)
+    out = eng.run(_reqs(5), max_iters=500)
+    assert out["finished"] == 5
+
+
+def test_engine_interval_switch_preserves_decoding():
+    eng, _ = _mk_engine()
+    reqs = _reqs(2, new=10)
+    for r in reqs:
+        eng.submit(r)
+    eng.set_interval(NO_OFFLOAD)
+    for _ in range(3):
+        eng.step()
+    eng.set_interval(2)            # offload half-way through decoding
+    while eng.queue or eng._active_batch() > 0:
+        eng.step()
+    assert len(eng.finished) == 2
+    for r in eng.finished:
+        assert len(r.generated) == 10
+
+
+def test_engine_rejects_infeasible_slo():
+    eng, _ = _mk_engine(hbm_gb=0.00002)  # tiny HBM: model cannot stay resident
+    reqs = _reqs(1, tpot=1e-6)           # impossible SLO
+    out = eng.run(reqs, max_iters=50)
+    assert out["rejected"] == 1
+    assert "infeasible" in eng.rejected[0].reject_reason
+
+
+def test_paged_allocator_roundtrip():
+    alloc = PagedKVAllocator(16 * 64, PageConfig(page_size=4, bytes_per_token=4))
+    assert alloc.total_pages == 64
+    pages = alloc.alloc(1, 17)   # 5 pages
+    assert len(pages) == 5
+    assert alloc.extend(1, 25)   # 7 pages total
+    assert alloc.used_pages == 7
+    assert alloc.max_allocatable_tokens() == (64 - 7) * 4
+    alloc.free(1)
+    assert alloc.used_pages == 0
+    assert alloc.alloc(2, 64 * 4 + 1) is None  # over capacity
+
+
+def test_engine_interval_lowers_kv_headroom_tradeoff():
+    """Fig. 14 mechanics: smaller interval => more free pages."""
+    eng, _ = _mk_engine(hbm_gb=0.01)
+    eng.set_interval(NO_OFFLOAD)
+    base = eng.allocator.total_pages
+    eng.set_interval(2)
+    assert eng.allocator.total_pages > base
+    eng2, _ = _mk_engine(hbm_gb=0.01)
+    eng2.set_interval(1)
+    assert eng2.allocator.total_pages > base
