@@ -1,0 +1,130 @@
+"""Fig. 15 (extension): two-tier KV offloading — max allocatable context and
+sustained batch vs host-KV pool size, with and without weight offloading
+sharing the host link. Model: Qwen2-beta-7B on a 24 GB A10 (as Fig. 14).
+
+Weights-only offloading caps KV at the HBM left over from the resident
+weights; the host tier (serving.kv_offload) adds page capacity but charges
+the streamed KV to the same link budget as weight prefetch, so sustained
+batch under the TPOT SLO trades against weight-offload traffic. Emits
+``reports/BENCH_kv_tiering.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import (BenchResult, Claim, interval_str,
+                               non_stack_bytes, times_for)
+from repro.configs.paper_models import QWEN2_BETA_7B
+from repro.core import costs
+from repro.core.interval import (NO_OFFLOAD, OffloadPlan,
+                                 iter_time_with_interval_kv)
+
+HBM = 24e9
+TPOT_SLO_S = 0.100
+CONTEXT = 2048
+HOST_FRACTIONS = [0.0, 0.5, 1.0, 2.0, 4.0]   # host KV pool / HBM
+# resident weights / fully hidden prefetch / partially exposed prefetch —
+# all TPOT-feasible at the SLO, so the shared-link tradeoff is visible
+WEIGHT_INTERVALS = [NO_OFFLOAD, 16, 8]
+PAGE_SIZE = 16
+MAX_BATCH = 128
+
+
+def _sustained_batch(cfg, iv: int, dev_kv_cap: float, host_cap: float,
+                     kv_tok: int, charge_stream: bool = True) -> int:
+    """Largest batch at CONTEXT tokens whose KV fits the two tiers and whose
+    combined weight+KV link traffic keeps the iteration under the TPOT SLO.
+    ``charge_stream=False`` is the bookkeeping counterfactual (KV moves for
+    free) used to check that the stream is actually charged."""
+    best = 0
+    for b in range(1, MAX_BATCH + 1):
+        total_kv = b * CONTEXT * kv_tok
+        host_need = max(total_kv - dev_kv_cap, 0.0)
+        if host_need > host_cap:
+            break
+        times = times_for(cfg, b, CONTEXT, "decode")
+        t = iter_time_with_interval_kv(times, iv,
+                                       host_need if charge_stream else 0.0)
+        if t <= TPOT_SLO_S * (1 + 1e-9):
+            best = b
+        else:
+            break        # latency is monotone in batch: no larger b fits
+    return best
+
+
+def run() -> BenchResult:
+    cfg = QWEN2_BETA_7B
+    unit = costs.unit_weight_bytes(cfg)
+    ns = non_stack_bytes(cfg)
+    kv_tok = costs.kv_cache_bytes(cfg, 1, 1)
+    page_bytes = PAGE_SIZE * kv_tok
+
+    rows = []
+    max_ctx = {}         # (iv, frac) -> tokens
+    sustained = {}       # (iv, frac) -> batch
+    free_link = {}       # (iv, frac) -> batch if KV moved for free
+    for iv in WEIGHT_INTERVALS:
+        plan = OffloadPlan(cfg.num_layers, iv)
+        dev_kv_cap = max(HBM - plan.device_bytes(unit) - ns, 0.0)
+        for frac in HOST_FRACTIONS:
+            host_cap = frac * HBM
+            dev_pages = int(dev_kv_cap // page_bytes)
+            host_pages = int(host_cap // page_bytes)
+            ctx = (dev_pages + host_pages) * PAGE_SIZE
+            bat = _sustained_batch(cfg, iv, dev_kv_cap, host_cap, kv_tok)
+            free = _sustained_batch(cfg, iv, dev_kv_cap, host_cap, kv_tok,
+                                    charge_stream=False)
+            max_ctx[(iv, frac)] = ctx
+            sustained[(iv, frac)] = bat
+            free_link[(iv, frac)] = free
+            rows.append({
+                "weight_interval": interval_str(iv),
+                "host_kv_frac": frac,
+                "device_kv_GiB": dev_kv_cap / 2**30,
+                "host_kv_GiB": host_cap / 2**30,
+                "max_context_tokens": ctx,
+                "sustained_batch@2k": bat,
+                "batch_if_stream_free": free,
+            })
+
+    ivs = WEIGHT_INTERVALS
+    mono_ctx = all(max_ctx[(iv, HOST_FRACTIONS[k])]
+                   <= max_ctx[(iv, HOST_FRACTIONS[k + 1])]
+                   for iv in ivs for k in range(len(HOST_FRACTIONS) - 1))
+    # weights-only (frac 0) vs tiered at the largest pool
+    lift = min(max_ctx[(iv, HOST_FRACTIONS[-1])]
+               / max(max_ctx[(iv, 0.0)], 1) for iv in ivs)
+    batch_lift = sustained[(NO_OFFLOAD, HOST_FRACTIONS[-1])] \
+        >= sustained[(NO_OFFLOAD, 0.0)]
+    # combined traffic: charging the KV stream to the shared link can only
+    # shrink the sustained batch vs the free-link counterfactual — and must
+    # actually bind somewhere, or the stream went unaccounted.
+    keys = [(iv, f) for iv in ivs for f in HOST_FRACTIONS]
+    shared_link = all(sustained[k] <= free_link[k] for k in keys)
+    meaningful = any(sustained[k] < free_link[k] for k in keys)
+    claims = [
+        Claim("fig15 host tier lifts max context",
+              "capacity grows with host pool",
+              "monotone" if mono_ctx else "non-monotone",
+              ok=mono_ctx and lift > 1.0),
+        Claim("fig15 tiering lifts sustained batch under TPOT SLO",
+              "host KV serves batches weights-only HBM cannot",
+              f"{sustained[(NO_OFFLOAD, 0.0)]} -> "
+              f"{sustained[(NO_OFFLOAD, HOST_FRACTIONS[-1])]} at 2k ctx",
+              ok=batch_lift),
+        Claim("fig15 KV stream is charged to the shared link",
+              "streamed KV costs batch vs a free-link counterfactual",
+              "charged <= free everywhere, strict somewhere"
+              if shared_link and meaningful else "violated",
+              ok=shared_link and meaningful),
+    ]
+    res = BenchResult("fig15_kv_tiering", rows, claims)
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/BENCH_kv_tiering.json", "w") as f:
+        json.dump(res.to_json(), f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -23,6 +23,7 @@ MODULES = [
     "fig12_contention",
     "fig13_large_models",
     "fig14_max_length",
+    "fig15_kv_tiering",
     "roofline",
 ]
 

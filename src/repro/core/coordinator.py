@@ -30,6 +30,11 @@ class InstanceState:
     min_interval: int        # from the performance record (SLO bound)
     max_interval: int        # from device memory (capacity bound)
     idle: bool = False       # idle instances consume no bandwidth
+    # Per-iteration KV-page traffic (streamed host-resident KV + migrations,
+    # both directions) of this instance's two-tier KV cache. It rides the
+    # same host link as weight prefetch, so the coordinator must arbitrate
+    # the combined rate (weights + KV) against the link bandwidth.
+    kv_bytes_per_iter: float = 0.0
 
     def valid_intervals(self) -> list[int]:
         if self.idle:
@@ -45,8 +50,12 @@ class InstanceState:
         return self.idle or self.min_interval <= self.max_interval
 
     def link_rate(self, interval: int) -> float:
+        if self.idle:
+            return 0.0
         plan = OffloadPlan(self.num_units, interval)
-        return plan.link_rate(self.unit_bytes, self.t_iter_s)
+        kv_rate = self.kv_bytes_per_iter / self.t_iter_s \
+            if self.t_iter_s > 0 else 0.0
+        return plan.link_rate(self.unit_bytes, self.t_iter_s) + kv_rate
 
     def host_bytes(self, interval: int) -> int:
         return OffloadPlan(self.num_units, interval).host_bytes(self.unit_bytes)

@@ -83,6 +83,27 @@ def optimal_interval(times: LayerTimes, slo_s: float) -> int:
     return NO_OFFLOAD
 
 
+def link_bandwidth(times: LayerTimes) -> float:
+    """Host-link bandwidth (bytes/s) implied by the measured layer transfer
+    time. Zero if the times carry no transfer measurement."""
+    if times.t_transfer_s <= 0:
+        return 0.0
+    return times.layer_bytes / times.t_transfer_s
+
+
+def kv_transfer_seconds(times: LayerTimes, kv_bytes: float,
+                        link_bw: float | None = None) -> float:
+    """Copy-stream seconds to move ``kv_bytes`` of KV pages over the same
+    host link the weight prefetches use."""
+    if kv_bytes <= 0:
+        return 0.0
+    bw = link_bw if link_bw is not None else link_bandwidth(times)
+    if bw <= 0:
+        raise ValueError("KV traffic needs a link bandwidth: times has "
+                         "t_transfer_s == 0 and no link_bw was given")
+    return kv_bytes / bw
+
+
 def iter_time_with_interval(times: LayerTimes, interval: int) -> float:
     """Analytic iteration latency under interval ``i`` with Select-N's
     group-start prefetch and a single copy stream (paper Fig. 7).
@@ -90,12 +111,40 @@ def iter_time_with_interval(times: LayerTimes, interval: int) -> float:
     Matches ``simulator.simulate_iteration`` for uniform layer times
     (property-tested).
     """
+    return iter_time_with_interval_kv(times, interval)
+
+
+def iter_time_with_interval_kv(times: LayerTimes, interval: int,
+                               kv_in_bytes: float = 0.0,
+                               kv_out_bytes: float = 0.0,
+                               link_bw: float | None = None) -> float:
+    """Iteration latency when KV-page traffic shares the copy stream with
+    weight prefetch (two-tier KV offloading, see serving.kv_offload).
+
+    Model — one copy stream, strict issue order (matches the event
+    simulator's extended ``LayerSchedule``, property-tested):
+
+      1. ``kv_in_bytes`` (host->device swap-in / streamed host-resident KV)
+         is issued first and gates layer-0 compute — attention cannot read
+         pages that are not on device yet.
+      2. ``kv_out_bytes`` (device->host write-back of demoted pages) is
+         issued next: demotions must vacate device frames before this
+         iteration reuses them.  The write overlaps compute but queues the
+         weight prefetches behind it.
+      3. Weight prefetches then follow the Fig. 7 group-start schedule.
+
+    Every byte is charged exactly once: KV bytes occupy the copy stream
+    before the first weight transfer, so combined traffic is neither
+    double-counted nor hidden.
+    """
+    t_kv_in = kv_transfer_seconds(times, kv_in_bytes, link_bw)
+    t_kv_out = kv_transfer_seconds(times, kv_out_bytes, link_bw)
     if interval >= times.num_layers + 1 or interval >= NO_OFFLOAD:
-        return times.t_iter_no_offload_s
+        return t_kv_in + times.t_iter_no_offload_s
     i, tc, tt = interval, times.t_compute_s, times.t_transfer_s
     groups = times.num_layers // i
-    t = 0.0
-    copy_free = 0.0
+    t = t_kv_in
+    copy_free = t_kv_in + t_kv_out
     for g in range(groups):
         group_start = t
         xfer_start = max(group_start, copy_free)

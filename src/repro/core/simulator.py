@@ -19,11 +19,19 @@ class LayerSchedule:
     transfer_s: Sequence[float]         # per layer; 0.0 = resident
     prefetch_start_layer: Sequence[int]  # layer index at which its transfer may start
     t_rest_s: float = 0.0
+    # Two-tier KV traffic sharing the copy stream (serving.kv_offload):
+    # kv_in gates layer-0 compute (swapped-in pages must land before
+    # attention reads them); kv_out is issued right after (demoted pages
+    # vacate device frames) and queues the weight prefetches behind it.
+    kv_in_s: float = 0.0
+    kv_out_s: float = 0.0
 
 
 def schedule_for_interval(t_compute_s: Sequence[float], interval: int,
                           t_transfer_s: float, t_rest_s: float = 0.0,
-                          lookahead_groups: int = 1) -> LayerSchedule:
+                          lookahead_groups: int = 1,
+                          kv_in_s: float = 0.0,
+                          kv_out_s: float = 0.0) -> LayerSchedule:
     """Select-N schedule: every interval-th layer offloaded, prefetch issued
     at the first layer of the group (lookahead_groups=1) or earlier."""
     n = len(t_compute_s)
@@ -36,7 +44,7 @@ def schedule_for_interval(t_compute_s: Sequence[float], interval: int,
             transfer[off] = t_transfer_s
             start[off] = max(0, (g - (lookahead_groups - 1)) * interval)
     return LayerSchedule(tuple(t_compute_s), tuple(transfer), tuple(start),
-                         t_rest_s)
+                         t_rest_s, kv_in_s=kv_in_s, kv_out_s=kv_out_s)
 
 
 def schedule_deepspeed(t_compute_s: Sequence[float],
@@ -69,13 +77,17 @@ def simulate_iteration(sched: LayerSchedule, bw_fraction: float = 1.0
     """
     n = len(sched.t_compute_s)
     scale = 1.0 / max(bw_fraction, 1e-9)
+    # KV swap traffic leads the copy stream: swap-in gates layer-0 compute,
+    # write-back overlaps compute but delays the first weight prefetch.
+    t_kv_in = sched.kv_in_s * scale
+    t_kv_out = sched.kv_out_s * scale
     # Transfers execute in layer order on a single copy stream.
     xfer_done = [0.0] * n
-    copy_free = 0.0
+    copy_free = t_kv_in + t_kv_out
     compute_start = [0.0] * n
-    t = 0.0
-    stall = 0.0
-    busy_copy = 0.0
+    t = t_kv_in
+    stall = t_kv_in
+    busy_copy = t_kv_in + t_kv_out
 
     # Precompute, for each layer j, the transfers whose prefetch window opens
     # at j (prefetch_start_layer == j).

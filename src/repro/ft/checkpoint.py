@@ -30,7 +30,7 @@ _SEP = "/"
 
 
 def _flatten(tree: Any) -> dict[str, Any]:
-    flat, _ = jax.tree.flatten_with_path(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -88,7 +88,7 @@ def restore_checkpoint(directory: str, step: int, target: Any,
         manifest = json.load(f)
     data = np.load(os.path.join(path, "shard_0.npz"))
 
-    flat_t, treedef = jax.tree.flatten_with_path(target)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(target)
     shd_flat = (jax.tree.leaves(shardings) if shardings is not None
                 else [None] * len(flat_t))
     out = []

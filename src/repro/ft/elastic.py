@@ -36,9 +36,8 @@ class ElasticPlan:
         return ElasticPlan((n_devices // tp, tp), ("data", "model"))
 
     def make_mesh(self):
-        return jax.make_mesh(
-            self.mesh_shape, self.axis_names,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(self.axis_names))
+        from repro.launch.mesh import make_mesh_compat
+        return make_mesh_compat(self.mesh_shape, self.axis_names)
 
 
 def resume(cfg: ModelConfig, directory: str, *, tp_preference: int = 16

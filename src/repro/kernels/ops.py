@@ -1,13 +1,21 @@
-"""Jitted public wrappers for the Pallas kernels.
+"""Jitted public wrappers for the Pallas kernels + KV page copy paths.
 
 ``interpret`` defaults to True off-TPU (this container validates kernels via
 the Pallas interpreter); on a TPU backend the compiled kernels run natively.
+
+The page copy helpers move whole KV pages between the device page pool
+(``[npages, page, ...]``, the buffer the paged decode kernel indexes through
+block tables) and a host pool (numpy — host memory on every backend; on a
+TPU host this is the pinned staging buffer). They are the data plane of
+serving.kv_offload's two-tier allocator.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.decode_attention import paged_decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -35,3 +43,47 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, context_lens, *,
     return paged_decode_attention_pallas(
         q, k_pages, v_pages, block_tables, context_lens, window=window,
         interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# KV page migration (two-tier host offloading data plane)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def gather_kv_pages(pages: jax.Array, page_ids: jax.Array) -> jax.Array:
+    """Read pages ``page_ids`` out of a ``[npages, page, ...]`` pool."""
+    return jnp.take(pages, page_ids, axis=0)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_kv_pages(pages: jax.Array, page_ids: jax.Array,
+                     values: jax.Array) -> jax.Array:
+    """Write ``values`` (``[n, page, ...]``) into pool frames ``page_ids``.
+    The pool buffer is donated: XLA updates the frames in place instead of
+    rematerializing a multi-GB pool per migration batch. Batch one
+    iteration's migrations into a single call."""
+    return pages.at[page_ids].set(values)
+
+
+def copy_pages_to_host(device_pages: jax.Array, device_ids,
+                       host_pool: np.ndarray, host_ids) -> None:
+    """Swap-out: device frames -> host pool slots (in place on the host
+    side; the device pool is unchanged — its frames get recycled by the
+    allocator)."""
+    if len(device_ids) == 0:
+        return
+    got = gather_kv_pages(device_pages, jnp.asarray(device_ids, jnp.int32))
+    host_pool[np.asarray(host_ids)] = np.asarray(got)
+
+
+def copy_pages_from_host(host_pool: np.ndarray, host_ids,
+                         device_pages: jax.Array, device_ids) -> jax.Array:
+    """Swap-in: host pool slots -> device frames. Returns the updated device
+    pool (functional, jit-compatible scatter)."""
+    if len(device_ids) == 0:
+        return device_pages
+    vals = jnp.asarray(host_pool[np.asarray(host_ids)],
+                       dtype=device_pages.dtype)
+    return scatter_kv_pages(device_pages, jnp.asarray(device_ids, jnp.int32),
+                            vals)

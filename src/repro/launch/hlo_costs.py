@@ -35,7 +35,28 @@ _DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
 _SHAPE_RE = re.compile(r"(%s)\[([0-9,]*)\]" % "|".join(_DTYPE_BYTES))
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
 _OPCODE_RE = re.compile(r"^(?:\([^)]*\)|[\w\[\]\{\},.\- ]+?)\s+([\w\-]+)\(")
-_OPERANDS_RE = re.compile(r"\(((?:%[\w\.\-]+(?:,\s*)?)+)\)")
+_OPERAND_NAME_RE = re.compile(r"%[\w\.\-]+")
+
+
+def _parse_operands(after: str) -> list[str]:
+    """Operand names from the text following the opcode. Handles both operand
+    list styles XLA prints: bare ``(%a, %b)`` and typed
+    ``(f32[128,256]{1,0} %a, (f32[2], s32[]) %b)`` — the region is delimited
+    by the *balanced* closing paren so tuple-typed operands stay inside."""
+    i = after.find("(")
+    if i < 0:
+        return []
+    depth = 0
+    j = len(after)
+    for k in range(i, len(after)):
+        if after[k] == "(":
+            depth += 1
+        elif after[k] == ")":
+            depth -= 1
+            if depth == 0:
+                j = k
+                break
+    return _OPERAND_NAME_RE.findall(after[i + 1:j])
 _CALLS_RE = re.compile(r"calls=(%[\w\.\-]+)")
 _WHILE_RE = re.compile(r"condition=(%[\w\.\-]+), body=(%[\w\.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
@@ -145,13 +166,10 @@ def parse_module(hlo: str) -> dict[str, Computation]:
         opcode = om.group(1) if om else ""
         # result type = text before the opcode token
         result = rest[: om.start(1)] if om else rest
-        # operands: first (%...) group after the opcode
+        # operands: the balanced (...) group after the opcode
         operands: list[str] = []
         if om:
-            after = rest[om.end(1):]
-            pm = _OPERANDS_RE.match(after)
-            if pm:
-                operands = [o.strip() for o in pm.group(1).split(",")]
+            operands = _parse_operands(rest[om.end(1):])
         cur.ops.append(Op(name, opcode, result, operands, rest, line))
         if "ENTRY" in raw.split("=")[0]:
             comps["__entry__"] = cur
@@ -224,8 +242,22 @@ def _multipliers(comps: dict[str, Computation], entry: Computation,
     return dict(mult)
 
 
+_INT_DTYPES = {"s32", "u32", "s64", "u64", "s16", "u16", "s8", "u8", "pred"}
+
+
+def _result_dtype(text: str) -> str:
+    m = _SHAPE_RE.search(text)
+    return m.group(1) if m else ""
+
+
 def _op_flops(op: Op, defs: dict[str, str]) -> float:
     if op.opcode in _ZERO_FLOP or not op.opcode:
+        return 0.0
+    # Integer/predicate arithmetic is loop control and index math (scan trip
+    # counters, while conditions, dynamic-slice offsets) — not floating-point
+    # work. Counting it breaks scan/unrolled flop equivalence: the unrolled
+    # program has no loop-control ops at all.
+    if op.opcode in _ELEMENTWISE and _result_dtype(op.result) in _INT_DTYPES:
         return 0.0
     elems = _shape_elems(op.result)
     if op.opcode == "dot":

@@ -9,14 +9,23 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape: tuple, axes: tuple):
+    """jax.make_mesh across jax versions: axis_types/AxisType only exist on
+    newer releases; older ones default every axis to Auto anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods = 512
     chips (pod, data, model). Nothing binds to pod=2 — the same rules extend
     to any pod count."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_mesh_from_spec(spec: str):
@@ -29,5 +38,4 @@ def make_mesh_from_spec(spec: str):
         axes = ("pod", "data", "model")
     else:
         raise ValueError(f"mesh spec {spec!r}")
-    return jax.make_mesh(dims, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return make_mesh_compat(dims, axes)

@@ -46,6 +46,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--ttft-slo-ms", type=float, default=500.0)
     ap.add_argument("--tpot-slo-ms", type=float, default=100.0)
     ap.add_argument("--hbm-gb", type=float, default=0.05)
+    ap.add_argument("--host-kv-gb", type=float, default=0.0,
+                    help="pinned-host KV pool (two-tier KV offloading); "
+                         "0 disables the host tier")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--peer", action="store_true",
@@ -55,7 +58,8 @@ def main(argv=None) -> dict:
     cfg = reduce_config(get_config(args.arch))
     hw = PRESETS[args.hw]
     ecfg = EngineConfig(max_batch=args.max_batch, max_seq=args.max_seq,
-                        hbm_budget_bytes=args.hbm_gb * 1e9)
+                        hbm_budget_bytes=args.hbm_gb * 1e9,
+                        host_kv_bytes=args.host_kv_gb * 1e9)
     slos = [0.002 * k for k in range(1, 120)]
     eng = build_engine("e0", cfg, hw, ecfg, slos)
     peers = []
@@ -80,6 +84,7 @@ def main(argv=None) -> dict:
     summary = {k: v for k, v in out.items() if k != "per_request"}
     summary["final_interval"] = (None if eng.interval >= 10**9
                                  else eng.interval)
+    summary["host_kv_peak_pages"] = eng.host_kv_peak_pages
     print(json.dumps(summary, indent=1))
     return out
 

@@ -52,7 +52,7 @@ def shardings(
 ) -> Any:
     """NamedSharding tree. memory_kind_fn(path)-> kind lets the offload plan
     mark specific subtrees pinned_host."""
-    flat, treedef = jax.tree.flatten_with_path(
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
         tree, is_leaf=lambda x: isinstance(x, TensorSpec))
     out = []
     for path, spec in flat:

@@ -26,13 +26,14 @@ from repro.core.coordinator import (InstanceState, coordinate,
                                     max_interval_for_memory)
 from repro.core.hardware import HardwareModel
 from repro.core.interval import (LayerTimes, NO_OFFLOAD, OffloadPlan,
-                                 iter_time_with_interval)
+                                 iter_time_with_interval_kv)
 from repro.core.memory_manager import (OffloadRuntime, split_model_params,
                                        split_stacked)
 from repro.core.record import PerformanceRecord
 from repro.models.model import Model
 from repro.models.transformer import pattern_info
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
+from repro.serving.kv_offload import SwapScheduler, TieredKVAllocator
 from repro.serving.request import Request, State
 
 
@@ -43,6 +44,10 @@ class EngineConfig:
     hbm_budget_bytes: float = 16e9
     page_size: int = 16
     greedy: bool = True          # greedy sampling
+    # Two-tier KV offloading (serving.kv_offload): pinned-host page pool
+    # budget. 0 disables the host tier — admission then falls back to the
+    # device-only behavior (wait for pages).
+    host_kv_bytes: float = 0.0
 
 
 class ServingEngine:
@@ -79,9 +84,11 @@ class ServingEngine:
         weight_free = (ecfg.hbm_budget_bytes
                        - OffloadPlan(self.num_units, NO_OFFLOAD)
                        .device_bytes(self.unit_bytes))
-        self.allocator = PagedKVAllocator(
-            max(int(weight_free), 0),
+        self.kv = TieredKVAllocator(
+            max(int(weight_free), 0), ecfg.host_kv_bytes,
             PageConfig(ecfg.page_size, bytes_per_token=kv_tok))
+        self.swap = SwapScheduler(self.kv)
+        self.host_kv_peak_pages = 0
 
         self._runtime: dict[int, OffloadRuntime] = {}
         self._jit_decode: dict[int, Any] = {}
@@ -90,6 +97,11 @@ class ServingEngine:
         self._caches: Any = None          # split layout for current interval
 
     # ------------------------------------------------------------------ plan --
+    @property
+    def allocator(self) -> PagedKVAllocator:
+        """Device-tier page pool (back-compat accessor)."""
+        return self.kv.device
+
     def _plan(self, interval: int) -> OffloadPlan:
         return OffloadPlan(self.num_units, interval)
 
@@ -98,6 +110,14 @@ class ServingEngine:
         iteration (coordinator output). Re-splits params/caches lazily."""
         if interval == self.interval:
             return
+        weight_free_new = (self.ecfg.hbm_budget_bytes
+                           - self._plan(interval).device_bytes(self.unit_bytes))
+        if not self.kv.can_resize_device(max(int(weight_free_new), 0)):
+            # Growing the resident set would orphan live KV pages (host pool
+            # cannot absorb the overflow): keep the current interval. The
+            # coordinator path never gets here — max_interval_for_memory
+            # already excludes such intervals.
+            return
         old_rt = self._runtime.get(self.interval)
         if self._caches is not None and old_rt is not None:
             from repro.core.memory_manager import merge_model_params
@@ -105,18 +125,12 @@ class ServingEngine:
                                         old_rt.plan)["blocks"]
             self._caches = split_stacked(merged, self._plan(interval))
         self.interval = interval
-        # re-account KV budget: resident bytes changed
-        kv_tok = max(costs.kv_cache_bytes(self.cfg, 1, 1,
-                                          self.model.virtual_kv), 1)
-        weight_free = (self.ecfg.hbm_budget_bytes
-                       - self._plan(interval).device_bytes(self.unit_bytes))
-        used = {rid: pages for rid, pages in self.allocator._by_req.items()}
-        self.allocator = PagedKVAllocator(
-            max(int(weight_free), 0), PageConfig(self.ecfg.page_size, kv_tok))
-        for rid, pages in used.items():
-            self.allocator._by_req[rid] = [
-                self.allocator._free.pop() for _ in pages
-                if self.allocator._free]
+        # re-account KV budget: resident bytes changed. A shrinking device
+        # pool demotes KV pages host-ward; the write-back bytes are charged
+        # to the next iteration's link budget by the swap scheduler.
+        demoted = self.kv.resize_device(max(int(weight_free_new), 0))
+        if demoted:
+            self.swap.note_demotions(demoted)
 
     def _rt(self, interval: int) -> OffloadRuntime:
         if interval not in self._runtime:
@@ -128,6 +142,13 @@ class ServingEngine:
         return self._runtime[interval]
 
     # ------------------------------------------------------------ admission --
+    def _active_rids(self) -> list[int]:
+        return [r.rid for r in self.slot_req if r is not None]
+
+    def _min_active_tpot(self) -> float:
+        slos = [r.tpot_slo_s for r in self.slot_req if r is not None]
+        return min(slos) if slos else float("inf")
+
     def instance_state(self, idle: bool | None = None) -> InstanceState:
         waiting = self.queue[0] if self.queue else None
         if waiting is not None:
@@ -142,14 +163,18 @@ class ServingEngine:
             self.num_units, self.unit_bytes,
             self.ecfg.hbm_budget_bytes
             - self.allocator.used_pages * self.allocator.page_bytes)
+        kv_stream = self.swap.streamed_bytes(self._active_rids())
+        kv_out = self.swap.pending_out_bytes()
         return InstanceState(
             name=self.name, num_units=self.num_units,
             unit_bytes=self.unit_bytes,
-            t_iter_s=iter_time_with_interval(
-                times, self.interval if self.interval else NO_OFFLOAD),
+            t_iter_s=iter_time_with_interval_kv(
+                times, self.interval if self.interval else NO_OFFLOAD,
+                kv_stream, kv_out),
             min_interval=min_i, max_interval=max_i,
             idle=idle if idle is not None else self._active_batch() == 0
-            and not self.queue)
+            and not self.queue,
+            kv_bytes_per_iter=kv_stream + kv_out)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -183,12 +208,50 @@ class ServingEngine:
                                      f"max {max_i}")
                 self.rejected.append(self.queue.pop(0))
                 continue
-            if self.allocator.alloc(req.rid, total) is None:
+            if self.kv.alloc(req.rid, total, allow_host=False) is None \
+                    and not self._spill_admit(req, total):
                 return  # wait for memory
             self.queue.pop(0)
             self._prefill_into_slot(req, free_slots[0],
                                     max(min_i, self.interval
                                         if self.interval < NO_OFFLOAD else min_i))
+
+    def _spill_admit(self, req: Request, total: int) -> bool:
+        """§4.2 admission, extended for the host KV tier: the device pool is
+        full, but the request can be admitted with its cold prefix on host —
+        provided the streamed KV traffic keeps every active request's TPOT
+        and the new request's TTFT feasible at the current interval. The
+        stream rides the same link as weight prefetch, so feasibility is
+        evaluated with the combined-traffic iteration time."""
+        need = self.kv.device.pages_for(total)
+        n_host = need - self.kv.device.free_pages
+        if n_host <= 0 or n_host > self.kv.host.free_pages:
+            return False                       # no host room: wait
+        pb = self.kv.page_bytes
+        iv = self.interval if self.interval else NO_OFFLOAD
+        streamed_after = (self.swap.streamed_bytes(self._active_rids())
+                          + n_host * pb)
+        times_d = self.times_fn(self._active_batch() + 1,
+                                self.ecfg.max_seq, "decode")
+        dt = iter_time_with_interval_kv(times_d, iv, streamed_after,
+                                        self.swap.pending_out_bytes())
+        tpot_bound = min(self._min_active_tpot(), req.tpot_slo_s)
+        if dt > tpot_bound * (1 + 1e-9):
+            return False                       # streaming would break TPOT
+        if self._modeled_ttft(req, n_host * pb) > req.ttft_slo_s * (1 + 1e-9):
+            return False                       # spill write-back breaks TTFT
+        refs = self.kv.alloc(req.rid, total, allow_host=True)
+        assert refs is not None
+        return True
+
+    def _modeled_ttft(self, req: Request, host_spill_bytes: float) -> float:
+        """Prefill latency: the spilled KV prefix is written back (d2h)
+        through the link the weight prefetches share."""
+        times = self.times_fn(1, req.prompt_len, "prefill")
+        pre_i = max(self.rec["prefill"].lookup(req.ttft_slo_s, 1,
+                                               req.prompt_len), 1)
+        return iter_time_with_interval_kv(times, min(pre_i, NO_OFFLOAD),
+                                          0.0, host_spill_bytes)
 
     # -------------------------------------------------------------- prefill --
     def _prefill_into_slot(self, req: Request, slot: int, interval: int
@@ -206,11 +269,8 @@ class ServingEngine:
         logits, caches1, _ = self._jit_prefill[self.interval](
             self._params_split[self.interval], inputs,
             cache_len=self.ecfg.max_seq)
-        # modeled prefill latency = TTFT
-        times = self.times_fn(1, req.prompt_len, "prefill")
-        pre_i = self.rec["prefill"].lookup(req.ttft_slo_s, 1, req.prompt_len)
-        pre_i = max(pre_i, 1)
-        ttft = iter_time_with_interval(times, min(pre_i, NO_OFFLOAD))
+        # modeled prefill latency = TTFT (same formula admission checked)
+        ttft = self._modeled_ttft(req, self.kv.host_bytes_of(req.rid))
         req.ttft_s = ttft
         self.clock_s += ttft
 
@@ -264,8 +324,15 @@ class ServingEngine:
             self.set_interval(NO_OFFLOAD)
 
         self._admit()
+        self.host_kv_peak_pages = max(self.host_kv_peak_pages,
+                                      self.kv.host.used_pages)
         if self._active_batch() == 0:
             return
+        # KV tier activity of this iteration: promote host pages into freed
+        # device frames, stream the rest in for attention, write back any
+        # pending demotions. Promotion is never a traffic spike: a promoted
+        # page's one-time copy replaces its recurring streamed copy.
+        plan = self.swap.plan_iteration(self._active_rids())
         rt = self._rt(self.interval)
         fn = self._jit_decode[self.interval]
         logits, self._caches = fn(
@@ -275,7 +342,8 @@ class ServingEngine:
 
         times = self.times_fn(self._active_batch(), self.ecfg.max_seq,
                               "decode")
-        dt = iter_time_with_interval(times, self.interval)
+        dt = iter_time_with_interval_kv(times, self.interval,
+                                        plan.kv_in_bytes, plan.kv_out_bytes)
         self.clock_s += dt
 
         for slot in range(self.ecfg.max_batch):
@@ -294,7 +362,7 @@ class ServingEngine:
                 self.finished.append(req)
                 self.active[slot] = False
                 self.slot_req[slot] = None
-                self.allocator.free(req.rid)
+                self.kv.free(req.rid)
 
     def run(self, requests: list[Request], max_iters: int = 10_000,
             peers=None, link_bw=None) -> dict:

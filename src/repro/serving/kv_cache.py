@@ -45,28 +45,53 @@ class PagedKVAllocator:
     def pages_for(self, tokens: int) -> int:
         return -(-tokens // self.pcfg.page_size)
 
+    def pages_of(self, rid: int) -> list[int]:
+        return list(self._by_req.get(rid, []))
+
     # ---- allocation ----------------------------------------------------------
-    def alloc(self, rid: int, tokens: int) -> list[int] | None:
-        need = self.pages_for(tokens)
-        if need > self.free_pages:
+    def alloc_pages(self, rid: int, n: int) -> list[int] | None:
+        """Claim ``n`` specific pages for ``rid`` (n == 0 is a valid no-op)."""
+        if n > self.free_pages:
             return None
-        pages = [self._free.pop() for _ in range(need)]
-        self._by_req.setdefault(rid, []).extend(pages)
+        pages = [self._free.pop() for _ in range(n)]
+        if pages:
+            self._by_req.setdefault(rid, []).extend(pages)
         return pages
+
+    def release_pages(self, rid: int, pages: list[int]) -> None:
+        """Return specific pages of ``rid`` to the free list (migration).
+        Raises if a page is not owned by ``rid`` — the free list must never
+        hold duplicates."""
+        owned = self._by_req.get(rid, [])
+        for p in pages:
+            owned.remove(p)      # ValueError on foreign/double release
+            self._free.append(p)
+        if not owned:
+            self._by_req.pop(rid, None)
+
+    def alloc(self, rid: int, tokens: int) -> list[int] | None:
+        return self.alloc_pages(rid, self.pages_for(tokens))
 
     def extend(self, rid: int, new_total_tokens: int) -> bool:
         have = len(self._by_req.get(rid, []))
         need = self.pages_for(new_total_tokens) - have
         if need <= 0:
             return True
-        if need > self.free_pages:
-            return False
-        self._by_req[rid].extend(self._free.pop() for _ in range(need))
-        return True
+        return self.alloc_pages(rid, need) is not None
 
     def free(self, rid: int) -> None:
+        """Release every page of ``rid``; double-free is a no-op."""
         for p in self._by_req.pop(rid, []):
             self._free.append(p)
+
+    def check_invariants(self) -> None:
+        """Free list and per-request lists partition [0, total_pages)."""
+        free = self._free
+        assert len(set(free)) == len(free), "duplicate pages in free list"
+        held = [p for pages in self._by_req.values() for p in pages]
+        assert len(set(held)) == len(held), "page owned twice"
+        assert not set(free) & set(held), "page both free and owned"
+        assert len(free) + len(held) == self.total_pages
 
     def block_table(self, rid: int, max_pages: int) -> np.ndarray:
         pages = self._by_req.get(rid, [])

@@ -1,0 +1,347 @@
+"""Two-tier SLO-aware KV-cache host offloading.
+
+The paper offloads model *state*; the seed engine only tiered weights — KV
+pages never left HBM, so max context/batch stayed HBM-bound however small
+the offloading interval got (Fig. 14 saturates). This subsystem extends the
+paged KV allocator with a pinned-host tier:
+
+  * ``HostKVPool``      — host-side page pool, same page geometry as the
+                          device pool, with an optional numpy backing buffer
+                          (host memory on every backend; the pinned staging
+                          area on a real TPU host).
+  * ``TieredKVAllocator`` — per-request block tables spanning both tiers.
+                          Pages are ordered oldest-first; the host tier holds
+                          the *front* (cold prefix) so the decode write path
+                          always lands on device frames. Page migration
+                          (``swap_out`` / ``swap_in``) rewrites refs and
+                          reports (src, dst) frame pairs for the data plane
+                          (``kernels.ops.copy_pages_to_host/from_host``).
+  * ``SwapScheduler``   — per-iteration planner: promotes host pages into
+                          freed device frames, streams the still-host-resident
+                          KV of active requests in for attention, and charges
+                          every byte to the same link budget as weight
+                          prefetch (``interval.iter_time_with_interval_kv``,
+                          ``coordinator.InstanceState.kv_bytes_per_iter``).
+
+Latency semantics (kept SLO-exact, property-tested against the event
+simulator): swap-in gates layer-0 compute; write-back is issued next and
+queues the weight prefetches behind it; weight transfers then follow the
+Fig. 7 group-start schedule. No byte is double-counted: streamed pages do
+not change residency, promoted/demoted pages move exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serving.kv_cache import PageConfig, PagedKVAllocator
+
+DEVICE = "device"
+HOST = "host"
+
+
+@dataclasses.dataclass(frozen=True)
+class PageRef:
+    tier: str
+    page: int
+
+
+class HostKVPool(PagedKVAllocator):
+    """Host-memory page pool mirroring the device pool geometry."""
+
+    def make_pool_buffer(self, page_shape: tuple, dtype=np.float32
+                         ) -> np.ndarray:
+        """Backing store for real page contents (numpy = host memory)."""
+        return np.zeros((self.total_pages, *page_shape), dtype)
+
+
+@dataclasses.dataclass
+class Migration:
+    """One page move; src/dst are frame ids in the respective pools."""
+    rid: int
+    src_tier: str
+    src_page: int
+    dst_page: int
+
+
+class TieredKVAllocator:
+    """Paged KV accounting across device HBM + pinned host memory.
+
+    The device pool is the one the paged decode kernel indexes through block
+    tables; the host pool absorbs the cold prefix of requests whose KV does
+    not fit on device. Per-request refs are kept in token order.
+    """
+
+    def __init__(self, device_bytes: float, host_bytes: float,
+                 pcfg: PageConfig):
+        self.pcfg = pcfg
+        self.device = PagedKVAllocator(max(int(device_bytes), 0), pcfg)
+        self.host = HostKVPool(max(int(host_bytes), 0), pcfg)
+        self._refs: dict[int, list[PageRef]] = {}
+
+    # ---- queries -------------------------------------------------------------
+    @property
+    def page_bytes(self) -> int:
+        return self.device.page_bytes
+
+    def refs(self, rid: int) -> list[PageRef]:
+        return list(self._refs.get(rid, []))
+
+    def device_pages_of(self, rid: int) -> list[int]:
+        return [r.page for r in self._refs.get(rid, []) if r.tier == DEVICE]
+
+    def host_pages_of(self, rid: int) -> list[int]:
+        return [r.page for r in self._refs.get(rid, []) if r.tier == HOST]
+
+    def host_bytes_of(self, rid: int) -> int:
+        return len(self.host_pages_of(rid)) * self.page_bytes
+
+    def max_allocatable_tokens(self, include_host: bool = True) -> int:
+        """Fig. 14's metric, lifted by the host tier."""
+        pages = self.device.free_pages
+        if include_host:
+            pages += self.host.free_pages
+        return pages * self.pcfg.page_size
+
+    # ---- allocation ----------------------------------------------------------
+    def alloc(self, rid: int, tokens: int, allow_host: bool = True
+              ) -> list[PageRef] | None:
+        """Reserve the whole allocation up front, device-preferred; overflow
+        spills to the host tier at the *front* (oldest positions) so decode
+        writes always hit device frames. None if the two tiers cannot hold
+        it (nothing is claimed on failure)."""
+        need = self.device.pages_for(tokens)
+        n_host = max(need - self.device.free_pages, 0)
+        if n_host > 0 and not allow_host:
+            return None
+        if n_host > self.host.free_pages:
+            return None
+        hp = self.host.alloc_pages(rid, n_host)
+        dp = self.device.alloc_pages(rid, need - n_host)
+        assert hp is not None and dp is not None
+        refs = [PageRef(HOST, p) for p in hp] + [PageRef(DEVICE, p)
+                                                 for p in dp]
+        if refs:
+            self._refs.setdefault(rid, []).extend(refs)
+        return refs
+
+    def extend(self, rid: int, new_total_tokens: int,
+               allow_host: bool = True, on_demote=None
+               ) -> list[Migration] | None:
+        """Grow ``rid`` to ``new_total_tokens``. New (tail) pages must be
+        device frames; if the device pool is exhausted, the request's own
+        oldest device page is demoted to host to vacate a frame — which the
+        very next tail allocation may recycle. A data plane holding real
+        page buffers must therefore copy demoted pages out *synchronously*
+        via ``on_demote(migration)``, which fires while the vacated frame is
+        still unclaimed; the returned list is for traffic accounting only.
+        None if the growth cannot be satisfied (nothing is changed then
+        beyond already-performed demotions)."""
+        have = len(self._refs.get(rid, []))
+        need = self.device.pages_for(new_total_tokens) - have
+        if need <= 0:
+            return []
+        migrations: list[Migration] = []
+        added: list[int] = []
+
+        def rollback():
+            # undo this call's tail allocations so the refs list still
+            # matches the request's token count (demotions stay: the data
+            # plane may already have copied them)
+            for p in reversed(added):
+                self.device.release_pages(rid, [p])
+                ref = self._refs[rid].pop()
+                assert ref.tier == DEVICE and ref.page == p
+            return None
+
+        for _ in range(need):
+            if self.device.free_pages == 0:
+                if not allow_host:
+                    return rollback()
+                moved = self.swap_out(rid, 1)
+                if not moved:
+                    return rollback()
+                if on_demote is not None:
+                    for m in moved:
+                        on_demote(m)
+                migrations.extend(moved)
+            dp = self.device.alloc_pages(rid, 1)
+            assert dp is not None
+            self._refs.setdefault(rid, []).append(PageRef(DEVICE, dp[0]))
+            added.append(dp[0])
+        return migrations
+
+    def free(self, rid: int) -> None:
+        self.device.free(rid)
+        self.host.free(rid)
+        self._refs.pop(rid, None)
+
+    # ---- migration -----------------------------------------------------------
+    def swap_out(self, rid: int, n_pages: int) -> list[Migration]:
+        """Demote ``rid``'s ``n_pages`` oldest device pages to host. Returns
+        the moves actually performed (host pool may fill up)."""
+        moves: list[Migration] = []
+        refs = self._refs.get(rid, [])
+        for idx, ref in enumerate(refs):
+            if len(moves) >= n_pages:
+                break
+            if ref.tier != DEVICE:
+                continue
+            hp = self.host.alloc_pages(rid, 1)
+            if hp is None:
+                break
+            self.device.release_pages(rid, [ref.page])
+            refs[idx] = PageRef(HOST, hp[0])
+            moves.append(Migration(rid, DEVICE, ref.page, hp[0]))
+        return moves
+
+    def swap_in(self, rid: int, n_pages: int) -> list[Migration]:
+        """Promote ``rid``'s ``n_pages`` oldest host pages back to device."""
+        moves: list[Migration] = []
+        refs = self._refs.get(rid, [])
+        for idx, ref in enumerate(refs):
+            if len(moves) >= n_pages:
+                break
+            if ref.tier != HOST:
+                continue
+            dp = self.device.alloc_pages(rid, 1)
+            if dp is None:
+                break
+            self.host.release_pages(rid, [ref.page])
+            refs[idx] = PageRef(DEVICE, dp[0])
+            moves.append(Migration(rid, HOST, ref.page, dp[0]))
+        return moves
+
+    def can_resize_device(self, new_total_bytes: float) -> bool:
+        """Would ``resize_device`` succeed? False when the shrink's overflow
+        exceeds free host capacity (resize_device would raise)."""
+        new_pages = max(int(new_total_bytes), 0) // self.page_bytes
+        used = sum(len(self.device_pages_of(rid)) for rid in self._refs)
+        return used - new_pages <= self.host.free_pages
+
+    def resize_device(self, new_total_bytes: float) -> int:
+        """Rebuild the device pool for a new byte budget (the offloading
+        interval changed the resident weight set). Existing device pages are
+        re-assigned to fresh frames; overflow demotes host-ward, largest
+        holders first. Returns the number of demoted pages.
+
+        Accounting-only: callers holding real page buffers must drain them
+        before resizing (the engine's modeled path holds none).
+        """
+        if not self.can_resize_device(new_total_bytes):
+            # validated up front so failure never leaves partial state
+            raise RuntimeError("device KV overflow exceeds host capacity")
+        old_used = {rid: len(self.device_pages_of(rid)) for rid in self._refs}
+        new_dev = PagedKVAllocator(max(int(new_total_bytes), 0), self.pcfg)
+        demand = sum(old_used.values())
+        demoted = 0
+        # shed overflow: take from the requests holding the most device pages
+        while demand > new_dev.total_pages:
+            over = demand - new_dev.total_pages
+            rid = max(old_used, key=old_used.get)
+            take = min(over, old_used[rid])
+            hp = self.host.alloc_pages(rid, take)
+            assert hp is not None and take > 0   # entry check guarantees room
+            refs = self._refs[rid]
+            moved = 0
+            for idx, ref in enumerate(refs):
+                if moved >= take:
+                    break
+                if ref.tier == DEVICE:
+                    refs[idx] = PageRef(HOST, hp[moved])
+                    moved += 1
+            old_used[rid] -= take
+            demand -= take
+            demoted += take
+        # re-assign surviving device pages to fresh frames
+        for rid, count in old_used.items():
+            dp = new_dev.alloc_pages(rid, count)
+            assert dp is not None
+            it = iter(dp)
+            refs = self._refs[rid]
+            for idx, ref in enumerate(refs):
+                if ref.tier == DEVICE:
+                    refs[idx] = PageRef(DEVICE, next(it))
+        self.device = new_dev
+        return demoted
+
+    # ---- block tables --------------------------------------------------------
+    def device_block_table(self, rid: int, max_pages: int) -> np.ndarray:
+        """Block table for the paged decode kernel. Valid only when the
+        request is fully device-resident (swap_in first)."""
+        refs = self._refs.get(rid, [])
+        assert all(r.tier == DEVICE for r in refs), \
+            "host-resident pages: swap_in before building the kernel table"
+        out = np.zeros((max_pages,), np.int32)
+        pages = [r.page for r in refs]
+        out[: len(pages)] = pages[:max_pages]
+        return out
+
+    def check_invariants(self) -> None:
+        self.device.check_invariants()
+        self.host.check_invariants()
+        for rid, refs in self._refs.items():
+            dev = sorted(p for r in refs if r.tier == DEVICE
+                         for p in [r.page])
+            host = sorted(p for r in refs if r.tier == HOST
+                          for p in [r.page])
+            assert dev == sorted(self.device.pages_of(rid))
+            assert host == sorted(self.host.pages_of(rid))
+
+
+# ---------------------------------------------------------------------------
+# Per-iteration swap planning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SwapPlan:
+    """Link traffic of one inference iteration's KV tier activity."""
+    kv_in_bytes: float = 0.0      # host->device: promotions + streamed KV
+    kv_out_bytes: float = 0.0     # device->host: demotions / spill write-back
+    streamed_bytes: float = 0.0   # recurring share of kv_in (no residency change)
+    promotions: list[Migration] = dataclasses.field(default_factory=list)
+
+
+class SwapScheduler:
+    """Decides, per iteration, which pages move between tiers.
+
+    Policy: freed device frames are back-filled by promoting the oldest host
+    pages of active requests (cheapest first: the request with the fewest
+    host pages clears its streaming debt soonest); whatever stays on host is
+    streamed in for attention each iteration. Demotions queued by interval
+    changes or tail growth are charged as write-back traffic.
+    """
+
+    def __init__(self, kv: TieredKVAllocator):
+        self.kv = kv
+        self._pending_out_pages = 0
+
+    def note_demotions(self, n_pages: int) -> None:
+        """Register demotions performed by resize/extend since last plan."""
+        self._pending_out_pages += n_pages
+
+    def pending_out_bytes(self) -> float:
+        """Write-back traffic already queued for the next iteration."""
+        return self._pending_out_pages * self.kv.page_bytes
+
+    def streamed_bytes(self, active_rids: list[int]) -> float:
+        return float(sum(self.kv.host_bytes_of(r) for r in active_rids))
+
+    def plan_iteration(self, active_rids: list[int]) -> SwapPlan:
+        plan = SwapPlan()
+        plan.kv_out_bytes = self._pending_out_pages * self.kv.page_bytes
+        self._pending_out_pages = 0
+        # promote into free device frames, cheapest request first
+        order = sorted((r for r in active_rids if self.kv.host_pages_of(r)),
+                       key=lambda r: len(self.kv.host_pages_of(r)))
+        for rid in order:
+            if self.kv.device.free_pages == 0:
+                break
+            moves = self.kv.swap_in(rid, self.kv.device.free_pages)
+            plan.promotions.extend(moves)
+            plan.kv_in_bytes += len(moves) * self.kv.page_bytes
+        plan.streamed_bytes = self.streamed_bytes(active_rids)
+        plan.kv_in_bytes += plan.streamed_bytes
+        return plan

@@ -1,0 +1,83 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Tier-1 must run on a bare ``jax + numpy + pytest`` container. When hypothesis
+is available the property tests use it (shrinking, coverage-guided search);
+otherwise this shim replays each ``@given`` test over a fixed pseudo-random
+sample of the declared strategies, always including the strategy endpoints so
+boundary cases stay covered. Strategies implemented: the subset the test
+suite uses (floats / integers / lists).
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample, endpoints=()):
+        self._sample = sample
+        self.endpoints = tuple(endpoints)
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+class _St:
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)),
+                         endpoints=(min_value, max_value))
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)),
+                         endpoints=(min_value, max_value))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10,
+              **_kw) -> _Strategy:
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.sample(rng) for _ in range(n)]
+        return _Strategy(sample,
+                         endpoints=([e] * max(min_size, 1)
+                                    for e in elem.endpoints))
+
+
+st = _St()
+
+
+def settings(max_examples: int = 100, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        n = getattr(fn, "_fallback_max_examples", 100)
+
+        def runner():
+            names = list(strategies)
+            # corner cases first: all combinations of strategy endpoints
+            corners = itertools.product(
+                *(list(strategies[k].endpoints) or [None] for k in names))
+            rng = np.random.default_rng(0)
+            done = 0
+            for combo in corners:
+                if done >= n:
+                    break
+                if any(v is None for v in combo):
+                    continue
+                fn(**dict(zip(names, combo)))
+                done += 1
+            while done < n:
+                fn(**{k: strategies[k].sample(rng) for k in names})
+                done += 1
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco

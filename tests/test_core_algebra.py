@@ -5,7 +5,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare container: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.baselines import (deepspeed_plan, flexgen_decision,
                                   flexgen_equivalent_interval,

@@ -126,8 +126,12 @@ _COLL_SCRIPT = textwrap.dedent("""
 
 
 def test_collectives_trip_weighted():
+    # JAX_PLATFORMS=cpu: the script forces 8 *host* devices; without the
+    # pin, a stripped env lets jax probe accelerator plugins (libtpu init
+    # can block for minutes waiting on the device lock).
     out = subprocess.run([sys.executable, "-c", _COLL_SCRIPT],
                          capture_output=True, text=True,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-2000:]
     assert "OK" in out.stdout

@@ -7,6 +7,10 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# compile-heavy (full JAX jit of models/kernels): excluded from the fast CI
+# tier, run in the nightly full suite
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

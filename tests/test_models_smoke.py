@@ -10,6 +10,10 @@ from repro.configs.reduced import reduce_config
 from repro.models.frontends import stub_embeddings
 from repro.models.model import build_model
 
+# compile-heavy (full JAX jit of models/kernels): excluded from the fast CI
+# tier, run in the nightly full suite
+pytestmark = pytest.mark.slow
+
 B, S = 2, 16
 
 

@@ -15,6 +15,10 @@ from repro.models.frontends import stub_embeddings
 from repro.models.model import build_model
 from repro.models.transformer import pattern_info
 
+# compile-heavy (full JAX jit of models/kernels): excluded from the fast CI
+# tier, run in the nightly full suite
+pytestmark = pytest.mark.slow
+
 B, S = 2, 12
 
 

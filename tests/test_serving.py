@@ -16,6 +16,10 @@ from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
 from repro.serving.request import Request
 
+# compile-heavy (full JAX jit of models/kernels): excluded from the fast CI
+# tier, run in the nightly full suite
+pytestmark = pytest.mark.slow
+
 
 def _mk_engine(name="e0", hbm_gb=0.05, max_batch=4, max_seq=48):
     cfg = reduce_config(get_config("qwen2.5-3b"), d_model=32, heads=2,

@@ -22,6 +22,7 @@ from repro.core.simulator import (schedule_deepspeed, schedule_for_interval,
                                   simulate_iteration, simulate_shared_bus)
 
 
+
 # ---------------------------------------------------------------------------
 # Paper §5.2: Select-N meets SLOs where DeepSpeed violates them
 # ---------------------------------------------------------------------------
@@ -199,6 +200,7 @@ def test_group_prefetch_dominates_one_layer_lookahead():
 # equivalent to the dense loss
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow          # compiles a full model forward
 def test_chunked_xent_matches_dense():
     import jax
     import jax.numpy as jnp
@@ -235,10 +237,11 @@ def test_chunked_xent_matches_dense():
 # Benchmark harness: every paper-figure module runs and its claims hold
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow          # each module runs the analytic benchmark suite
 @pytest.mark.parametrize("mod_name", [
     "fig2_layer_times", "fig4_estimation_error", "fig11_interval_sweep",
     "fig12_contention", "fig13_large_models", "fig14_max_length",
-    "table1_record",
+    "fig15_kv_tiering", "table1_record",
 ])
 def test_benchmark_module_claims(mod_name):
     import importlib

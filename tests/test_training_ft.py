@@ -10,6 +10,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs import LM_SHAPES, get_config
+from repro.launch.mesh import make_mesh_compat
 from repro.configs.base import ShapeSpec
 from repro.configs.reduced import reduce_config
 from repro.data.pipeline import DataConfig, SyntheticTokenStream, request_stream
@@ -21,6 +22,10 @@ from repro.training.compression import reduce_gradients
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_loop import (TrainConfig, build_train_step,
                                        init_train_state)
+
+# compile-heavy (full JAX jit of models/kernels): excluded from the fast CI
+# tier, run in the nightly full suite
+pytestmark = pytest.mark.slow
 
 CFG = reduce_config(get_config("deepseek-7b"), layers=2)
 SHAPE = ShapeSpec("tiny", 16, 2, "train")
@@ -63,8 +68,7 @@ def test_train_microbatch_accumulation_matches_big_batch():
 @pytest.mark.parametrize("mode", ["none", "bf16", "int8_ef"])
 def test_gradient_compression_modes(mode):
     devs = jax.devices()
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((1,), ("data",))
     g = {"w": jnp.linspace(-1, 1, 64).reshape(8, 8)}
 
     def f(gr):
@@ -80,8 +84,7 @@ def test_gradient_compression_modes(mode):
 def test_int8_error_feedback_converges():
     """With error feedback, repeated reductions of the same gradient have
     bounded accumulated bias (residual carried, not dropped)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((1,), ("data",))
     g = {"w": jnp.asarray([[1e-4, 1.0, -0.5, 0.37]] * 2)}
 
     def f(gr, err):
@@ -132,8 +135,7 @@ def test_elastic_restore_onto_new_mesh(tmp_path):
     params = model.init(jax.random.PRNGKey(3))
     d = str(tmp_path / "ck")
     ckpt.save_checkpoint(d, 1, params)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     rules = make_rules(CFG, mesh)
     shd = S.shardings(model.spec, mesh, rules)
     restored, _ = ckpt.restore_checkpoint(d, 1, S.abstract(model.spec), shd)
