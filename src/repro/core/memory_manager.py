@@ -99,22 +99,31 @@ def split_model_params(params: Params, plan: OffloadPlan) -> Params:
     return out
 
 
+def merge_stacked(split: Any, plan: OffloadPlan) -> Any:
+    """Inverse of split_stacked for array trees: placement sections back to
+    one [R, ...] stack in unit order. Sections may be None (the prefill path
+    returns None for empty placements) or zero-length arrays."""
+    g, i = plan.num_groups, plan.interval
+    res, off, tail = split["resident"], split["offloaded"], split["tail"]
+    if not plan.enabled or (res is None and off is None):
+        assert tail is not None
+        return tail
+    if res is None:          # interval == 1: every unit in a group offloaded
+        head = off
+    else:
+        head = jax.tree.map(
+            lambda r, o: jnp.concatenate([r, o[:, None]], axis=1)
+            .reshape(g * i, *r.shape[2:]), res, off)
+    if tail is None:
+        return head
+    return jax.tree.map(lambda h, t: jnp.concatenate([h, t], axis=0),
+                        head, tail)
+
+
 def merge_model_params(split: Params, plan: OffloadPlan) -> Params:
     """Inverse of split_model_params (arrays only) — checkpoint round-trips."""
-    blk = split["blocks"]
-    g, i = plan.num_groups, plan.interval
-
-    def merge(res, off, tail):
-        if plan.enabled:
-            head = jnp.concatenate([res, off[:, None]], axis=1)
-            head = head.reshape(g * i, *res.shape[2:])
-        else:
-            head = tail[:0]
-        return jnp.concatenate([head, tail], axis=0)
-
-    merged = jax.tree.map(merge, blk["resident"], blk["offloaded"], blk["tail"])
     out = dict(split)
-    out["blocks"] = merged
+    out["blocks"] = merge_stacked(split["blocks"], plan)
     return out
 
 
@@ -247,6 +256,59 @@ class OffloadRuntime:
         x = L.apply_norm(cfg, params_split["final_norm"], x)
         logits = T.lm_logits(cfg, params_split, x)[:, 0]
         return logits, new_caches
+
+    # ----- paged decode ---------------------------------------------------------
+    def paged_decode_step(self, params_split: Params, tokens: jax.Array,
+                          pos: jax.Array, pool: jax.Array,
+                          block_tables: jax.Array, context_lens: jax.Array,
+                          write_frames: jax.Array, write_offsets: jax.Array):
+        """One decode iteration through the physical KV page pool.
+
+        Same weight-placement scan as ``decode_step`` (the offloaded unit's
+        prefetch still overlaps the resident-unit compute), but instead of
+        carrying slot-dense caches the scan carries ``pool`` — the single
+        [frames, page, L, 2, vh, hd] buffer the paged Pallas kernel indexes
+        through ``block_tables``. Each unit writes the new token's K/V at
+        (write_frames, write_offsets) for its global layer index and attends
+        over ``context_lens`` tokens. Returns (logits, pool).
+        """
+        cfg, model = self.model.cfg, self.model
+        vkv = model.virtual_kv
+        pat = len(cfg.pattern)
+        interp = jax.default_backend() != "tpu"
+
+        def apply_unit(x, pslices, unit_idx, pool):
+            for j, blk in enumerate(cfg.pattern):
+                x, pool = T.apply_block_decode_paged(
+                    cfg, blk, pslices[j], x, pos, pool,
+                    unit_idx * pat + j, block_tables, context_lens,
+                    write_frames, write_offsets, vkv, interp)
+            return x, pool
+
+        x = T.embed_tokens(cfg, params_split, tokens[:, None])
+        blk = params_split["blocks"]
+        g, iv = self.plan.num_groups, self.plan.interval
+        if g > 0:
+            def group_body(carry, xs):
+                x, pool = carry
+                gi, res_p, off_p = xs
+                off_dev = _prefetch(off_p, self.device_shardings)
+                for j in range(iv - 1):
+                    pj = jax.tree.map(lambda t: t[j], res_p)
+                    x, pool = apply_unit(x, pj, gi * iv + j, pool)
+                x, pool = apply_unit(x, off_dev, gi * iv + (iv - 1), pool)
+                return (x, pool), None
+
+            (x, pool), _ = jax.lax.scan(
+                group_body, (x, pool),
+                (jnp.arange(g), blk["resident"], blk["offloaded"]))
+        n_tail = jax.tree.leaves(blk["tail"])[0].shape[0]
+        for t in range(n_tail):   # unrolled: static layer index per unit
+            pt = jax.tree.map(lambda a: a[t], blk["tail"])
+            x, pool = apply_unit(x, pt, g * iv + t, pool)
+        x = L.apply_norm(cfg, params_split["final_norm"], x)
+        logits = T.lm_logits(cfg, params_split, x)[:, 0]
+        return logits, pool
 
     # ----- prefill --------------------------------------------------------------
     def prefill(self, params_split: Params, inputs: dict, cache_len: int,

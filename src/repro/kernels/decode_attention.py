@@ -74,11 +74,25 @@ def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
                                   window: int = 0,
                                   interpret: bool = True) -> jax.Array:
     """q: [B,H,D]; pages: [npages, page, V, D]; block_tables: [B, nb] int32;
-    context_lens: [B] int32. Returns [B,H,D]."""
+    context_lens: [B] int32. Returns [B,H,D].
+
+    Padded batches are first-class: table entries past a request's last live
+    page may hold any value (they are clamped into the pool range before the
+    index map chases them and masked by ``context_lens``), and a row with
+    ``context_lens[b] <= 0`` — an idle batch slot — produces a zero output
+    instead of reading anything. ``context_lens`` is likewise clamped to the
+    table's capacity ``nb * page`` so an oversized length cannot index past
+    the last table column. Runs under the Pallas interpreter off-TPU
+    (``interpret=True``), which is how CPU CI executes it.
+    """
     b, h, d = q.shape
     npages, page, vh, _ = k_pages.shape
     nb = block_tables.shape[1]
     g = h // vh
+    # harden padded inputs: every table entry must be a valid frame id for
+    # the prefetch index map, every length must fit the table
+    block_tables = jnp.clip(block_tables.astype(jnp.int32), 0, npages - 1)
+    context_lens = jnp.clip(context_lens.astype(jnp.int32), 0, nb * page)
 
     kernel = functools.partial(
         _decode_kernel, scale=1.0 / math.sqrt(d), page=page, vh=vh, g=g, d=d,

@@ -66,6 +66,30 @@ def scatter_kv_pages(pages: jax.Array, page_ids: jax.Array,
     return pages.at[page_ids].set(values)
 
 
+def pack_token_pages(k_all: np.ndarray, v_all: np.ndarray, page_size: int,
+                     dtype=None) -> np.ndarray:
+    """Pack per-layer prefill KV into combined page values.
+
+    ``k_all``/``v_all``: [L, S, vh, hd] (global layer order). Returns
+    [n_pages, page, L, 2, vh, hd] — the trailing page is zero-padded past S
+    (decode fills those slots later). This is the value layout of the
+    engine's single physical page pool: one page holds every layer's K and V
+    for ``page_size`` consecutive token positions, so one ``scatter_kv_pages``
+    call lands a whole prefill.
+    """
+    L, S, vh, hd = k_all.shape
+    n = -(-S // page_size)
+    dt = dtype or k_all.dtype
+    out = np.zeros((n, page_size, L, 2, vh, hd), dt)
+    kt = np.zeros((n * page_size, L, vh, hd), dt)
+    vt = np.zeros((n * page_size, L, vh, hd), dt)
+    kt[:S] = np.transpose(k_all, (1, 0, 2, 3))
+    vt[:S] = np.transpose(v_all, (1, 0, 2, 3))
+    out[:, :, :, 0] = kt.reshape(n, page_size, L, vh, hd)
+    out[:, :, :, 1] = vt.reshape(n, page_size, L, vh, hd)
+    return out
+
+
 def copy_pages_to_host(device_pages: jax.Array, device_ids,
                        host_pool: np.ndarray, host_ids) -> None:
     """Swap-out: device frames -> host pool slots (in place on the host

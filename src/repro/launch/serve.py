@@ -49,6 +49,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--host-kv-gb", type=float, default=0.0,
                     help="pinned-host KV pool (two-tier KV offloading); "
                          "0 disables the host tier")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size in tokens (the paged decode kernel's "
+                         "block granularity)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--peer", action="store_true",
@@ -59,7 +62,8 @@ def main(argv=None) -> dict:
     hw = PRESETS[args.hw]
     ecfg = EngineConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                         hbm_budget_bytes=args.hbm_gb * 1e9,
-                        host_kv_bytes=args.host_kv_gb * 1e9)
+                        host_kv_bytes=args.host_kv_gb * 1e9,
+                        page_size=args.page_size)
     slos = [0.002 * k for k in range(1, 120)]
     eng = build_engine("e0", cfg, hw, ecfg, slos)
     peers = []
@@ -85,6 +89,8 @@ def main(argv=None) -> dict:
     summary["final_interval"] = (None if eng.interval >= 10**9
                                  else eng.interval)
     summary["host_kv_peak_pages"] = eng.host_kv_peak_pages
+    summary["decode_path"] = "paged"     # single page pool + Pallas kernel
+    summary["streamed_pages_peak"] = eng.streamed_pages_peak
     print(json.dumps(summary, indent=1))
     return out
 

@@ -317,6 +317,49 @@ def apply_block_decode(cfg: ModelConfig, blk: BlockSpec, p: Params,
     return x, new_cache
 
 
+def apply_block_decode_paged(cfg: ModelConfig, blk: BlockSpec, p: Params,
+                             x: jax.Array, pos: jax.Array, pool: jax.Array,
+                             layer: jax.Array, block_tables: jax.Array,
+                             context_lens: jax.Array,
+                             write_frames: jax.Array,
+                             write_offsets: jax.Array, virtual_kv: int,
+                             interpret: bool):
+    """One decode block through the paged KV pool (no slot-dense cache).
+
+    ``pool``: [frames, page, L, 2, vh, hd] — the single physical page buffer
+    shared by every layer; ``layer`` (traced) selects the L-axis slice. The
+    new token's K/V land at (write_frames[b], write_offsets[b]) and attention
+    reads through ``block_tables``/``context_lens`` with the Pallas paged
+    decode kernel. Returns (x, pool).
+    """
+    if blk.mixer != "attention":
+        raise NotImplementedError(
+            "paged decode supports attention mixers only; recurrent-state "
+            f"mixer {blk.mixer!r} needs a per-slot state slab (ROADMAP)")
+    from repro.kernels.decode_attention import paged_decode_attention_pallas
+
+    h = L.apply_norm(cfg, p["norm1"], x)
+    q, k1, v1 = L.qkv_project(cfg, p["attn"], h, pos[:, None], virtual_kv)
+    pool = pool.at[write_frames, write_offsets, layer, 0].set(
+        k1[:, 0].astype(pool.dtype))
+    pool = pool.at[write_frames, write_offsets, layer, 1].set(
+        v1[:, 0].astype(pool.dtype))
+    kv_l = jax.lax.dynamic_index_in_dim(pool, layer, axis=2, keepdims=False)
+    o = paged_decode_attention_pallas(
+        q[:, 0], kv_l[:, :, 0], kv_l[:, :, 1], block_tables, context_lens,
+        window=cfg.sliding_window, interpret=interpret)
+    x = x + L.attn_out(cfg, p["attn"], o[:, None])
+
+    if cfg.d_ff > 0:
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if blk.mlp == "moe":
+            y, _ = L.apply_moe(cfg, p["mlp"], h)
+        else:
+            y = L.apply_mlp(cfg, p["mlp"], h)
+        x = x + y
+    return x, pool
+
+
 # ---------------------------------------------------------------------------
 # Stack application (scan over R periods)
 # ---------------------------------------------------------------------------

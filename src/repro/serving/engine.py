@@ -1,4 +1,4 @@
-"""SLO-aware serving engine with continuous batching and Select-N offloading.
+"""SLO-aware serving engine: paged-kernel decode with Select-N offloading.
 
 One engine = one model instance (one TP group on real hardware). Per
 iteration it: admits queued requests whose SLO is feasible (performance
@@ -8,8 +8,31 @@ batch slots, runs one decode step for all active slots, and advances a
 real JAX compute; SLO timing is the deterministic analytic schedule, which on
 a real TPU host would be wall clock).
 
-The offloading interval is re-evaluated every iteration through the per-bus
-coordinator when the engine shares a link with peers (§4.5).
+Decode computes through the paged Pallas kernel against a SINGLE physical
+page-pool buffer: the frames the ``TieredKVAllocator`` accounts for are the
+frames the kernel reads, so the accounting pool and the compute pool are one
+object. Layout of ``self.pool`` ([frames, page, L, 2, vh, hd], bf16 like the
+dense cache spec):
+
+  frames [0, dev_cap)          device-tier frames. Accounting frame ids are
+                               always < dev_cap because the free list is
+                               LIFO: a fresh id is handed out only when every
+                               lower id is in use, so the high-water mark is
+                               bounded by peak concurrency
+                               (max_batch * pages_for(max_seq)).
+  frames [dev_cap, 2*dev_cap)  the streaming slab: host-resident pages of
+                               active requests are gathered here each
+                               iteration for attention (no residency change —
+                               this is the per-iteration streamed traffic the
+                               swap scheduler charges to the link).
+  frame  2*dev_cap             the null frame: idle batch rows and padded
+                               block-table slots point here.
+
+Prefill scatters new KV into allocated frames (``kernels.ops`` batched
+scatter); swap-in/out and interval-driven resizes copy directly between the
+pinned-host pool and this same buffer (no repack). The offloading interval is
+re-evaluated every iteration through the per-bus coordinator when the engine
+shares a link with peers (§4.5).
 """
 from __future__ import annotations
 
@@ -27,13 +50,14 @@ from repro.core.coordinator import (InstanceState, coordinate,
 from repro.core.hardware import HardwareModel
 from repro.core.interval import (LayerTimes, NO_OFFLOAD, OffloadPlan,
                                  iter_time_with_interval_kv)
-from repro.core.memory_manager import (OffloadRuntime, split_model_params,
-                                       split_stacked)
+from repro.core.memory_manager import (OffloadRuntime, merge_stacked,
+                                       split_model_params)
 from repro.core.record import PerformanceRecord
+from repro.kernels import ops
 from repro.models.model import Model
 from repro.models.transformer import pattern_info
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
-from repro.serving.kv_offload import SwapScheduler, TieredKVAllocator
+from repro.serving.kv_offload import DEVICE, SwapScheduler, TieredKVAllocator
 from repro.serving.request import Request, State
 
 
@@ -58,6 +82,14 @@ class ServingEngine:
         self.name = name
         self.model = model
         self.cfg: ModelConfig = model.cfg
+        if (any(b.mixer != "attention" for b in self.cfg.pattern)
+                or self.cfg.encoder_layers > 0
+                or self.cfg.frontend is not None
+                or self.cfg.sliding_window > 0):
+            raise NotImplementedError(
+                "the paged engine path requires an attention-only decoder "
+                "(no encoder / frontend / sliding window): recurrent-state "
+                "slabs and windowed prefill unpacking are ROADMAP items")
         self.hw = hw
         self.rec = {"prefill": rec_prefill, "decode": rec_decode}
         self.times_fn = times_fn
@@ -89,12 +121,29 @@ class ServingEngine:
             PageConfig(ecfg.page_size, bytes_per_token=kv_tok))
         self.swap = SwapScheduler(self.kv)
         self.host_kv_peak_pages = 0
+        self.streamed_pages_peak = 0
+
+        # physical page pool (see module docstring for the frame map)
+        self.nb = self.kv.device.pages_for(ecfg.max_seq)
+        self.dev_cap = ecfg.max_batch * self.nb
+        self.slab_base = self.dev_cap
+        self.null_frame = 2 * self.dev_cap
+        vh, hd = self.model.virtual_kv, self.cfg.resolved_head_dim
+        self.page_shape = (ecfg.page_size, self.cfg.num_layers, 2, vh, hd)
+        self.pool = jnp.zeros((self.null_frame + 1, *self.page_shape),
+                              jnp.bfloat16)
+        self.host_pool = (self.kv.host.make_pool_buffer(self.page_shape,
+                                                        jnp.bfloat16)
+                          if self.kv.host.total_pages > 0 else None)
 
         self._runtime: dict[int, OffloadRuntime] = {}
         self._jit_decode: dict[int, Any] = {}
         self._jit_prefill: dict[int, Any] = {}
         self._params_split: dict[int, Any] = {}
-        self._caches: Any = None          # split layout for current interval
+
+        # per-step observability for the differential harness
+        self.prefill_log: list[tuple[Request, int, np.ndarray]] = []
+        self.last_decode: dict | None = None
 
     # ------------------------------------------------------------------ plan --
     @property
@@ -107,7 +156,8 @@ class ServingEngine:
 
     def set_interval(self, interval: int) -> None:
         """Apply a (possibly new) offloading interval before the next
-        iteration (coordinator output). Re-splits params/caches lazily."""
+        iteration (coordinator output). Re-splits params lazily; the KV pool
+        is re-accounted and the physical frames follow the remap."""
         if interval == self.interval:
             return
         weight_free_new = (self.ecfg.hbm_budget_bytes
@@ -118,19 +168,26 @@ class ServingEngine:
             # coordinator path never gets here — max_interval_for_memory
             # already excludes such intervals.
             return
-        old_rt = self._runtime.get(self.interval)
-        if self._caches is not None and old_rt is not None:
-            from repro.core.memory_manager import merge_model_params
-            merged = merge_model_params({"blocks": self._caches},
-                                        old_rt.plan)["blocks"]
-            self._caches = split_stacked(merged, self._plan(interval))
         self.interval = interval
         # re-account KV budget: resident bytes changed. A shrinking device
         # pool demotes KV pages host-ward; the write-back bytes are charged
-        # to the next iteration's link budget by the swap scheduler.
-        demoted = self.kv.resize_device(max(int(weight_free_new), 0))
-        if demoted:
-            self.swap.note_demotions(demoted)
+        # to the next iteration's link budget by the swap scheduler. The
+        # physical pool mirrors the accounting moves: demoted frames are
+        # copied out while still intact, then surviving frames permute.
+        res = self.kv.resize_device(max(int(weight_free_new), 0))
+        if res.demotions:
+            assert self.host_pool is not None
+            ops.copy_pages_to_host(self.pool,
+                                   [m.src_page for m in res.demotions],
+                                   self.host_pool,
+                                   [m.dst_page for m in res.demotions])
+            self.swap.note_demotions(len(res.demotions))
+        moves = [(o, n) for o, n in res.remap if o != n]
+        if moves:
+            got = ops.gather_kv_pages(
+                self.pool, jnp.asarray([o for o, _ in moves], jnp.int32))
+            self.pool = ops.scatter_kv_pages(
+                self.pool, jnp.asarray([n for _, n in moves], jnp.int32), got)
 
     def _rt(self, interval: int) -> OffloadRuntime:
         if interval not in self._runtime:
@@ -138,7 +195,8 @@ class ServingEngine:
             self._runtime[interval] = rt
             self._params_split[interval] = split_model_params(
                 self.params, rt.plan)
-            self._jit_decode[interval] = jax.jit(rt.decode_step)
+            self._jit_decode[interval] = jax.jit(rt.paged_decode_step,
+                                                 donate_argnums=(3,))
         return self._runtime[interval]
 
     # ------------------------------------------------------------ admission --
@@ -212,9 +270,7 @@ class ServingEngine:
                     and not self._spill_admit(req, total):
                 return  # wait for memory
             self.queue.pop(0)
-            self._prefill_into_slot(req, free_slots[0],
-                                    max(min_i, self.interval
-                                        if self.interval < NO_OFFLOAD else min_i))
+            self._prefill_into_slot(req, free_slots[0])
 
     def _spill_admit(self, req: Request, total: int) -> bool:
         """§4.2 admission, extended for the host KV tier: the device pool is
@@ -254,8 +310,7 @@ class ServingEngine:
                                           0.0, host_spill_bytes)
 
     # -------------------------------------------------------------- prefill --
-    def _prefill_into_slot(self, req: Request, slot: int, interval: int
-                           ) -> None:
+    def _prefill_into_slot(self, req: Request, slot: int) -> None:
         req.state = State.PREFILLING
         req.slot = slot
         self.slot_req[slot] = req
@@ -264,54 +319,116 @@ class ServingEngine:
             self._jit_prefill[self.interval] = jax.jit(
                 rt.prefill, static_argnames=("cache_len",))
         # prefill this request alone (chunked-prefill piggybacking is an
-        # engine-level extension; the paper separates phases)
+        # engine-level extension; the paper separates phases). cache_len is
+        # the exact prompt length: the tokens shape [1, S] forces a retrace
+        # per distinct S anyway, so this adds no compiles and the merged
+        # caches carry no padding into the page scatter.
         inputs = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
         logits, caches1, _ = self._jit_prefill[self.interval](
             self._params_split[self.interval], inputs,
-            cache_len=self.ecfg.max_seq)
+            cache_len=req.prompt_len)
+        self._scatter_prefill_kv(req, caches1)
         # modeled prefill latency = TTFT (same formula admission checked)
         ttft = self._modeled_ttft(req, self.kv.host_bytes_of(req.rid))
         req.ttft_s = ttft
         self.clock_s += ttft
 
-        tok = int(np.argmax(np.asarray(logits[0])))
+        logits_np = np.asarray(logits[0], np.float32)
+        self.prefill_log.append((req, slot, logits_np))
+        tok = int(np.argmax(logits_np))
         req.generated.append(tok)
+        if req.done:
+            # token budget exhausted at prefill (max_new_tokens <= 1): never
+            # activate the slot — a decode step would write past the
+            # allocated pages (into the shared null frame) and over-generate
+            req.state = State.FINISHED
+            self.finished.append(req)
+            self.slot_req[slot] = None
+            self.kv.free(req.rid)
+            return
         self.tokens[slot] = tok
         self.pos[slot] = req.prompt_len
         self.active[slot] = True
         req.state = State.DECODING
-        self._insert_cache(caches1, slot)
 
-    def _ensure_params(self, interval: int) -> int:
-        self._rt(interval)
-        return interval
-
-    def _insert_cache(self, caches1: Any, slot: int) -> None:
-        if self._caches is None:
-            rt = self._rt(self.interval)
-            spec = rt.cache_spec_split(self.ecfg.max_batch, self.ecfg.max_seq)
-            from repro.models import spec as S
-            self._caches = S.initialize(spec, jax.random.PRNGKey(1))
-            self._caches = jax.tree.map(lambda x: x * 0, self._caches)
-
-        def ins(c, n):
-            # c: [..., B, ...] stacked sections share layout with n at B=1
-            axis = _batch_axis(c.shape, n.shape)
-            idx = [slice(None)] * c.ndim
-            idx[axis] = slice(slot, slot + 1)
-            return c.at[tuple(idx)].set(n)
-
-        # Empty placement sections come back as None from prefill (nothing
-        # cached there); the engine keeps its zero-size arrays for those.
-        for k in ("resident", "offloaded", "tail"):
-            if caches1.get(k) is None:
-                continue
-            self._caches[k] = jax.tree.map(ins, self._caches[k], caches1[k])
+    def _scatter_prefill_kv(self, req: Request, caches1: Any) -> None:
+        """Land the prefilled KV in the page pools: device-tier pages go into
+        the physical pool via one batched scatter, host-tier (spilled cold
+        prefix) pages go straight into the pinned-host buffer."""
+        rt = self._rt(self.interval)
+        merged = merge_stacked(caches1, rt.plan)   # per pattern j: [R,1,S,..]
+        # global layer order: unit-major, pattern-minor (u * P + j)
+        shape = (self.cfg.num_layers, req.prompt_len, *self.page_shape[3:])
+        k_all = np.stack([np.asarray(m["self"]["k"])[:, 0] for m in merged],
+                         axis=1).reshape(shape)
+        v_all = np.stack([np.asarray(m["self"]["v"])[:, 0] for m in merged],
+                         axis=1).reshape(shape)
+        vals = ops.pack_token_pages(k_all, v_all, self.ecfg.page_size,
+                                    dtype=jnp.bfloat16)
+        refs = self.kv.refs(req.rid)
+        dev_frames, dev_vals = [], []
+        for i in range(vals.shape[0]):
+            r = refs[i]
+            if r.tier == DEVICE:
+                assert r.page < self.dev_cap, "LIFO high-water bound violated"
+                dev_frames.append(r.page)
+                dev_vals.append(vals[i])
+            else:
+                assert self.host_pool is not None
+                self.host_pool[r.page] = vals[i]
+        if dev_frames:
+            self.pool = ops.scatter_kv_pages(
+                self.pool, jnp.asarray(dev_frames, jnp.int32),
+                jnp.asarray(np.stack(dev_vals)))
 
     # ---------------------------------------------------------------- decode --
+    def _build_iteration_tables(self) -> tuple:
+        """Per-iteration kernel inputs from the allocator refs: block tables
+        and context lengths per slot, the new token's write frame/offset, the
+        host pages to stream into the slab, and the dirty streamed page (if
+        the write lands on a host-resident page) to write back afterwards."""
+        b, nb, page = self.ecfg.max_batch, self.nb, self.ecfg.page_size
+        bt = np.full((b, nb), self.null_frame, np.int32)
+        cl = np.zeros((b,), np.int32)
+        wf = np.full((b,), self.null_frame, np.int32)
+        wo = np.zeros((b,), np.int32)
+        stream_src: list[int] = []      # host pool slots
+        stream_dst: list[int] = []      # slab frames
+        writeback: list[tuple[int, int]] = []   # (host slot, slab frame)
+        slab_next = self.slab_base
+        for slot in range(b):
+            req = self.slot_req[slot]
+            if not self.active[slot] or req is None:
+                continue
+            refs = self.kv.refs(req.rid)
+            assert len(refs) <= nb
+            for i, r in enumerate(refs):
+                if r.tier == DEVICE:
+                    assert r.page < self.dev_cap, \
+                        "LIFO high-water bound violated"
+                    bt[slot, i] = r.page
+                else:
+                    bt[slot, i] = slab_next
+                    stream_src.append(r.page)
+                    stream_dst.append(slab_next)
+                    slab_next += 1
+            p = int(self.pos[slot])
+            cl[slot] = p + 1                    # includes the token written now
+            wpi = p // page
+            wf[slot] = bt[slot, wpi]
+            wo[slot] = p % page
+            if wf[slot] >= self.slab_base and wf[slot] != self.null_frame:
+                # decode writes into a streamed (host-resident) page: the
+                # dirty slab frame must be written back or the token is lost
+                writeback.append((refs[wpi].page, int(wf[slot])))
+        assert slab_next <= self.null_frame
+        return bt, cl, wf, wo, stream_src, stream_dst, writeback
+
     def step(self, peers: list["ServingEngine"] | None = None,
              link_bw: float | None = None) -> None:
         """One inference iteration: coordinate -> admit -> decode all slots."""
+        self.prefill_log = []
+        self.last_decode = None
         if peers is not None and link_bw is not None:
             insts = [self.instance_state()] + [p.instance_state()
                                                for p in peers]
@@ -333,12 +450,33 @@ class ServingEngine:
         # pending demotions. Promotion is never a traffic spike: a promoted
         # page's one-time copy replaces its recurring streamed copy.
         plan = self.swap.plan_iteration(self._active_rids())
-        rt = self._rt(self.interval)
+        if plan.promotions:
+            assert self.host_pool is not None
+            self.pool = ops.copy_pages_from_host(
+                self.host_pool, [m.src_page for m in plan.promotions],
+                self.pool, [m.dst_page for m in plan.promotions])
+        self._rt(self.interval)
+        bt, cl, wf, wo, stream_src, stream_dst, writeback = \
+            self._build_iteration_tables()
+        if stream_src:
+            self.streamed_pages_peak = max(self.streamed_pages_peak,
+                                           len(stream_src))
+            self.pool = ops.copy_pages_from_host(self.host_pool, stream_src,
+                                                 self.pool, stream_dst)
+        tokens_in, pos_in = self.tokens.copy(), self.pos.copy()
         fn = self._jit_decode[self.interval]
-        logits, self._caches = fn(
-            self._params_split[self.interval],
-            jnp.asarray(self.tokens), jnp.asarray(self.pos), self._caches)
+        logits, self.pool = fn(
+            self._params_split[self.interval], jnp.asarray(tokens_in),
+            jnp.asarray(pos_in), self.pool, jnp.asarray(bt), jnp.asarray(cl),
+            jnp.asarray(wf), jnp.asarray(wo))
         logits = np.asarray(logits, np.float32)
+        if writeback:
+            got = np.asarray(ops.gather_kv_pages(
+                self.pool, jnp.asarray([f for _, f in writeback], jnp.int32)))
+            for (host_slot, _), val in zip(writeback, got):
+                self.host_pool[host_slot] = val
+        self.last_decode = {"tokens": tokens_in, "pos": pos_in,
+                            "active": self.active.copy(), "logits": logits}
 
         times = self.times_fn(self._active_batch(), self.ecfg.max_seq,
                               "decode")
@@ -384,11 +522,3 @@ class ServingEngine:
             "slo_ok": all(m["ttft_ok"] and m["tpot_ok"] for m in done),
             "per_request": done,
         }
-
-
-def _batch_axis(cshape: tuple, nshape: tuple) -> int:
-    """Locate the batch axis: first axis where shapes differ."""
-    for a, (cs, ns) in enumerate(zip(cshape, nshape)):
-        if cs != ns:
-            return a
-    return 0

@@ -4,8 +4,9 @@ The allocator owns the HBM page budget: pages not claimed by resident weights
 are available for KV. This is the mechanism behind the paper's Fig. 14 —
 smaller offloading interval => fewer resident weight bytes => more pages =>
 larger max allocatable length. Execution-side, the page pool backs the Pallas
-paged decode kernel (block tables per request); the demo engine's jitted path
-uses slot-dense caches, both covered by tests.
+paged decode kernel (block tables per request): the serving engine's jitted
+decode computes directly through these frames — the accounting pool and the
+compute pool are one object (see serving.engine).
 """
 from __future__ import annotations
 
@@ -94,7 +95,20 @@ class PagedKVAllocator:
         assert len(free) + len(held) == self.total_pages
 
     def block_table(self, rid: int, max_pages: int) -> np.ndarray:
-        pages = self._by_req.get(rid, [])
-        out = np.zeros((max_pages,), np.int32)
-        out[: len(pages)] = pages[:max_pages]
-        return out
+        """Padded block table row for the paged decode kernel. Raises when the
+        request holds more pages than ``max_pages`` — silent truncation would
+        make the kernel attend through the wrong frames."""
+        return padded_block_table(self._by_req.get(rid, []), max_pages, rid)
+
+
+def padded_block_table(pages: list[int], max_pages: int, rid: int
+                       ) -> np.ndarray:
+    """Zero-padded [max_pages] int32 table row; raises instead of truncating
+    (shared by the device allocator and the tiered allocator)."""
+    if len(pages) > max_pages:
+        raise ValueError(
+            f"request {rid} holds {len(pages)} pages > max_pages="
+            f"{max_pages}: block table would truncate the context")
+    out = np.zeros((max_pages,), np.int32)
+    out[: len(pages)] = pages
+    return out

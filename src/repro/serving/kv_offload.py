@@ -35,7 +35,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.serving.kv_cache import PageConfig, PagedKVAllocator
+from repro.serving.kv_cache import (PageConfig, PagedKVAllocator,
+                                    padded_block_table)
 
 DEVICE = "device"
 HOST = "host"
@@ -63,6 +64,24 @@ class Migration:
     src_tier: str
     src_page: int
     dst_page: int
+
+
+@dataclasses.dataclass
+class ResizeResult:
+    """Data-plane instructions for a device-pool resize.
+
+    ``demotions`` are device->host moves (src_page is the OLD device frame,
+    dst_page the host slot); ``remap`` lists (old_frame, new_frame) pairs for
+    pages that stay on device but land in a different frame of the rebuilt
+    pool. A caller holding a real page buffer must copy demotions out first
+    (old frames are still intact) and then permute the surviving frames.
+    """
+    demotions: list[Migration]
+    remap: list[tuple[int, int]]
+
+    @property
+    def num_demoted(self) -> int:
+        return len(self.demotions)
 
 
 class TieredKVAllocator:
@@ -220,14 +239,14 @@ class TieredKVAllocator:
         used = sum(len(self.device_pages_of(rid)) for rid in self._refs)
         return used - new_pages <= self.host.free_pages
 
-    def resize_device(self, new_total_bytes: float) -> int:
+    def resize_device(self, new_total_bytes: float) -> ResizeResult:
         """Rebuild the device pool for a new byte budget (the offloading
         interval changed the resident weight set). Existing device pages are
         re-assigned to fresh frames; overflow demotes host-ward, largest
-        holders first. Returns the number of demoted pages.
-
-        Accounting-only: callers holding real page buffers must drain them
-        before resizing (the engine's modeled path holds none).
+        holders first. Returns the demotions and the old->new frame remap so
+        a caller holding the physical page buffer can mirror the move
+        (serving.engine copies demoted frames to the host pool and permutes
+        the surviving frames in place).
         """
         if not self.can_resize_device(new_total_bytes):
             # validated up front so failure never leaves partial state
@@ -235,7 +254,7 @@ class TieredKVAllocator:
         old_used = {rid: len(self.device_pages_of(rid)) for rid in self._refs}
         new_dev = PagedKVAllocator(max(int(new_total_bytes), 0), self.pcfg)
         demand = sum(old_used.values())
-        demoted = 0
+        demotions: list[Migration] = []
         # shed overflow: take from the requests holding the most device pages
         while demand > new_dev.total_pages:
             over = demand - new_dev.total_pages
@@ -249,12 +268,14 @@ class TieredKVAllocator:
                 if moved >= take:
                     break
                 if ref.tier == DEVICE:
+                    demotions.append(Migration(rid, DEVICE, ref.page,
+                                               hp[moved]))
                     refs[idx] = PageRef(HOST, hp[moved])
                     moved += 1
             old_used[rid] -= take
             demand -= take
-            demoted += take
         # re-assign surviving device pages to fresh frames
+        remap: list[tuple[int, int]] = []
         for rid, count in old_used.items():
             dp = new_dev.alloc_pages(rid, count)
             assert dp is not None
@@ -262,21 +283,22 @@ class TieredKVAllocator:
             refs = self._refs[rid]
             for idx, ref in enumerate(refs):
                 if ref.tier == DEVICE:
-                    refs[idx] = PageRef(DEVICE, next(it))
+                    new_frame = next(it)
+                    remap.append((ref.page, new_frame))
+                    refs[idx] = PageRef(DEVICE, new_frame)
         self.device = new_dev
-        return demoted
+        return ResizeResult(demotions=demotions, remap=remap)
 
     # ---- block tables --------------------------------------------------------
     def device_block_table(self, rid: int, max_pages: int) -> np.ndarray:
         """Block table for the paged decode kernel. Valid only when the
-        request is fully device-resident (swap_in first)."""
+        request is fully device-resident (swap_in first). Raises when the
+        request holds more pages than ``max_pages`` (truncation would drop
+        context pages silently)."""
         refs = self._refs.get(rid, [])
         assert all(r.tier == DEVICE for r in refs), \
             "host-resident pages: swap_in before building the kernel table"
-        out = np.zeros((max_pages,), np.int32)
-        pages = [r.page for r in refs]
-        out[: len(pages)] = pages[:max_pages]
-        return out
+        return padded_block_table([r.page for r in refs], max_pages, rid)
 
     def check_invariants(self) -> None:
         self.device.check_invariants()

@@ -1,0 +1,53 @@
+"""Shared test builder for reduced serving engines.
+
+One place owns the "HBM = resident weights + K KV pages, host tier = N
+pages" sizing dance (unit_weight_bytes / kv_cache_bytes / OffloadPlan), so
+the tier split cannot drift between the serving, kv-offload, and
+differential suites.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.configs.reduced import reduce_config
+from repro.core import costs
+from repro.core.analyzer import PerformanceAnalyzer
+from repro.core.hardware import A10
+from repro.core.interval import NO_OFFLOAD, OffloadPlan
+from repro.models.model import build_model
+from repro.models.transformer import pattern_info
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
+                      vocab=128, max_batch=4, max_seq=48, page_size=16,
+                      hbm_gb: float | None = None,
+                      extra_device_pages: float | None = None,
+                      host_pages: int = 0,
+                      batches=(1, 2, 4, 8), seqs=(16, 32, 64)):
+    """Reduced-qwen engine + analyzer. Size HBM either directly (``hbm_gb``)
+    or as resident weights plus ``extra_device_pages`` KV pages (the
+    tiered-serving shape); ``host_pages`` sizes the pinned-host KV pool in
+    pages of the same geometry."""
+    cfg = reduce_config(get_config("qwen2.5-3b"), d_model=d_model,
+                        heads=heads, layers=layers, d_ff=d_ff, vocab=vocab)
+    model = build_model(cfg)
+    an = PerformanceAnalyzer(cfg, A10, measure="model")
+    kv_tok = max(costs.kv_cache_bytes(cfg, 1, 1, model.virtual_kv), 1)
+    page_bytes = page_size * kv_tok
+    if extra_device_pages is not None:
+        _, units = pattern_info(cfg)
+        unit = costs.unit_weight_bytes(cfg)
+        hbm = OffloadPlan(units, NO_OFFLOAD).device_bytes(unit) \
+            + extra_device_pages * page_bytes
+    else:
+        assert hbm_gb is not None
+        hbm = hbm_gb * 1e9
+    slos = [0.002 * k for k in range(1, 30)]
+    rec_p = an.generate_record(slos, list(batches), list(seqs), "prefill")
+    rec_d = an.generate_record(slos, list(batches), list(seqs), "decode")
+    eng = ServingEngine(name, model, A10, rec_p, rec_d, an.layer_times,
+                        EngineConfig(max_batch=max_batch, max_seq=max_seq,
+                                     page_size=page_size,
+                                     hbm_budget_bytes=hbm,
+                                     host_kv_bytes=host_pages * page_bytes))
+    return eng, an

@@ -1,0 +1,122 @@
+"""Property-based test: drive ``TieredKVAllocator`` with random
+alloc / extend / swap_in / swap_out / resize / free sequences and assert the
+structural invariants after every single operation:
+
+  * no page ref is on both tiers, and the per-request refs lists exactly
+    match the per-tier pools (``check_invariants``),
+  * every live request holds exactly ``pages_for(tokens)`` refs,
+  * a failed extend rolls back to the exact prior refs list (demotions may
+    remain per the documented contract: the data plane may already have
+    copied them, so a DEVICE ref may have turned HOST — nothing else),
+  * resize either raises without mutating (overflow > host capacity) or
+    returns demotions + remap consistent with the new refs.
+
+Runs under real hypothesis when installed, else the deterministic fallback
+shim — pure accounting, no JAX compiles: fast CI tier.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+import pytest
+
+from repro.serving.kv_cache import PageConfig
+from repro.serving.kv_offload import DEVICE, HOST, TieredKVAllocator
+
+PAGE = 4   # tokens per page
+BPT = 4    # bytes per token
+PB = PAGE * BPT
+
+
+def _page_count(kv, rid, tier):
+    return len(kv.device_pages_of(rid) if tier == DEVICE
+               else kv.host_pages_of(rid))
+
+
+@given(codes=st.lists(st.integers(0, (1 << 30) - 1), min_size=0, max_size=50),
+       dev_pages=st.integers(0, 10), host_pages=st.integers(0, 10))
+@settings(max_examples=80, deadline=None)
+def test_tiered_allocator_random_op_sequences(codes, dev_pages, host_pages):
+    kv = TieredKVAllocator(dev_pages * PB, host_pages * PB,
+                           PageConfig(PAGE, bytes_per_token=BPT))
+    tokens: dict[int, int] = {}          # live rid -> token count
+    next_rid = 0
+    for code in codes:
+        op, arg = code % 6, code // 6
+        alive = sorted(tokens)
+        if op == 0:                                          # alloc
+            want = arg % ((dev_pages + host_pages + 2) * PAGE) + 1
+            refs = kv.alloc(next_rid, want, allow_host=bool(arg % 2))
+            if refs is not None:
+                assert len(refs) == kv.device.pages_for(want)
+                tokens[next_rid] = want
+                next_rid += 1
+            else:
+                kv.free(next_rid)        # nothing claimed: must be a no-op
+        elif op == 1 and alive:                              # extend
+            rid = alive[arg % len(alive)]
+            before = kv.refs(rid)
+            new_total = tokens[rid] + arg % (3 * PAGE) + 1
+            out = kv.extend(rid, new_total, allow_host=bool(arg % 2))
+            after = kv.refs(rid)
+            if out is None:
+                # exact rollback: same length, and position-wise either the
+                # identical ref or a documented DEVICE->HOST demotion
+                assert len(after) == len(before)
+                for b4, now in zip(before, after):
+                    assert now == b4 or (b4.tier == DEVICE
+                                         and now.tier == HOST)
+            else:
+                tokens[rid] = new_total
+        elif op == 2 and alive:                              # swap_out
+            rid = alive[arg % len(alive)]
+            n_dev = _page_count(kv, rid, DEVICE)
+            free_host = kv.host.free_pages
+            moves = kv.swap_out(rid, arg % 3 + 1)
+            assert len(moves) == min(arg % 3 + 1, n_dev, free_host)
+            for m in moves:
+                assert m.dst_page in kv.host_pages_of(rid)
+        elif op == 3 and alive:                              # swap_in
+            rid = alive[arg % len(alive)]
+            n_host = _page_count(kv, rid, HOST)
+            moves = kv.swap_in(rid, arg % 3 + 1)
+            assert len(moves) <= min(arg % 3 + 1, n_host)
+        elif op == 4:                                        # resize
+            new_bytes = (arg % (dev_pages + 4)) * PB
+            if kv.can_resize_device(new_bytes):
+                res = kv.resize_device(new_bytes)
+                # remap's new frames are exactly the surviving device pages
+                live_dev = sorted(p for r in tokens
+                                  for p in kv.device_pages_of(r))
+                assert sorted(n for _, n in res.remap) == live_dev
+                for m in res.demotions:
+                    assert m.src_tier == DEVICE
+                    assert m.dst_page in kv.host_pages_of(m.rid)
+            else:
+                snapshot = {r: kv.refs(r) for r in alive}
+                with pytest.raises(RuntimeError):
+                    kv.resize_device(new_bytes)
+                # failed resize must not have mutated anything
+                assert {r: kv.refs(r) for r in alive} == snapshot
+        elif op == 5 and alive:                              # free
+            rid = alive[arg % len(alive)]
+            kv.free(rid)
+            del tokens[rid]
+            assert kv.refs(rid) == []
+
+        # ---- invariants after every operation -----------------------------
+        kv.check_invariants()            # tiers/pools/refs exactly consistent
+        for rid, tok in tokens.items():
+            refs = kv.refs(rid)
+            assert len(refs) == kv.device.pages_for(tok)
+            # no ref claims both tiers; per-tier counts match the pools
+            assert (_page_count(kv, rid, DEVICE)
+                    + _page_count(kv, rid, HOST)) == len(refs)
+
+    for rid in list(tokens):
+        kv.free(rid)
+    kv.check_invariants()
+    assert kv.device.used_pages == 0 and kv.host.used_pages == 0

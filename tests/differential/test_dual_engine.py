@@ -1,0 +1,111 @@
+"""Dual-engine differential traces: the paged engine must be numerically
+indistinguishable from the frozen dense reference on full serving traces —
+across interval changes (device-pool resize + physical frame remap), host
+spills (streamed pages + dirty-page write-back), and request completion /
+slot + page reuse.
+
+These drive full jitted engines and are compile-heavy: nightly tier.
+"""
+import numpy as np
+import pytest
+
+from repro.core.interval import NO_OFFLOAD
+from repro.serving.request import Request
+
+from _engine_builders import mk_reduced_engine
+from harness import DualEngine
+
+pytestmark = pytest.mark.slow
+
+
+def _mk_engine(device_pages: float, host_pages: int, max_batch=2, max_seq=32,
+               page_size=8):
+    """Engine whose HBM fits the resident weights plus ``device_pages`` KV
+    pages; the host tier absorbs the rest."""
+    eng, _ = mk_reduced_engine(name="dual", max_batch=max_batch,
+                               max_seq=max_seq, page_size=page_size,
+                               extra_device_pages=device_pages,
+                               host_pages=host_pages, batches=(1, 2, 4))
+    return eng
+
+
+def _reqs(n, prompt_len=6, new=20):
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, 100, prompt_len).astype(np.int32),
+                    max_new_tokens=new, ttft_slo_s=10.0, tpot_slo_s=10.0)
+            for i in range(n)]
+
+
+def test_dual_engine_mixed_trace_with_interval_change_and_spill():
+    """Acceptance trace: >= 200 compared decode iterations on a mixed
+    request stream that spills KV to host and changes the offloading
+    interval twice (grow and shrink the device pool, exercising promotion,
+    demotion + write-back, and the physical frame remap). Every prefill and
+    every decode iteration must match the dense reference."""
+    eng = _mk_engine(device_pages=5.5, host_pages=64)
+    dual = DualEngine(eng)
+    for r in _reqs(24):
+        eng.submit(r)
+
+    interval_changes = 0
+    while eng.queue or eng._active_batch() > 0:
+        assert dual.iters < 1000
+        if dual.iters == 40:
+            eng.set_interval(2)        # smaller resident set: pool grows
+            assert eng.interval == 2
+            interval_changes += 1
+        if dual.iters == 110:
+            eng.set_interval(NO_OFFLOAD)   # pool shrinks: demotes host-ward
+            assert eng.interval == NO_OFFLOAD
+            interval_changes += 1
+        dual.step()
+
+    assert interval_changes == 2
+    assert len(eng.finished) == 24
+    for r in eng.finished:
+        assert len(r.generated) == 20
+    assert eng.host_kv_peak_pages > 0, "trace never spilled to host"
+    assert eng.streamed_pages_peak > 0, "trace never streamed host pages"
+    assert dual.decode_compares >= 200
+    assert dual.prefill_compares == 24
+    # numeric top-2 ties must stay rare: systematic divergence cannot hide
+    # behind the tie rule
+    assert dual.tied_tokens <= 0.02 * dual.decode_compares
+    # all KV pages returned to both tiers
+    assert eng.kv.device.used_pages == 0 and eng.kv.host.used_pages == 0
+    eng.kv.check_invariants()
+
+
+def test_dual_engine_device_only_completion_and_slot_reuse():
+    """Device-only control: completion frees pages mid-trace and later
+    requests reuse the same frames and batch slots; the reused frames must
+    not leak stale KV into the new requests' logits."""
+    eng = _mk_engine(device_pages=16, host_pages=0, max_batch=2)
+    dual = DualEngine(eng)
+    reqs = _reqs(5, prompt_len=5, new=9)
+    for r in reqs:
+        eng.submit(r)
+    dual.run_until_drained(max_iters=300)
+    assert len(eng.finished) == 5
+    assert dual.prefill_compares == 5
+    # prefill emits each request's first token: 9-token requests decode 8x
+    assert dual.decode_compares >= 5 * 8
+    assert eng.kv.device.used_pages == 0
+
+
+def test_dual_engine_spill_heavy_zero_device_pages():
+    """Extreme tier split: the device accounting pool holds zero pages, so
+    every page of every request lives on host and the whole context is
+    streamed through the slab each iteration, with the decode write landing
+    on a streamed page (dirty write-back path) every single step."""
+    eng = _mk_engine(device_pages=0.25, host_pages=32)
+    assert eng.kv.device.total_pages == 0
+    dual = DualEngine(eng)
+    for r in _reqs(4, prompt_len=6, new=12):
+        eng.submit(r)
+    dual.run_until_drained(max_iters=200)
+    assert len(eng.finished) == 4
+    assert eng.streamed_pages_peak > 0
+    assert dual.decode_compares >= 4 * 12 // 2
+    assert eng.kv.host.used_pages == 0

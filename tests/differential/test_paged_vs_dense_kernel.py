@@ -1,0 +1,80 @@
+"""Fast-tier differential tests: the paged Pallas decode kernel (interpret
+mode — how CPU CI executes it) vs the dense jnp oracle, focused on the
+padded-input shapes the engine actually produces: block tables padded with
+arbitrary (even out-of-range) frame ids, context lengths not divisible by
+the page size, idle batch rows (context length 0), and batch=1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _mk(b, h, vh, d, npages, page, nb, seed=3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (npages, page, vh, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (npages, page, vh, d), jnp.float32)
+    perm = jax.random.permutation(ks[3], npages)[: b * nb]
+    bt = perm.reshape(b, nb).astype(jnp.int32)
+    cl = jax.random.randint(ks[4], (b,), 1, nb * page + 1, jnp.int32)
+    return q, kp, vp, bt, cl
+
+
+def _assert_match(q, kp, vp, bt, cl, **kw):
+    got = ops.paged_decode_attention(q, kp, vp, bt, cl, interpret=True, **kw)
+    want = ref.ref_paged_decode_attention(q, kp, vp, bt, cl, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padded_block_table_entries_are_ignored():
+    """Table slots past the live context may hold anything — including frame
+    ids outside the pool. The kernel clamps them before the index map runs
+    and the context mask keeps them out of the softmax."""
+    q, kp, vp, bt, _ = _mk(2, 4, 2, 32, 11, 8, 4)
+    cl = jnp.asarray([9, 17], jnp.int32)         # 2 resp. 3 live pages of 4
+    bt = np.array(bt)
+    bt[0, 2:] = 10_000                           # garbage past the live pages
+    bt[1, 3:] = -7
+    bt = jnp.asarray(bt)
+    got = ops.paged_decode_attention(q, kp, vp, bt, cl, interpret=True)
+    # oracle sees an in-range table (values masked anyway)
+    safe = jnp.clip(bt, 0, kp.shape[0] - 1)
+    want = ref.ref_paged_decode_attention(q, kp, vp, safe, cl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_context_len_not_divisible_by_page_size():
+    q, kp, vp, bt, _ = _mk(3, 4, 4, 32, 16, 8, 4)
+    cl = jnp.asarray([1, 13, 27], jnp.int32)     # none divisible by 8
+    _assert_match(q, kp, vp, bt, cl)
+
+
+def test_batch_one_edge():
+    q, kp, vp, bt, _ = _mk(1, 8, 2, 32, 7, 4, 5)
+    for c in (1, 3, 4, 19, 20):                  # incl. exact page multiples
+        _assert_match(q, kp, vp, bt, jnp.asarray([c], jnp.int32))
+
+
+def test_idle_row_yields_zeros():
+    """context_len <= 0 marks an idle batch slot (the engine's null-frame
+    rows): the kernel must emit zeros, not NaNs, and not disturb live rows."""
+    q, kp, vp, bt, _ = _mk(2, 4, 2, 32, 11, 8, 4)
+    cl = jnp.asarray([0, 21], jnp.int32)
+    got = np.asarray(ops.paged_decode_attention(q, kp, vp, bt, cl,
+                                                interpret=True))
+    assert np.all(got[0] == 0.0) and not np.any(np.isnan(got))
+    want = ref.ref_paged_decode_attention(q, kp, vp, bt, cl)
+    np.testing.assert_allclose(got[1], np.asarray(want)[1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_oversized_context_len_is_clamped():
+    q, kp, vp, bt, _ = _mk(2, 4, 2, 32, 11, 8, 4)
+    cl_over = jnp.asarray([500, 32], jnp.int32)  # table capacity is 32
+    cl_full = jnp.asarray([32, 32], jnp.int32)
+    got = ops.paged_decode_attention(q, kp, vp, bt, cl_over, interpret=True)
+    want = ops.paged_decode_attention(q, kp, vp, bt, cl_full, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))

@@ -131,6 +131,42 @@ def test_paged_decode_single_token_context():
                                rtol=1e-5, atol=1e-5)
 
 
+def test_paged_decode_padded_table_with_out_of_range_entries():
+    """Block-table slots beyond the live context may hold garbage ids (the
+    engine pads with a null frame; a buggy caller could pad with anything):
+    the kernel clamps them into the pool and the context mask hides them."""
+    q, kp, vp, bt, _ = _mk_paged(2, 4, 2, 64, 13, 16, 4, jnp.float32)
+    cl = jnp.asarray([18, 33], jnp.int32)        # 2 resp. 3 live pages of 4
+    bt = np.array(bt)
+    bt[0, 2:] = 99_999
+    bt[1, 3:] = -3
+    got = ops.paged_decode_attention(q, kp, vp, jnp.asarray(bt), cl,
+                                     interpret=True)
+    want = ref.ref_paged_decode_attention(
+        q, kp, vp, jnp.clip(jnp.asarray(bt), 0, 12), cl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_context_not_page_multiple():
+    q, kp, vp, bt, _ = _mk_paged(3, 8, 2, 64, 15, 16, 3, jnp.float32)
+    cl = jnp.asarray([7, 17, 45], jnp.int32)     # none divisible by 16
+    got = ops.paged_decode_attention(q, kp, vp, bt, cl, interpret=True)
+    want = ref.ref_paged_decode_attention(q, kp, vp, bt, cl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_batch_one():
+    q, kp, vp, bt, _ = _mk_paged(1, 4, 4, 64, 9, 16, 4, jnp.float32)
+    for c in (1, 15, 16, 17, 64):                # page-boundary straddles
+        cl = jnp.asarray([c], jnp.int32)
+        got = ops.paged_decode_attention(q, kp, vp, bt, cl, interpret=True)
+        want = ref.ref_paged_decode_attention(q, kp, vp, bt, cl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_flash_matches_model_chunked_attention():
     """Kernel and the jnp chunked implementation used at dry-run scale must
     agree (they are the same algorithm at different layers)."""

@@ -164,6 +164,7 @@ def test_tiered_resize_device_overflow_raises_before_mutation():
     kv.alloc(2, 3 * 4)
     with pytest.raises(RuntimeError):
         kv.resize_device(2 * 16)                       # overflow 6 > host 2
+    kv.check_invariants()
     # nothing moved: the failure happened before any mutation
     assert len(kv.device_pages_of(1)) == 5
     assert kv.host.used_pages == 0
@@ -174,13 +175,20 @@ def test_tiered_resize_device_demotes_then_reassigns():
     kv = TieredKVAllocator(8 * 16, 8 * 16, _pcfg())
     kv.alloc(1, 5 * 4)
     kv.alloc(2, 3 * 4)
-    demoted = kv.resize_device(4 * 16)                 # shrink 8 -> 4 pages
-    assert demoted == 4
+    res = kv.resize_device(4 * 16)                     # shrink 8 -> 4 pages
+    assert res.num_demoted == 4
+    # demotions name real old device frames / host slots for the data plane
+    assert all(m.src_tier == "device" for m in res.demotions)
+    assert sorted(m.dst_page for m in res.demotions) == \
+        sorted(p for rid in (1, 2) for p in kv.host_pages_of(rid))
+    # surviving pages got a frame remap usable for a physical permute
+    assert sorted(n for _, n in res.remap) == \
+        sorted(p for rid in (1, 2) for p in kv.device_pages_of(rid))
     assert len(kv.device_pages_of(1)) + len(kv.device_pages_of(2)) == 4
     assert len(kv.host_pages_of(1)) + len(kv.host_pages_of(2)) == 4
     kv.check_invariants()
     grown = kv.resize_device(16 * 16)                  # grow back
-    assert grown == 0
+    assert grown.num_demoted == 0
     sched = SwapScheduler(kv)
     plan = sched.plan_iteration([1, 2])                # promotions backfill
     assert len(plan.promotions) == 4
@@ -311,33 +319,12 @@ def _mk_tiered_engine(host_pages: int, extra_device_pages: float = 0.4,
                       max_batch: int = 4, max_seq: int = 48):
     """Engine whose HBM fits the resident weights but (essentially) no KV:
     every request's cache must spill to the host tier."""
-    from repro.configs import get_config
-    from repro.configs.reduced import reduce_config
-    from repro.core import costs
-    from repro.core.analyzer import PerformanceAnalyzer
-    from repro.core.hardware import A10
-    from repro.core.interval import OffloadPlan
-    from repro.models.model import build_model
-    from repro.models.transformer import pattern_info
-    from repro.serving.engine import EngineConfig, ServingEngine
+    from _engine_builders import mk_reduced_engine
 
-    cfg = reduce_config(get_config("qwen2.5-3b"), d_model=32, heads=2,
-                        layers=8, d_ff=64, vocab=128)
-    model = build_model(cfg)
-    _, units = pattern_info(cfg)
-    unit = costs.unit_weight_bytes(cfg)
-    kv_tok = max(costs.kv_cache_bytes(cfg, 1, 1, model.virtual_kv), 1)
-    page_bytes = 16 * kv_tok
-    full_resident = OffloadPlan(units, NO_OFFLOAD).device_bytes(unit)
-    hbm = full_resident + extra_device_pages * page_bytes
-    an = PerformanceAnalyzer(cfg, A10, measure="model")
-    slos = [0.002 * k for k in range(1, 30)]
-    rec_p = an.generate_record(slos, [1, 2, 4, 8], [16, 32, 64], "prefill")
-    rec_d = an.generate_record(slos, [1, 2, 4, 8], [16, 32, 64], "decode")
-    eng = ServingEngine("tiered", model, A10, rec_p, rec_d, an.layer_times,
-                        EngineConfig(max_batch=max_batch, max_seq=max_seq,
-                                     hbm_budget_bytes=hbm,
-                                     host_kv_bytes=host_pages * page_bytes))
+    eng, _ = mk_reduced_engine(name="tiered", max_batch=max_batch,
+                               max_seq=max_seq,
+                               extra_device_pages=extra_device_pages,
+                               host_pages=host_pages)
     return eng
 
 

@@ -1,40 +1,28 @@
 """Serving engine integration: continuous batching, SLO admission, offload
 interval switching, paged accounting."""
-import dataclasses
-
-import jax
 import numpy as np
 import pytest
 
-from repro.configs import get_config
-from repro.configs.reduced import reduce_config
-from repro.core.analyzer import PerformanceAnalyzer
-from repro.core.hardware import A10
 from repro.core.interval import NO_OFFLOAD
-from repro.models.model import build_model
-from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
 from repro.serving.request import Request
+
+from _engine_builders import mk_reduced_engine
 
 # compile-heavy (full JAX jit of models/kernels): excluded from the fast CI
 # tier, run in the nightly full suite
 pytestmark = pytest.mark.slow
 
 
-def _mk_engine(name="e0", hbm_gb=0.05, max_batch=4, max_seq=48):
-    cfg = reduce_config(get_config("qwen2.5-3b"), d_model=32, heads=2,
-                        layers=8, d_ff=64, vocab=128)
-    model = build_model(cfg)
-    an = PerformanceAnalyzer(cfg, A10, measure="model")
-    batches = [1, 2, 4, 8]
-    seqs = [16, 32, 64]
-    slos = [0.002 * k for k in range(1, 30)]
-    rec_p = an.generate_record(slos, batches, seqs, "prefill")
-    rec_d = an.generate_record(slos, batches, seqs, "decode")
-    eng = ServingEngine(name, model, A10, rec_p, rec_d, an.layer_times,
-                        EngineConfig(max_batch=max_batch, max_seq=max_seq,
-                                     hbm_budget_bytes=hbm_gb * 1e9))
-    return eng, an
+def _mk_engine(name="e0", hbm_gb=0.05, max_batch=4, max_seq=48,
+               extra_device_pages: float | None = None, host_pages: int = 0):
+    """Standard engine, or (with ``extra_device_pages``) one whose HBM holds
+    the resident weights plus only that many KV pages, with ``host_pages``
+    of pinned-host KV — the tiered-serving shape."""
+    return mk_reduced_engine(
+        name=name, max_batch=max_batch, max_seq=max_seq,
+        hbm_gb=None if extra_device_pages is not None else hbm_gb,
+        extra_device_pages=extra_device_pages, host_pages=host_pages)
 
 
 def _reqs(n, prompt_len=8, new=6, ttft=1.0, tpot=1.0):
@@ -99,6 +87,71 @@ def test_paged_allocator_roundtrip():
     alloc.free(1)
     assert alloc.used_pages == 0
     assert alloc.alloc(2, 64 * 4 + 1) is None  # over capacity
+
+
+def test_single_token_request_finishes_at_prefill():
+    """Regression: max_new_tokens=1 is satisfied by the prefill token; the
+    request must finish without a decode step (which would over-generate
+    and, for a page-aligned prompt, write past the allocated pages)."""
+    eng, _ = _mk_engine()
+    out = eng.run(_reqs(2, prompt_len=8, new=1), max_iters=20)
+    assert out["finished"] == 2
+    for r in eng.finished:
+        assert len(r.generated) == 1
+    assert eng.kv.device.used_pages == 0
+
+
+def test_block_table_overflow_raises_instead_of_truncating():
+    """Regression: a request holding more pages than the table has columns
+    must raise — silently truncating would make the paged kernel attend
+    through the wrong frames."""
+    alloc = PagedKVAllocator(16 * 64, PageConfig(page_size=4, bytes_per_token=4))
+    alloc.alloc(1, 5 * 4)        # 5 pages
+    with pytest.raises(ValueError, match="truncate"):
+        alloc.block_table(1, 4)
+    bt = alloc.block_table(1, 8)  # padded fit is fine
+    assert bt.shape == (8,) and list(bt[:5]) == alloc.pages_of(1)
+
+    from repro.serving.kv_offload import TieredKVAllocator
+    kv = TieredKVAllocator(16 * 64, 0, PageConfig(page_size=4,
+                                                  bytes_per_token=4))
+    kv.alloc(7, 5 * 4)
+    with pytest.raises(ValueError, match="truncate"):
+        kv.device_block_table(7, 4)
+
+
+def test_trace_replay_with_host_tier_meets_slos():
+    """End-to-end trace replay through the paged engine with a host KV pool
+    (--host-kv-gb > 0 equivalent): serve a mixed request stream, record
+    TTFT/TPOT per request, and assert zero SLO violations under the modeled
+    hardware — while the trace actually exercises the host tier."""
+    from repro.data.pipeline import DataConfig, request_stream
+
+    eng, _ = _mk_engine(extra_device_pages=3.5, host_pages=64)
+    rng = np.random.default_rng(1)
+    stream = request_stream(DataConfig(seed=1, mean_prompt_len=8,
+                                       mean_output_len=6), 10,
+                            ttft_slo_s=1.0, tpot_slo_s=1.0)
+    reqs = [Request(rid=r.rid,
+                    prompt=rng.integers(0, 100, min(r.prompt_len, 16)
+                                        ).astype(np.int32),
+                    max_new_tokens=min(r.max_new_tokens, 8),
+                    ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
+                    arrival_s=r.arrival_s) for r in stream]
+    out = eng.run(reqs, max_iters=800)
+
+    assert out["finished"] == len(reqs)
+    assert out["rejected"] == 0
+    per = out["per_request"]
+    assert len(per) == len(reqs)
+    for m in per:                       # TTFT/TPOT recorded per request
+        assert m["ttft_s"] is not None and m["ttft_s"] > 0
+        assert m["tpot_mean_s"] > 0
+        assert m["ttft_ok"] and m["tpot_ok"]
+    assert out["slo_ok"]
+    assert eng.host_kv_peak_pages > 0   # the host tier really was used
+    assert eng.kv.device.used_pages == 0 and eng.kv.host.used_pages == 0
+    eng.kv.check_invariants()
 
 
 def test_engine_interval_lowers_kv_headroom_tradeoff():
