@@ -24,6 +24,7 @@ MODULES = [
     "fig13_large_models",
     "fig14_max_length",
     "fig15_kv_tiering",
+    "fig16_prefix_dedup",
     "roofline",
 ]
 

@@ -90,6 +90,17 @@ def pack_token_pages(k_all: np.ndarray, v_all: np.ndarray, page_size: int,
     return out
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_pages_on_device(pages: jax.Array, src_ids: jax.Array,
+                         dst_ids: jax.Array) -> jax.Array:
+    """Copy-on-write data plane: duplicate frames ``src_ids`` into frames
+    ``dst_ids`` within the same pool (one batched gather+scatter; the pool
+    buffer is donated so XLA updates in place). The source frames are read
+    before the scatter, so src/dst lists may interleave freely as long as
+    they are disjoint."""
+    return pages.at[dst_ids].set(jnp.take(pages, src_ids, axis=0))
+
+
 def copy_pages_to_host(device_pages: jax.Array, device_ids,
                        host_pool: np.ndarray, host_ids) -> None:
     """Swap-out: device frames -> host pool slots (in place on the host

@@ -52,6 +52,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size in tokens (the paged decode kernel's "
                          "block granularity)")
+    ap.add_argument("--prefix-dedup", action="store_true",
+                    help="content-address prompt pages across requests: "
+                         "shared prefixes map onto the same physical frames "
+                         "(refcounted, copy-on-write)")
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
+                    help="fraction of the prompt budget drawn from one "
+                         "common prefix (chat-style system prompt; what "
+                         "--prefix-dedup deduplicates)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--peer", action="store_true",
@@ -63,7 +71,8 @@ def main(argv=None) -> dict:
     ecfg = EngineConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                         hbm_budget_bytes=args.hbm_gb * 1e9,
                         host_kv_bytes=args.host_kv_gb * 1e9,
-                        page_size=args.page_size)
+                        page_size=args.page_size,
+                        prefix_dedup=args.prefix_dedup)
     slos = [0.002 * k for k in range(1, 120)]
     eng = build_engine("e0", cfg, hw, ecfg, slos)
     peers = []
@@ -75,10 +84,17 @@ def main(argv=None) -> dict:
                                        mean_output_len=8), args.requests,
                             ttft_slo_s=args.ttft_slo_ms / 1e3,
                             tpot_slo_s=args.tpot_slo_ms / 1e3)
+    common = rng.integers(0, cfg.vocab_size,
+                          int(args.shared_prefix_frac
+                              * (args.max_seq // 2))).astype(np.int32)
+
+    def _prompt(plen: int) -> np.ndarray:
+        rest = rng.integers(0, cfg.vocab_size,
+                            max(plen - len(common), 0)).astype(np.int32)
+        return np.concatenate([common[:plen], rest])
+
     reqs = [Request(rid=r.rid,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        min(r.prompt_len, args.max_seq // 2)
-                                        ).astype(np.int32),
+                    prompt=_prompt(min(r.prompt_len, args.max_seq // 2)),
                     max_new_tokens=min(r.max_new_tokens, args.max_seq // 4),
                     ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
                     arrival_s=r.arrival_s) for r in stream]
@@ -91,6 +107,10 @@ def main(argv=None) -> dict:
     summary["host_kv_peak_pages"] = eng.host_kv_peak_pages
     summary["decode_path"] = "paged"     # single page pool + Pallas kernel
     summary["streamed_pages_peak"] = eng.streamed_pages_peak
+    summary["prefix_dedup"] = args.prefix_dedup
+    summary["device_pages_peak"] = eng.device_pages_peak
+    summary["dedup_pages_reused"] = eng.kv.dedup_pages_reused
+    summary["cow_events"] = eng.cow_events
     print(json.dumps(summary, indent=1))
     return out
 

@@ -19,7 +19,9 @@ dense cache spec):
                                LIFO: a fresh id is handed out only when every
                                lower id is in use, so the high-water mark is
                                bounded by peak concurrency
-                               (max_batch * pages_for(max_seq)).
+                               (max_batch * pages_for(max_seq), plus one
+                               still-unconsumed COW reserve per slot when
+                               prefix dedup is on).
   frames [dev_cap, 2*dev_cap)  the streaming slab: host-resident pages of
                                active requests are gathered here each
                                iteration for attention (no residency change —
@@ -57,7 +59,8 @@ from repro.kernels import ops
 from repro.models.model import Model
 from repro.models.transformer import pattern_info
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
-from repro.serving.kv_offload import DEVICE, SwapScheduler, TieredKVAllocator
+from repro.serving.kv_offload import (DEVICE, HOST, SwapScheduler,
+                                      TieredKVAllocator)
 from repro.serving.request import Request, State
 
 
@@ -72,6 +75,13 @@ class EngineConfig:
     # budget. 0 disables the host tier — admission then falls back to the
     # device-only behavior (wait for pages).
     host_kv_bytes: float = 0.0
+    # Cross-request prefix dedup + copy-on-write pages: prompts sharing a
+    # prefix with a live/host-parked request map onto the same physical
+    # frames (refcount += 1); a write into a shared page moves the writer
+    # onto its pre-claimed private frame first. Off by default — the
+    # dedup-off engine is the PR-2 baseline the differential suite locksteps
+    # against.
+    prefix_dedup: bool = False
 
 
 class ServingEngine:
@@ -116,16 +126,26 @@ class ServingEngine:
         weight_free = (ecfg.hbm_budget_bytes
                        - OffloadPlan(self.num_units, NO_OFFLOAD)
                        .device_bytes(self.unit_bytes))
+        # prefix-dedup scope: frames are content-addressed per model config
+        # AND page geometry — two engines with different weights or page
+        # sizes must never map onto each other's hashes
+        scope = f"{self.cfg!r}|page={ecfg.page_size}"
         self.kv = TieredKVAllocator(
             max(int(weight_free), 0), ecfg.host_kv_bytes,
-            PageConfig(ecfg.page_size, bytes_per_token=kv_tok))
+            PageConfig(ecfg.page_size, bytes_per_token=kv_tok),
+            scope=scope, enable_dedup=ecfg.prefix_dedup)
         self.swap = SwapScheduler(self.kv)
         self.host_kv_peak_pages = 0
         self.streamed_pages_peak = 0
+        self.device_pages_peak = 0
+        self.cow_events = 0
 
-        # physical page pool (see module docstring for the frame map)
+        # physical page pool (see module docstring for the frame map).
+        # With dedup, a slot can pin pages_for(max_seq) block-table frames
+        # PLUS one still-unconsumed COW reserve, so the LIFO high-water
+        # bound gains one frame per slot.
         self.nb = self.kv.device.pages_for(ecfg.max_seq)
-        self.dev_cap = ecfg.max_batch * self.nb
+        self.dev_cap = ecfg.max_batch * (self.nb + int(ecfg.prefix_dedup))
         self.slab_base = self.dev_cap
         self.null_frame = 2 * self.dev_cap
         vh, hd = self.model.virtual_kv, self.cfg.resolved_head_dim
@@ -266,7 +286,8 @@ class ServingEngine:
                                      f"max {max_i}")
                 self.rejected.append(self.queue.pop(0))
                 continue
-            if self.kv.alloc(req.rid, total, allow_host=False) is None \
+            if self.kv.alloc(req.rid, total, allow_host=False,
+                             prompt=req.prompt) is None \
                     and not self._spill_admit(req, total):
                 return  # wait for memory
             self.queue.pop(0)
@@ -278,15 +299,34 @@ class ServingEngine:
         provided the streamed KV traffic keeps every active request's TPOT
         and the new request's TTFT feasible at the current interval. The
         stream rides the same link as weight prefetch, so feasibility is
-        evaluated with the combined-traffic iteration time."""
-        need = self.kv.device.pages_for(total)
-        n_host = need - self.kv.device.free_pages
-        if n_host <= 0 or n_host > self.kv.host.free_pages:
+        evaluated with the combined-traffic iteration time.
+
+        Prefix-dedup savings are accounted here: pages the prompt shares
+        with live frames claim no new capacity, shared host pages already
+        streamed for an active sibling add no link traffic, and dedup'd
+        pages need no spill write-back during prefill — so a request the
+        PR-2 accounting had to park can now clear both SLO checks."""
+        pv = self.kv.dedup_preview(req.prompt, total)
+        n_fresh = (self.kv.device.pages_for(total) - pv.n_hits
+                   + int(pv.need_reserve))
+        n_host = max(n_fresh - self.kv.device.free_pages, 0)
+        if n_host > self.kv.host.free_pages:
             return False                       # no host room: wait
+        if n_host <= 0 and not pv.host_hit_pages():
+            # cannot happen in the synchronous engine: alloc(allow_host=
+            # False) fails exactly when fresh pages overflow to host or a
+            # hit is host-resident, and nothing mutates between that call
+            # and this recomputation. Kept as a defensive wait (not an
+            # assert) so an accounting bug degrades to queueing, never to
+            # an unchecked host admission.
+            return False
         pb = self.kv.page_bytes
         iv = self.interval if self.interval else NO_OFFLOAD
-        streamed_after = (self.swap.streamed_bytes(self._active_rids())
-                          + n_host * pb)
+        # unique host frames after admission: currently streamed ∪ shared
+        # host hits, plus the freshly spilled pages
+        streamed_pages = self.swap.streamed_host_pages(self._active_rids())
+        streamed_after = (len(streamed_pages | pv.host_hit_pages())
+                          + n_host) * pb
         times_d = self.times_fn(self._active_batch() + 1,
                                 self.ecfg.max_seq, "decode")
         dt = iter_time_with_interval_kv(times_d, iv, streamed_after,
@@ -296,7 +336,8 @@ class ServingEngine:
             return False                       # streaming would break TPOT
         if self._modeled_ttft(req, n_host * pb) > req.ttft_slo_s * (1 + 1e-9):
             return False                       # spill write-back breaks TTFT
-        refs = self.kv.alloc(req.rid, total, allow_host=True)
+        refs = self.kv.alloc(req.rid, total, allow_host=True,
+                             prompt=req.prompt, preview=pv)
         assert refs is not None
         return True
 
@@ -328,8 +369,11 @@ class ServingEngine:
             self._params_split[self.interval], inputs,
             cache_len=req.prompt_len)
         self._scatter_prefill_kv(req, caches1)
-        # modeled prefill latency = TTFT (same formula admission checked)
-        ttft = self._modeled_ttft(req, self.kv.host_bytes_of(req.rid))
+        # modeled prefill latency = TTFT (same formula admission checked):
+        # only freshly spilled pages cost write-back — dedup'd host pages
+        # are already resident
+        ttft = self._modeled_ttft(req, self.kv.spill_writeback_bytes_of(
+            req.rid))
         req.ttft_s = ttft
         self.clock_s += ttft
 
@@ -354,7 +398,10 @@ class ServingEngine:
     def _scatter_prefill_kv(self, req: Request, caches1: Any) -> None:
         """Land the prefilled KV in the page pools: device-tier pages go into
         the physical pool via one batched scatter, host-tier (spilled cold
-        prefix) pages go straight into the pinned-host buffer."""
+        prefix) pages go straight into the pinned-host buffer. Pages the
+        allocator mapped onto existing frames (prefix dedup) already hold
+        this exact KV — scattering into them would clobber a sibling's live
+        page, so they are skipped (that skip is the dedup bandwidth win)."""
         rt = self._rt(self.interval)
         merged = merge_stacked(caches1, rt.plan)   # per pattern j: [R,1,S,..]
         # global layer order: unit-major, pattern-minor (u * P + j)
@@ -366,8 +413,11 @@ class ServingEngine:
         vals = ops.pack_token_pages(k_all, v_all, self.ecfg.page_size,
                                     dtype=jnp.bfloat16)
         refs = self.kv.refs(req.rid)
+        deduped = set(self.kv.dedup_hit_pages(req.rid))
         dev_frames, dev_vals = [], []
         for i in range(vals.shape[0]):
+            if i in deduped:
+                continue
             r = refs[i]
             if r.tier == DEVICE:
                 assert r.page < self.dev_cap, "LIFO high-water bound violated"
@@ -395,7 +445,8 @@ class ServingEngine:
         stream_src: list[int] = []      # host pool slots
         stream_dst: list[int] = []      # slab frames
         writeback: list[tuple[int, int]] = []   # (host slot, slab frame)
-        slab_next = self.slab_base
+        slab_of: dict[int, int] = {}    # host slot -> slab frame (dedup:
+        slab_next = self.slab_base      # a shared host page streams ONCE)
         for slot in range(b):
             req = self.slot_req[slot]
             if not self.active[slot] or req is None:
@@ -408,10 +459,12 @@ class ServingEngine:
                         "LIFO high-water bound violated"
                     bt[slot, i] = r.page
                 else:
-                    bt[slot, i] = slab_next
-                    stream_src.append(r.page)
-                    stream_dst.append(slab_next)
-                    slab_next += 1
+                    if r.page not in slab_of:
+                        slab_of[r.page] = slab_next
+                        stream_src.append(r.page)
+                        stream_dst.append(slab_next)
+                        slab_next += 1
+                    bt[slot, i] = slab_of[r.page]
             p = int(self.pos[slot])
             cl[slot] = p + 1                    # includes the token written now
             wpi = p // page
@@ -423,6 +476,54 @@ class ServingEngine:
                 writeback.append((refs[wpi].page, int(wf[slot])))
         assert slab_next <= self.null_frame
         return bt, cl, wf, wo, stream_src, stream_dst, writeback
+
+    def _resolve_cow_writes(self) -> tuple[float, float]:
+        """Copy-on-write pre-pass: before the decode kernel writes this
+        iteration's token KV, every slot whose write page is still shared
+        moves onto its pre-claimed private frame (``kv.prepare_write``), and
+        the page bytes follow through the data plane. Runs after promotions
+        (so the moves see final tiers) and before the block tables are
+        built. A sibling's page bytes are never touched — that is the
+        property the kernel-level COW tests pin down.
+
+        Returns (h2d_bytes, d2h_bytes) of the CROSS-TIER copies so the
+        caller charges them to this iteration's link budget — same-pool
+        copies never touch the host link and cost nothing in the SLO
+        model."""
+        page = self.ecfg.page_size
+        moves = []
+        for slot in range(self.ecfg.max_batch):
+            req = self.slot_req[slot]
+            if not self.active[slot] or req is None:
+                continue
+            moves.extend(self.kv.prepare_write(req.rid,
+                                               int(self.pos[slot]) // page))
+        if not moves:
+            return 0.0, 0.0
+        self.cow_events += len(moves)
+        cow_in = cow_out = 0.0
+        dd_src: list[int] = []
+        dd_dst: list[int] = []
+        for m in moves:
+            src, dst = m.src, m.dst
+            if src.tier == DEVICE and dst.tier == DEVICE:
+                dd_src.append(src.page)
+                dd_dst.append(dst.page)
+            elif src.tier == HOST and dst.tier == HOST:
+                self.host_pool[dst.page] = self.host_pool[src.page]
+            elif src.tier == HOST:
+                self.pool = ops.copy_pages_from_host(
+                    self.host_pool, [src.page], self.pool, [dst.page])
+                cow_in += self.kv.page_bytes
+            else:
+                ops.copy_pages_to_host(self.pool, [src.page],
+                                       self.host_pool, [dst.page])
+                cow_out += self.kv.page_bytes
+        if dd_src:
+            self.pool = ops.copy_pages_on_device(
+                self.pool, jnp.asarray(dd_src, jnp.int32),
+                jnp.asarray(dd_dst, jnp.int32))
+        return cow_in, cow_out
 
     def step(self, peers: list["ServingEngine"] | None = None,
              link_bw: float | None = None) -> None:
@@ -443,6 +544,8 @@ class ServingEngine:
         self._admit()
         self.host_kv_peak_pages = max(self.host_kv_peak_pages,
                                       self.kv.host.used_pages)
+        self.device_pages_peak = max(self.device_pages_peak,
+                                     self.kv.device.used_pages)
         if self._active_batch() == 0:
             return
         # KV tier activity of this iteration: promote host pages into freed
@@ -455,6 +558,18 @@ class ServingEngine:
             self.pool = ops.copy_pages_from_host(
                 self.host_pool, [m.src_page for m in plan.promotions],
                 self.pool, [m.dst_page for m in plan.promotions])
+        cow_in, cow_out = self._resolve_cow_writes()
+        if cow_in or cow_out:
+            # a cross-tier COW moved a write page between tiers, changing
+            # which pages actually stream through the slab this iteration:
+            # re-derive the streamed component from the post-COW refs so
+            # the charged bytes equal the gathers the tables will issue,
+            # then add the one-off COW copies themselves
+            streamed_now = self.swap.streamed_bytes(self._active_rids())
+            plan.kv_in_bytes += streamed_now - plan.streamed_bytes
+            plan.streamed_bytes = streamed_now
+        plan.kv_in_bytes += cow_in
+        plan.kv_out_bytes += cow_out
         self._rt(self.interval)
         bt, cl, wf, wo, stream_src, stream_dst, writeback = \
             self._build_iteration_tables()

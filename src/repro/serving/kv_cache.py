@@ -22,6 +22,12 @@ class PageConfig:
 
 
 class PagedKVAllocator:
+    """Page pool with per-page refcounts: a frame may be referenced by more
+    than one request (cross-request prefix dedup / copy-on-write sharing).
+    ``alloc_pages`` hands out private frames (refcount 1); ``share_pages``
+    adds another owner to a live frame; a frame returns to the free list only
+    when its last reference drops."""
+
     def __init__(self, total_bytes: int, pcfg: PageConfig):
         assert pcfg.bytes_per_token > 0
         self.pcfg = pcfg
@@ -29,6 +35,8 @@ class PagedKVAllocator:
         self.total_pages = max(int(total_bytes // self.page_bytes), 0)
         self._free = list(range(self.total_pages - 1, -1, -1))
         self._by_req: dict[int, list[int]] = {}
+        self._rc: dict[int, int] = {}
+        self.used_peak = 0
 
     # ---- queries -------------------------------------------------------------
     @property
@@ -37,7 +45,11 @@ class PagedKVAllocator:
 
     @property
     def used_pages(self) -> int:
+        """Unique frames in use (a shared frame counts once)."""
         return self.total_pages - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return self._rc.get(page, 0)
 
     def max_allocatable_tokens(self) -> int:
         """Paper Fig. 14's 'max length' metric."""
@@ -57,18 +69,38 @@ class PagedKVAllocator:
         pages = [self._free.pop() for _ in range(n)]
         if pages:
             self._by_req.setdefault(rid, []).extend(pages)
+            for p in pages:
+                self._rc[p] = 1
+        self.used_peak = max(self.used_peak, self.used_pages)
         return pages
 
-    def release_pages(self, rid: int, pages: list[int]) -> None:
-        """Return specific pages of ``rid`` to the free list (migration).
-        Raises if a page is not owned by ``rid`` — the free list must never
-        hold duplicates."""
+    def share_pages(self, rid: int, pages: list[int]) -> None:
+        """Add ``rid`` as another owner of live frames (prefix dedup):
+        refcount += 1, no new frame is claimed. Raises if a page is free."""
+        for p in pages:
+            if self._rc.get(p, 0) < 1:
+                raise ValueError(f"cannot share free page {p}")
+            self._rc[p] += 1
+        if pages:
+            self._by_req.setdefault(rid, []).extend(pages)
+
+    def release_pages(self, rid: int, pages: list[int]) -> list[int]:
+        """Drop ``rid``'s reference to specific pages; a frame returns to the
+        free list only when its last reference drops (returned list). Raises
+        if a page is not owned by ``rid`` — the free list must never hold
+        duplicates."""
         owned = self._by_req.get(rid, [])
+        freed: list[int] = []
         for p in pages:
             owned.remove(p)      # ValueError on foreign/double release
-            self._free.append(p)
+            self._rc[p] -= 1
+            if self._rc[p] == 0:
+                del self._rc[p]
+                self._free.append(p)
+                freed.append(p)
         if not owned:
             self._by_req.pop(rid, None)
+        return freed
 
     def alloc(self, rid: int, tokens: int) -> list[int] | None:
         return self.alloc_pages(rid, self.pages_for(tokens))
@@ -80,19 +112,32 @@ class PagedKVAllocator:
             return True
         return self.alloc_pages(rid, need) is not None
 
-    def free(self, rid: int) -> None:
-        """Release every page of ``rid``; double-free is a no-op."""
+    def free(self, rid: int) -> list[int]:
+        """Drop every reference ``rid`` holds; double-free is a no-op.
+        Returns the frames whose last reference dropped (now free) — the
+        tiered allocator uses this to evict dead prefix-index entries."""
+        freed: list[int] = []
         for p in self._by_req.pop(rid, []):
-            self._free.append(p)
+            self._rc[p] -= 1
+            if self._rc[p] == 0:
+                del self._rc[p]
+                self._free.append(p)
+                freed.append(p)
+        return freed
 
     def check_invariants(self) -> None:
-        """Free list and per-request lists partition [0, total_pages)."""
+        """Free list and held frames partition [0, total_pages); every held
+        frame's refcount equals its reference multiplicity across requests."""
         free = self._free
         assert len(set(free)) == len(free), "duplicate pages in free list"
         held = [p for pages in self._by_req.values() for p in pages]
-        assert len(set(held)) == len(held), "page owned twice"
-        assert not set(free) & set(held), "page both free and owned"
-        assert len(free) + len(held) == self.total_pages
+        counts: dict[int, int] = {}
+        for p in held:
+            counts[p] = counts.get(p, 0) + 1
+        assert counts == self._rc, "refcounts out of sync with references"
+        assert all(c >= 1 for c in counts.values())
+        assert not set(free) & set(counts), "page both free and owned"
+        assert len(free) + len(counts) == self.total_pages
 
     def block_table(self, rid: int, max_pages: int) -> np.ndarray:
         """Padded block table row for the paged decode kernel. Raises when the

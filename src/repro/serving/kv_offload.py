@@ -1,9 +1,10 @@
-"""Two-tier SLO-aware KV-cache host offloading.
+"""Two-tier SLO-aware KV-cache host offloading with cross-request dedup.
 
 The paper offloads model *state*; the seed engine only tiered weights — KV
 pages never left HBM, so max context/batch stayed HBM-bound however small
 the offloading interval got (Fig. 14 saturates). This subsystem extends the
-paged KV allocator with a pinned-host tier:
+paged KV allocator with a pinned-host tier and, on top of the page
+refcounts, LMCache-style cross-request prefix sharing:
 
   * ``HostKVPool``      — host-side page pool, same page geometry as the
                           device pool, with an optional numpy backing buffer
@@ -16,6 +17,13 @@ paged KV allocator with a pinned-host tier:
                           (``swap_out`` / ``swap_in``) rewrites refs and
                           reports (src, dst) frame pairs for the data plane
                           (``kernels.ops.copy_pages_to_host/from_host``).
+  * ``PrefixIndex``     — content-addressed map from (page position, rolling
+                          hash over the token ids, model-config scope) to the
+                          physical frame holding that page's KV. A request
+                          whose prompt shares a prefix with a live or
+                          host-parked request maps its block-table entries
+                          onto the same frames (refcount += 1) instead of
+                          recomputing + re-storing them.
   * ``SwapScheduler``   — per-iteration planner: promotes host pages into
                           freed device frames, streams the still-host-resident
                           KV of active requests in for attention, and charges
@@ -23,15 +31,41 @@ paged KV allocator with a pinned-host tier:
                           prefetch (``interval.iter_time_with_interval_kv``,
                           ``coordinator.InstanceState.kv_bytes_per_iter``).
 
+Sharing + copy-on-write protocol (refcounts live in ``PagedKVAllocator``):
+
+  * Only pages covering the *prompt* are content-indexed: full pages keyed by
+    (index, chain digest), the trailing partial page additionally by its
+    token count. Tail (decode) pages are always private.
+  * A sharer that will decode (total tokens > prompt length) pre-claims one
+    private COW *reserve* frame at admission time, so the copy-on-write at
+    its first decode write can never fail or race a later admission for a
+    frame. ``prepare_write`` swaps the reserve into the block table and
+    returns the data-plane copy; the shared frame is left untouched for its
+    siblings.
+  * The request that *registered* a page (its origin) may keep appending in
+    place even while the page is shared: a sharer's context never extends
+    past the `k` prompt tokens the index key describes until the sharer
+    itself writes — and its first write moves it onto its reserve first.
+    Positions >= k therefore stay invisible to every sibling (attention
+    masks by context length), so the in-place append is safe.
+  * Migration is frame-wise: demoting/promoting/remapping a shared frame
+    moves it ONCE (one ``Migration``, one physical copy, one charge against
+    the link budget) and rewrites the refs of every owner. The frame is
+    released — and its index entry evicted — only when the last reference
+    drops.
+
 Latency semantics (kept SLO-exact, property-tested against the event
 simulator): swap-in gates layer-0 compute; write-back is issued next and
 queues the weight prefetches behind it; weight transfers then follow the
 Fig. 7 group-start schedule. No byte is double-counted: streamed pages do
-not change residency, promoted/demoted pages move exactly once.
+not change residency, promoted/demoted pages move exactly once, and a page
+shared by several active requests streams once per iteration, not once per
+owner.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
@@ -67,6 +101,16 @@ class Migration:
 
 
 @dataclasses.dataclass
+class CowMove:
+    """Copy-on-write: ``rid`` leaves the shared ``src`` frame for its private
+    ``dst`` frame; the data plane must copy the page bytes src -> dst before
+    the next write lands."""
+    rid: int
+    src: PageRef
+    dst: PageRef
+
+
+@dataclasses.dataclass
 class ResizeResult:
     """Data-plane instructions for a device-pool resize.
 
@@ -75,6 +119,7 @@ class ResizeResult:
     pages that stay on device but land in a different frame of the rebuilt
     pool. A caller holding a real page buffer must copy demotions out first
     (old frames are still intact) and then permute the surviving frames.
+    Shared frames appear exactly once in either list.
     """
     demotions: list[Migration]
     remap: list[tuple[int, int]]
@@ -84,20 +129,123 @@ class ResizeResult:
         return len(self.demotions)
 
 
+# ---------------------------------------------------------------------------
+# Content-addressed prefix index
+# ---------------------------------------------------------------------------
+
+
+def prefix_page_keys(scope: str, tokens, page_size: int
+                     ) -> list[tuple[int, str, int]]:
+    """Content keys for every page covering ``tokens``: a rolling hash
+    chained page-by-page (so a key commits to the WHOLE prefix up to and
+    including its page, not just its own tokens), scoped by ``scope`` (model
+    config + page geometry — two models never share frames). Returns
+    (page_index, digest, tokens_in_page) per page; the last entry may be
+    partial."""
+    keys: list[tuple[int, str, int]] = []
+    h = hashlib.sha1(scope.encode()).digest()
+    toks = np.asarray(tokens, np.int64)
+    n = int(toks.shape[0])
+    for start in range(0, n, page_size):
+        chunk = toks[start:start + page_size]
+        h = hashlib.sha1(h + chunk.tobytes()).digest()
+        keys.append((start // page_size, h.hex(), int(chunk.shape[0])))
+    return keys
+
+
+class PrefixIndex:
+    """key <-> physical frame map, kept in lock-step with page migration:
+    entries follow their frame across tiers and die with the frame's last
+    reference."""
+
+    def __init__(self):
+        self._by_key: dict[tuple, PageRef] = {}
+        self._by_frame: dict[PageRef, tuple] = {}
+
+    def get(self, key: tuple) -> PageRef | None:
+        return self._by_key.get(key)
+
+    def put(self, key: tuple, ref: PageRef) -> None:
+        assert key not in self._by_key and ref not in self._by_frame
+        self._by_key[key] = ref
+        self._by_frame[ref] = key
+
+    def move(self, old: PageRef, new: PageRef) -> None:
+        """The frame holding an indexed page migrated (swap/resize)."""
+        key = self._by_frame.pop(old, None)
+        if key is not None:
+            self._by_key[key] = new
+            self._by_frame[new] = key
+
+    def remap_frames(self, tier: str, remap: list[tuple[int, int]]) -> None:
+        """Apply a whole-pool frame permutation (device resize). Two-phase:
+        old and new frame ids overlap, so pairwise ``move`` calls would
+        alias — a moved entry could clobber one not yet moved."""
+        moved: list[tuple[tuple, PageRef]] = []
+        for old, new in remap:
+            key = self._by_frame.pop(PageRef(tier, old), None)
+            if key is not None:
+                moved.append((key, PageRef(tier, new)))
+        for key, ref in moved:
+            self._by_key[key] = ref
+            self._by_frame[ref] = key
+
+    def evict(self, ref: PageRef) -> None:
+        """The frame died (last reference dropped): forget its content."""
+        key = self._by_frame.pop(ref, None)
+        if key is not None:
+            del self._by_key[key]
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+
+@dataclasses.dataclass
+class DedupPreview:
+    """What ``alloc`` would share for a given prompt (admission planning).
+    Carries the computed rolling-hash ``keys`` so a caller that previews and
+    then allocates (``alloc(..., preview=)``) hashes the prompt once, not
+    three times per admission attempt."""
+    hit_refs: list[PageRef]
+    hit_indices: list[int]
+    need_reserve: bool
+    keys: list[tuple[int, str, int]] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def n_hits(self) -> int:
+        return len(self.hit_refs)
+
+    def host_hit_pages(self) -> set[int]:
+        return {r.page for r in self.hit_refs if r.tier == HOST}
+
+
 class TieredKVAllocator:
     """Paged KV accounting across device HBM + pinned host memory.
 
     The device pool is the one the paged decode kernel indexes through block
     tables; the host pool absorbs the cold prefix of requests whose KV does
-    not fit on device. Per-request refs are kept in token order.
+    not fit on device. Per-request refs are kept in token order. With
+    ``enable_dedup`` the prompt pages are content-addressed through the
+    ``PrefixIndex`` and shared across requests (see module docstring for the
+    COW protocol).
     """
 
     def __init__(self, device_bytes: float, host_bytes: float,
-                 pcfg: PageConfig):
+                 pcfg: PageConfig, scope: str = "",
+                 enable_dedup: bool = False):
         self.pcfg = pcfg
         self.device = PagedKVAllocator(max(int(device_bytes), 0), pcfg)
         self.host = HostKVPool(max(int(host_bytes), 0), pcfg)
         self._refs: dict[int, list[PageRef]] = {}
+        self.scope = scope
+        self.enable_dedup = enable_dedup
+        self.index = PrefixIndex()
+        self._dedup_hits: dict[int, list[int]] = {}   # rid -> hit page idxs
+        self._fresh_host: dict[int, int] = {}         # rid -> fresh host pages
+        self._reserve: dict[int, PageRef] = {}        # rid -> COW reserve
+        self.dedup_pages_reused = 0                   # cumulative hit count
+        self.cow_copies = 0                           # cumulative COW moves
 
     # ---- queries -------------------------------------------------------------
     @property
@@ -116,6 +264,24 @@ class TieredKVAllocator:
     def host_bytes_of(self, rid: int) -> int:
         return len(self.host_pages_of(rid)) * self.page_bytes
 
+    def spill_writeback_bytes_of(self, rid: int) -> int:
+        """Host bytes prefill must actually write back for ``rid``: freshly
+        claimed host frames only — dedup'd host pages are already resident,
+        so they cost stream traffic but no spill write-back."""
+        return self._fresh_host.get(rid, 0) * self.page_bytes
+
+    def dedup_hit_pages(self, rid: int) -> list[int]:
+        """Page indices of ``rid`` that were mapped onto existing frames at
+        alloc time (prefill must NOT scatter KV into these)."""
+        return list(self._dedup_hits.get(rid, []))
+
+    def reserve_of(self, rid: int) -> PageRef | None:
+        return self._reserve.get(rid)
+
+    def refcount(self, ref: PageRef) -> int:
+        pool = self.device if ref.tier == DEVICE else self.host
+        return pool.refcount(ref.page)
+
     def max_allocatable_tokens(self, include_host: bool = True) -> int:
         """Fig. 14's metric, lifted by the host tier."""
         pages = self.device.free_pages
@@ -123,26 +289,90 @@ class TieredKVAllocator:
             pages += self.host.free_pages
         return pages * self.pcfg.page_size
 
+    # ---- dedup probing -------------------------------------------------------
+    def _prompt_keys(self, prompt) -> list[tuple[int, str, int]]:
+        return prefix_page_keys(self.scope, prompt, self.pcfg.page_size)
+
+    def dedup_preview(self, prompt, tokens: int) -> DedupPreview:
+        """Which prompt pages ``alloc(rid, tokens, prompt=...)`` would share.
+        Hits are the contiguous leading run of index matches (prefix
+        semantics); ``need_reserve`` is True when the trailing partial prompt
+        page is a hit AND the request will decode into it (tokens >
+        prompt length), which pre-claims one private frame for the COW."""
+        if not self.enable_dedup or prompt is None or len(prompt) == 0:
+            return DedupPreview([], [], False)
+        keys = self._prompt_keys(prompt)
+        hits: list[PageRef] = []
+        idxs: list[int] = []
+        need_reserve = False
+        for (idx, digest, ntok) in keys:
+            ref = self.index.get((idx, digest, ntok))
+            if ref is None:
+                break
+            hits.append(ref)
+            idxs.append(idx)
+            if ntok < self.pcfg.page_size and tokens > len(prompt):
+                need_reserve = True
+        return DedupPreview(hits, idxs, need_reserve, keys)
+
     # ---- allocation ----------------------------------------------------------
-    def alloc(self, rid: int, tokens: int, allow_host: bool = True
+    def alloc(self, rid: int, tokens: int, allow_host: bool = True,
+              prompt=None, preview: DedupPreview | None = None
               ) -> list[PageRef] | None:
-        """Reserve the whole allocation up front, device-preferred; overflow
-        spills to the host tier at the *front* (oldest positions) so decode
-        writes always hit device frames. None if the two tiers cannot hold
-        it (nothing is claimed on failure)."""
+        """Reserve the whole allocation up front, device-preferred; fresh
+        frames fill the non-shared positions host-first (the cold front) and
+        device-last, so decode writes land on device frames whenever the
+        device pool can hold the tail (when it cannot — e.g. a full-prefix
+        dedup hit with an exhausted device pool — the write path falls back
+        to the streamed-page + dirty-write-back route). With ``prompt``
+        given and dedup enabled, prompt pages already present in the prefix
+        index are shared (refcount += 1) instead of claiming fresh frames,
+        and fresh prompt pages are registered in the index — the caller must
+        land their KV before the next ``alloc`` (the engine prefills
+        synchronously after admitting). A caller that already ran
+        ``dedup_preview`` this scheduling step (no allocator mutation in
+        between) passes it as ``preview`` to skip re-hashing the prompt.
+        ``allow_host=False`` refuses any allocation that would claim a new
+        host frame OR reference an existing host-resident shared page (both
+        put traffic on the link that admission must re-check). None if the
+        allocation cannot be satisfied (nothing is claimed on failure)."""
+        assert prompt is None or len(prompt) <= tokens, \
+            "allocation must cover the whole prompt"
         need = self.device.pages_for(tokens)
-        n_host = max(need - self.device.free_pages, 0)
-        if n_host > 0 and not allow_host:
+        pv = preview if preview is not None \
+            else self.dedup_preview(prompt, tokens)
+        n_fresh = need - pv.n_hits + (1 if pv.need_reserve else 0)
+        n_host = max(n_fresh - self.device.free_pages, 0)
+        if not allow_host and (n_host > 0 or pv.host_hit_pages()):
             return None
         if n_host > self.host.free_pages:
             return None
         hp = self.host.alloc_pages(rid, n_host)
-        dp = self.device.alloc_pages(rid, need - n_host)
+        dp = self.device.alloc_pages(rid, n_fresh - n_host)
         assert hp is not None and dp is not None
-        refs = [PageRef(HOST, p) for p in hp] + [PageRef(DEVICE, p)
-                                                 for p in dp]
+        if pv.need_reserve:
+            # the reserve prefers a device frame (the COW target is the
+            # decode write page); it is claimed in the pool but not in refs
+            self._reserve[rid] = (PageRef(DEVICE, dp.pop()) if dp
+                                  else PageRef(HOST, hp.pop()))
+        for ref in pv.hit_refs:
+            pool = self.device if ref.tier == DEVICE else self.host
+            pool.share_pages(rid, [ref.page])
+        self.dedup_pages_reused += pv.n_hits
+        # position-wise refs: hits keep their page index, fresh pages fill
+        # the rest host-first (cold prefix on host)
+        fresh = iter([PageRef(HOST, p) for p in hp]
+                     + [PageRef(DEVICE, p) for p in dp])
+        hitmap = dict(zip(pv.hit_indices, pv.hit_refs))
+        refs = [hitmap.get(i) or next(fresh) for i in range(need)]
         if refs:
             self._refs.setdefault(rid, []).extend(refs)
+        if pv.hit_indices:
+            self._dedup_hits[rid] = list(pv.hit_indices)
+        self._fresh_host[rid] = len(hp)
+        for key in pv.keys:
+            if key[0] not in hitmap and self.index.get(key) is None:
+                self.index.put(key, refs[key[0]])
         return refs
 
     def extend(self, rid: int, new_total_tokens: int,
@@ -192,100 +422,198 @@ class TieredKVAllocator:
         return migrations
 
     def free(self, rid: int) -> None:
-        self.device.free(rid)
-        self.host.free(rid)
+        """Drop every reference ``rid`` holds (refs + COW reserve). Shared
+        frames survive for their remaining owners; frames whose last
+        reference dropped leave the prefix index with them."""
+        for p in self.device.free(rid):
+            self.index.evict(PageRef(DEVICE, p))
+        for p in self.host.free(rid):
+            self.index.evict(PageRef(HOST, p))
         self._refs.pop(rid, None)
+        self._dedup_hits.pop(rid, None)
+        self._fresh_host.pop(rid, None)
+        self._reserve.pop(rid, None)
+
+    # ---- copy-on-write -------------------------------------------------------
+    def prepare_write(self, rid: int, page_idx: int) -> list[CowMove]:
+        """Called before ``rid`` writes into its page ``page_idx`` (the
+        decode write position's page). Resolves sharing so the write cannot
+        corrupt a sibling:
+
+          * private page (refcount 1): write in place; a now-stale COW
+            reserve (every sibling left or finished) is released.
+          * shared page, ``rid`` holds a reserve (it joined via dedup): swap
+            the reserve into the block table — the returned ``CowMove`` tells
+            the data plane to copy the page bytes first.
+          * shared page, no reserve: ``rid`` is the page's origin; appending
+            in place is safe (sibling contexts never reach the appended
+            positions before their own COW — see module docstring).
+        """
+        refs = self._refs.get(rid, [])
+        assert 0 <= page_idx < len(refs)
+        ref = refs[page_idx]
+        pool = self.device if ref.tier == DEVICE else self.host
+        if pool.refcount(ref.page) <= 1:
+            self._drop_reserve(rid)
+            return []
+        new_ref = self._reserve.pop(rid, None)
+        if new_ref is None:
+            return []                          # origin: in-place append
+        pool.release_pages(rid, [ref.page])    # rc > 1: frame survives
+        refs[page_idx] = new_ref
+        self.cow_copies += 1
+        return [CowMove(rid, ref, new_ref)]
+
+    def _drop_reserve(self, rid: int) -> None:
+        res = self._reserve.pop(rid, None)
+        if res is None:
+            return
+        pool = self.device if res.tier == DEVICE else self.host
+        pool.release_pages(rid, [res.page])
 
     # ---- migration -----------------------------------------------------------
+    def _owners_of(self, ref: PageRef) -> list[tuple[int, list[int]]]:
+        """(rid, ref positions) for every request referencing ``ref``."""
+        out = []
+        for rid, refs in self._refs.items():
+            idxs = [i for i, r in enumerate(refs) if r == ref]
+            if idxs:
+                out.append((rid, idxs))
+        return out
+
+    def _move_frame(self, ref: PageRef, new_ref: PageRef) -> None:
+        """Rewrite every owner's refs after a frame migration; the pools'
+        ownership must already have been transferred by the caller."""
+        for rid, refs in self._refs.items():
+            for i, r in enumerate(refs):
+                if r == ref:
+                    refs[i] = new_ref
+        for rid, r in self._reserve.items():
+            if r == ref:
+                self._reserve[rid] = new_ref
+        self.index.move(ref, new_ref)
+
+    def _transfer_frame(self, ref: PageRef, dst_pool, dst_tier: str
+                        ) -> int | None:
+        """Move one frame — with EVERY owner's reference — to ``dst_pool``.
+        Returns the new frame id, or None when the destination is full."""
+        src_pool = self.device if ref.tier == DEVICE else self.host
+        holders: list[int] = []        # one entry per reference held
+        for rid, idxs in self._owners_of(ref):
+            holders.extend([rid] * len(idxs))
+        holders.extend(rid for rid, r in self._reserve.items() if r == ref)
+        assert holders, "transferring an unreferenced frame"
+        dp = dst_pool.alloc_pages(holders[0], 1)
+        if dp is None:
+            return None
+        for rid in holders[1:]:
+            dst_pool.share_pages(rid, [dp[0]])
+        for rid in holders:
+            src_pool.release_pages(rid, [ref.page])
+        self._move_frame(ref, PageRef(dst_tier, dp[0]))
+        return dp[0]
+
     def swap_out(self, rid: int, n_pages: int) -> list[Migration]:
-        """Demote ``rid``'s ``n_pages`` oldest device pages to host. Returns
-        the moves actually performed (host pool may fill up)."""
+        """Demote ``rid``'s ``n_pages`` oldest device pages to host. A shared
+        frame moves once, for every owner. Returns the moves actually
+        performed (host pool may fill up)."""
         moves: list[Migration] = []
         refs = self._refs.get(rid, [])
-        for idx, ref in enumerate(refs):
+        for ref in list(refs):
             if len(moves) >= n_pages:
                 break
-            if ref.tier != DEVICE:
+            if ref.tier != DEVICE or ref not in refs:
                 continue
-            hp = self.host.alloc_pages(rid, 1)
+            hp = self._transfer_frame(ref, self.host, HOST)
             if hp is None:
                 break
-            self.device.release_pages(rid, [ref.page])
-            refs[idx] = PageRef(HOST, hp[0])
-            moves.append(Migration(rid, DEVICE, ref.page, hp[0]))
+            moves.append(Migration(rid, DEVICE, ref.page, hp))
         return moves
 
     def swap_in(self, rid: int, n_pages: int) -> list[Migration]:
-        """Promote ``rid``'s ``n_pages`` oldest host pages back to device."""
+        """Promote ``rid``'s ``n_pages`` oldest host pages back to device
+        (shared frames move once, for every owner)."""
         moves: list[Migration] = []
         refs = self._refs.get(rid, [])
-        for idx, ref in enumerate(refs):
+        for ref in list(refs):
             if len(moves) >= n_pages:
                 break
-            if ref.tier != HOST:
+            if ref.tier != HOST or ref not in refs:
                 continue
-            dp = self.device.alloc_pages(rid, 1)
+            dp = self._transfer_frame(ref, self.device, DEVICE)
             if dp is None:
                 break
-            self.host.release_pages(rid, [ref.page])
-            refs[idx] = PageRef(DEVICE, dp[0])
-            moves.append(Migration(rid, HOST, ref.page, dp[0]))
+            moves.append(Migration(rid, HOST, ref.page, dp))
         return moves
 
     def can_resize_device(self, new_total_bytes: float) -> bool:
         """Would ``resize_device`` succeed? False when the shrink's overflow
-        exceeds free host capacity (resize_device would raise)."""
+        exceeds free host capacity (resize_device would raise). Shared
+        frames count once — ``used_pages`` is unique frames."""
         new_pages = max(int(new_total_bytes), 0) // self.page_bytes
-        used = sum(len(self.device_pages_of(rid)) for rid in self._refs)
-        return used - new_pages <= self.host.free_pages
+        return self.device.used_pages - new_pages <= self.host.free_pages
 
     def resize_device(self, new_total_bytes: float) -> ResizeResult:
         """Rebuild the device pool for a new byte budget (the offloading
-        interval changed the resident weight set). Existing device pages are
-        re-assigned to fresh frames; overflow demotes host-ward, largest
-        holders first. Returns the demotions and the old->new frame remap so
-        a caller holding the physical page buffer can mirror the move
-        (serving.engine copies demoted frames to the host pool and permutes
-        the surviving frames in place).
+        interval changed the resident weight set). Existing device frames
+        are re-assigned to fresh frames; overflow demotes host-ward, largest
+        holders first, one move per unique frame however many requests share
+        it. Returns the demotions and the old->new frame remap so a caller
+        holding the physical page buffer can mirror the move (serving.engine
+        copies demoted frames to the host pool and permutes the surviving
+        frames in place).
         """
         if not self.can_resize_device(new_total_bytes):
             # validated up front so failure never leaves partial state
             raise RuntimeError("device KV overflow exceeds host capacity")
-        old_used = {rid: len(self.device_pages_of(rid)) for rid in self._refs}
-        new_dev = PagedKVAllocator(max(int(new_total_bytes), 0), self.pcfg)
-        demand = sum(old_used.values())
+        new_total = max(int(new_total_bytes), 0) // self.page_bytes
         demotions: list[Migration] = []
-        # shed overflow: take from the requests holding the most device pages
-        while demand > new_dev.total_pages:
-            over = demand - new_dev.total_pages
-            rid = max(old_used, key=old_used.get)
-            take = min(over, old_used[rid])
-            hp = self.host.alloc_pages(rid, take)
-            assert hp is not None and take > 0   # entry check guarantees room
-            refs = self._refs[rid]
-            moved = 0
-            for idx, ref in enumerate(refs):
-                if moved >= take:
-                    break
-                if ref.tier == DEVICE:
-                    demotions.append(Migration(rid, DEVICE, ref.page,
-                                               hp[moved]))
-                    refs[idx] = PageRef(HOST, hp[moved])
-                    moved += 1
-            old_used[rid] -= take
-            demand -= take
-        # re-assign surviving device pages to fresh frames
+        # shed overflow: take from the requests holding the most device
+        # pages, their oldest (front) frames first. Counts are maintained
+        # incrementally (a shared frame's transfer drops every owner's
+        # count) — rebuilding them per demoted frame would make a large
+        # shrink quadratic in pool size.
+        counts = {rid: len(self.device_pages_of(rid)) for rid in self._refs}
+        while self.device.used_pages > new_total:
+            holders = {r: c for r, c in counts.items() if c > 0}
+            if holders:
+                rid = max(holders, key=holders.get)
+                ref = next(r for r in self._refs[rid] if r.tier == DEVICE)
+            else:
+                # only COW reserves left on device
+                rid, ref = next((r, v) for r, v in self._reserve.items()
+                                if v.tier == DEVICE)
+            owners = self._owners_of(ref)
+            hp = self._transfer_frame(ref, self.host, HOST)
+            assert hp is not None            # entry check guarantees room
+            for orid, idxs in owners:
+                counts[orid] -= len(idxs)
+            demotions.append(Migration(rid, DEVICE, ref.page, hp))
+        # re-assign surviving device frames to fresh frames in a new pool
+        new_dev = PagedKVAllocator(max(int(new_total_bytes), 0), self.pcfg)
+        frame_new: dict[int, int] = {}
         remap: list[tuple[int, int]] = []
-        for rid, count in old_used.items():
-            dp = new_dev.alloc_pages(rid, count)
-            assert dp is not None
-            it = iter(dp)
-            refs = self._refs[rid]
-            for idx, ref in enumerate(refs):
-                if ref.tier == DEVICE:
-                    new_frame = next(it)
-                    remap.append((ref.page, new_frame))
-                    refs[idx] = PageRef(DEVICE, new_frame)
+
+        def assign(rid: int, old: int) -> int:
+            if old not in frame_new:
+                dp = new_dev.alloc_pages(rid, 1)
+                assert dp is not None
+                frame_new[old] = dp[0]
+                remap.append((old, dp[0]))
+            else:
+                new_dev.share_pages(rid, [frame_new[old]])
+            return frame_new[old]
+
+        for rid, refs in self._refs.items():
+            for i, r in enumerate(refs):
+                if r.tier == DEVICE:
+                    refs[i] = PageRef(DEVICE, assign(rid, r.page))
+        for rid, r in list(self._reserve.items()):
+            if r.tier == DEVICE:
+                self._reserve[rid] = PageRef(DEVICE, assign(rid, r.page))
+        # the index follows its frames to their new ids (two-phase: old and
+        # new frame ids overlap)
+        self.index.remap_frames(DEVICE, remap)
         self.device = new_dev
         return ResizeResult(demotions=demotions, remap=remap)
 
@@ -303,13 +631,27 @@ class TieredKVAllocator:
     def check_invariants(self) -> None:
         self.device.check_invariants()
         self.host.check_invariants()
-        for rid, refs in self._refs.items():
-            dev = sorted(p for r in refs if r.tier == DEVICE
-                         for p in [r.page])
-            host = sorted(p for r in refs if r.tier == HOST
-                          for p in [r.page])
-            assert dev == sorted(self.device.pages_of(rid))
-            assert host == sorted(self.host.pages_of(rid))
+        rids = set(self._refs) | set(self._reserve)
+        for rid in rids:
+            refs = self._refs.get(rid, [])
+            dev = [r.page for r in refs if r.tier == DEVICE]
+            host = [r.page for r in refs if r.tier == HOST]
+            res = self._reserve.get(rid)
+            if res is not None:
+                (dev if res.tier == DEVICE else host).append(res.page)
+            assert sorted(dev) == sorted(self.device.pages_of(rid))
+            assert sorted(host) == sorted(self.host.pages_of(rid))
+        for rid, res in self._reserve.items():
+            # a COW reserve is a claimed, private, spare frame
+            pool = self.device if res.tier == DEVICE else self.host
+            assert pool.refcount(res.page) == 1, "reserve frame is shared"
+            assert all(res != r for r in self._refs.get(rid, [])), \
+                "reserve frame already mapped in the block table"
+        for key, ref in self.index._by_key.items():
+            assert self.index._by_frame.get(ref) == key
+            assert self.refcount(ref) >= 1, "index entry on a dead frame"
+        for ref, key in self.index._by_frame.items():
+            assert self.index._by_key.get(key) == ref
 
 
 # ---------------------------------------------------------------------------
@@ -333,7 +675,11 @@ class SwapScheduler:
     pages of active requests (cheapest first: the request with the fewest
     host pages clears its streaming debt soonest); whatever stays on host is
     streamed in for attention each iteration. Demotions queued by interval
-    changes or tail growth are charged as write-back traffic.
+    changes or tail growth are charged as write-back traffic. All byte
+    accounting is frame-wise: a host page shared by several active requests
+    streams ONCE per iteration and a shared demotion writes back ONCE —
+    charging per owner would double-bill the link the SLO math budgets
+    (``iter_time_with_interval_kv``).
     """
 
     def __init__(self, kv: TieredKVAllocator):
@@ -341,21 +687,28 @@ class SwapScheduler:
         self._pending_out_pages = 0
 
     def note_demotions(self, n_pages: int) -> None:
-        """Register demotions performed by resize/extend since last plan."""
+        """Register demotions performed by resize/extend since last plan
+        (callers pass unique frame moves — one per ``Migration``)."""
         self._pending_out_pages += n_pages
 
     def pending_out_bytes(self) -> float:
         """Write-back traffic already queued for the next iteration."""
         return self._pending_out_pages * self.kv.page_bytes
 
+    def streamed_host_pages(self, active_rids: list[int]) -> set[int]:
+        """UNIQUE host frames the active requests attend through."""
+        return {p for r in active_rids for p in self.kv.host_pages_of(r)}
+
     def streamed_bytes(self, active_rids: list[int]) -> float:
-        return float(sum(self.kv.host_bytes_of(r) for r in active_rids))
+        return float(len(self.streamed_host_pages(active_rids))
+                     * self.kv.page_bytes)
 
     def plan_iteration(self, active_rids: list[int]) -> SwapPlan:
         plan = SwapPlan()
         plan.kv_out_bytes = self._pending_out_pages * self.kv.page_bytes
         self._pending_out_pages = 0
-        # promote into free device frames, cheapest request first
+        # promote into free device frames, cheapest request first (a shared
+        # frame promotes once: the first owner's swap_in rewrites them all)
         order = sorted((r for r in active_rids if self.kv.host_pages_of(r)),
                        key=lambda r: len(self.kv.host_pages_of(r)))
         for rid in order:

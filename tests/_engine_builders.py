@@ -22,7 +22,7 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                       vocab=128, max_batch=4, max_seq=48, page_size=16,
                       hbm_gb: float | None = None,
                       extra_device_pages: float | None = None,
-                      host_pages: int = 0,
+                      host_pages: int = 0, prefix_dedup: bool = False,
                       batches=(1, 2, 4, 8), seqs=(16, 32, 64)):
     """Reduced-qwen engine + analyzer. Size HBM either directly (``hbm_gb``)
     or as resident weights plus ``extra_device_pages`` KV pages (the
@@ -49,5 +49,6 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                         EngineConfig(max_batch=max_batch, max_seq=max_seq,
                                      page_size=page_size,
                                      hbm_budget_bytes=hbm,
-                                     host_kv_bytes=host_pages * page_bytes))
+                                     host_kv_bytes=host_pages * page_bytes,
+                                     prefix_dedup=prefix_dedup))
     return eng, an

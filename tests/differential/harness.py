@@ -133,3 +133,79 @@ class DualEngine:
             it += 1
         assert not self.eng.queue and self.eng._active_batch() == 0, \
             f"trace did not drain in {max_iters} iterations"
+
+
+class PagedDualEngine:
+    """Locksteps a prefix-dedup engine against a dedup-OFF engine (the PR-2
+    paged baseline) fed the same request stream, asserting at every
+    iteration that admissions, logits, and greedy tokens are identical.
+
+    Unlike ``DualEngine`` the two sides generate independently (no teacher
+    forcing), so the traces only stay comparable if dedup is numerically
+    invisible. It is, by construction: a deduped page holds the *stored
+    bf16 KV bits* of the origin request's prefill, and the suites pair
+    requests of equal prompt length, so the baseline engine computes
+    bit-identical KV for those positions itself (causal attention: prefix
+    hidden states depend only on prefix tokens). Any logic bug — scatter
+    into a shared frame, missing COW, stale index entry after migration —
+    corrupts whole pages and trips the gates immediately.
+
+    Both engines must be built from the same reduced config (identical
+    params via the same init key) and the same memory sizing, roomy enough
+    that the BASELINE admits everything it sees the same iteration the
+    dedup engine does; the dedup side then has strictly spare capacity,
+    which ``device_frames_saved`` reports.
+    """
+
+    def __init__(self, baseline: ServingEngine, dedup: ServingEngine,
+                 rtol: float = 5e-2, atol: float = 1e-1):
+        assert not baseline.ecfg.prefix_dedup and dedup.ecfg.prefix_dedup
+        self.base = baseline
+        self.dedup = dedup
+        self.rtol, self.atol = rtol, atol
+        self.iters = 0
+        self.decode_compares = 0
+        self.prefill_compares = 0
+
+    def _close(self, got: np.ndarray, want: np.ndarray, what: str) -> None:
+        np.testing.assert_allclose(got, want, rtol=self.rtol, atol=self.atol,
+                                   err_msg=f"logit divergence at {what}")
+        assert int(np.argmax(got)) == int(np.argmax(want)), \
+            f"greedy-token divergence at {what}"
+
+    def step(self, **kw) -> None:
+        self.base.step(**kw)
+        self.dedup.step(**kw)
+        b_pre = [(r.rid, s) for r, s, _ in self.base.prefill_log]
+        d_pre = [(r.rid, s) for r, s, _ in self.dedup.prefill_log]
+        assert b_pre == d_pre, \
+            f"admission divergence at iter={self.iters}: {b_pre} != {d_pre}"
+        for (br, bs, bl), (_, _, dl) in zip(self.base.prefill_log,
+                                            self.dedup.prefill_log):
+            self._close(dl, bl, f"prefill rid={br.rid} iter={self.iters}")
+            self.prefill_compares += 1
+        b, d = self.base.last_decode, self.dedup.last_decode
+        assert (b is None) == (d is None)
+        if b is not None:
+            assert np.array_equal(b["active"], d["active"])
+            assert np.array_equal(b["tokens"], d["tokens"])
+            assert np.array_equal(b["pos"], d["pos"])
+            for slot in np.flatnonzero(b["active"]):
+                self._close(d["logits"][slot], b["logits"][slot],
+                            f"decode iter={self.iters} slot={slot}")
+                self.decode_compares += 1
+        self.iters += 1
+
+    def run_until_drained(self, max_iters: int = 2000, **kw) -> None:
+        it = 0
+        while (self.base.queue or self.base._active_batch() > 0
+               or self.dedup.queue or self.dedup._active_batch() > 0) \
+                and it < max_iters:
+            self.step(**kw)
+            it += 1
+        for eng in (self.base, self.dedup):
+            assert not eng.queue and eng._active_batch() == 0, \
+                f"trace did not drain in {max_iters} iterations"
+
+    def device_frames_saved(self) -> int:
+        return self.base.device_pages_peak - self.dedup.device_pages_peak

@@ -24,7 +24,8 @@ except ImportError:
 import pytest
 
 from repro.serving.kv_cache import PageConfig
-from repro.serving.kv_offload import DEVICE, HOST, TieredKVAllocator
+from repro.serving.kv_offload import (DEVICE, HOST, PageRef,
+                                      TieredKVAllocator)
 
 PAGE = 4   # tokens per page
 BPT = 4    # bytes per token
@@ -120,3 +121,124 @@ def test_tiered_allocator_random_op_sequences(codes, dev_pages, host_pages):
         kv.free(rid)
     kv.check_invariants()
     assert kv.device.used_pages == 0 and kv.host.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Refcounted sharing / copy-on-write property test
+# ---------------------------------------------------------------------------
+
+
+def _total_refcounts(kv) -> int:
+    return (sum(kv.device._rc.values()) + sum(kv.host._rc.values()))
+
+
+def _live_references(kv) -> int:
+    """Block-table entries + COW reserves across all live requests."""
+    return (sum(len(refs) for refs in kv._refs.values())
+            + len(kv._reserve))
+
+
+@given(codes=st.lists(st.integers(0, (1 << 30) - 1), min_size=0, max_size=60),
+       dev_pages=st.integers(0, 12), host_pages=st.integers(0, 12))
+@settings(max_examples=80, deadline=None)
+def test_refcounted_dedup_random_op_sequences(codes, dev_pages, host_pages):
+    """Drive the dedup-enabled allocator with random share / write(COW) /
+    swap / free / resize sequences. After EVERY operation:
+
+      * the sum of pool refcounts equals the number of live references
+        (block-table entries + COW reserves) — nothing leaked, nothing
+        double-freed,
+      * ``check_invariants`` holds (pool partition, refcount multiplicity,
+        reserve privacy, index <-> frame consistency),
+      * every live request still holds exactly ``pages_for(tokens)``
+        block-table entries.
+
+    Prompts are drawn from 3 families so shared prefixes actually occur;
+    writes replay the engine's decode write sequence (position = prompt_len
+    + generated so far) through ``prepare_write``, which is where COW fires.
+    """
+    kv = TieredKVAllocator(dev_pages * PB, host_pages * PB,
+                           PageConfig(PAGE, bytes_per_token=BPT),
+                           scope="prop", enable_dedup=True)
+    state: dict[int, dict] = {}       # rid -> {tokens, prompt_len, written}
+    next_rid = 0
+    for code in codes:
+        op, arg = code % 6, code // 6
+        alive = sorted(state)
+        if op == 0:                                          # alloc w/ prompt
+            fam = arg % 3
+            plen = arg // 3 % (3 * PAGE) + 1
+            extra = arg // 9 % (2 * PAGE)
+            prompt = (np.arange(plen, dtype=np.int64) + 10_000 * fam)
+            refs = kv.alloc(next_rid, plen + extra,
+                            allow_host=bool(arg % 2), prompt=prompt)
+            if refs is not None:
+                assert len(refs) == kv.device.pages_for(plen + extra)
+                state[next_rid] = {"tokens": plen + extra, "plen": plen,
+                                   "written": 0}
+                next_rid += 1
+            else:
+                kv.free(next_rid)    # nothing claimed: must be a no-op
+        elif op == 1 and alive:                              # decode write
+            rid = alive[arg % len(alive)]
+            s = state[rid]
+            pos = s["plen"] + s["written"]
+            if pos < s["tokens"]:
+                before = kv.refs(rid)
+                moves = kv.prepare_write(rid, pos // PAGE)
+                after = kv.refs(rid)
+                for m in moves:
+                    # COW swaps exactly the written page, onto a private
+                    # frame, without disturbing any other entry
+                    assert m.rid == rid
+                    assert before[pos // PAGE] == m.src
+                    assert after[pos // PAGE] == m.dst
+                    assert kv.refcount(m.dst) == 1
+                assert [r for i, r in enumerate(before)
+                        if i != pos // PAGE] == \
+                    [r for i, r in enumerate(after) if i != pos // PAGE]
+                # the written page is now safe: private, or rid is its origin
+                wref = kv.refs(rid)[pos // PAGE]
+                assert kv.refcount(wref) == 1 or \
+                    kv.reserve_of(rid) is None
+                s["written"] += 1
+        elif op == 2 and alive:                              # swap_out
+            rid = alive[arg % len(alive)]
+            moves = kv.swap_out(rid, arg % 3 + 1)
+            for m in moves:          # a shared frame moved for every owner
+                assert all(PageRef(DEVICE, m.src_page) not in kv.refs(r)
+                           for r in alive)
+        elif op == 3 and alive:                              # swap_in
+            rid = alive[arg % len(alive)]
+            kv.swap_in(rid, arg % 3 + 1)
+        elif op == 4:                                        # resize
+            new_bytes = (arg % (dev_pages + 4)) * PB
+            if kv.can_resize_device(new_bytes):
+                res = kv.resize_device(new_bytes)
+                live_dev = sorted({p for r in state
+                                   for p in kv.device_pages_of(r)}
+                                  | {v.page for v in kv._reserve.values()
+                                     if v.tier == DEVICE})
+                assert sorted(n for _, n in res.remap) == live_dev
+            else:
+                with pytest.raises(RuntimeError):
+                    kv.resize_device(new_bytes)
+        elif op == 5 and alive:                              # free
+            rid = alive[arg % len(alive)]
+            kv.free(rid)
+            del state[rid]
+            assert kv.refs(rid) == []
+
+        # ---- invariants after every operation -----------------------------
+        kv.check_invariants()
+        assert _total_refcounts(kv) == _live_references(kv), \
+            "refcount sum != live block-table entries + reserves"
+        for rid, s in state.items():
+            assert len(kv.refs(rid)) == kv.device.pages_for(s["tokens"])
+
+    for rid in list(state):
+        kv.free(rid)
+    kv.check_invariants()
+    assert kv.device.used_pages == 0 and kv.host.used_pages == 0
+    assert _total_refcounts(kv) == 0
+    assert len(kv.index) == 0, "prefix index outlived its frames"

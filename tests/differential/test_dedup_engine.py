@@ -1,0 +1,272 @@
+"""Dedup differential suite: serving with cross-request prefix dedup +
+copy-on-write pages must be indistinguishable from the PR-2 paged engine —
+same logits, same greedy tokens, same admissions — while allocating strictly
+fewer physical frames.
+
+Two layers:
+
+  * accounting differentials (fast CI tier, no JAX): a dedup-enabled
+    ``TieredKVAllocator`` replays the same request trace as a dedup-off one
+    and must preserve every per-request page count while never using more
+    frames, across sharing, COW, migration, and resize;
+  * full-engine lock-step traces (``PagedDualEngine``, compile-heavy:
+    nightly tier): a dedup engine and a baseline engine consume the same
+    shared-prefix request stream and must emit identical logits/tokens at
+    every prefill and decode iteration, with >= 40% peak device-frame
+    savings on the acceptance trace (4 requests, 75%-length common prefix).
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PageConfig
+from repro.serving.kv_offload import (DEVICE, HOST, SwapScheduler,
+                                      TieredKVAllocator)
+
+from _engine_builders import mk_reduced_engine
+from harness import PagedDualEngine
+
+PAGE = 4
+BPT = 4
+PB = PAGE * BPT
+
+
+def _pair(dev_pages: int, host_pages: int) -> tuple[TieredKVAllocator,
+                                                    TieredKVAllocator]:
+    mk = lambda dedup: TieredKVAllocator(  # noqa: E731
+        dev_pages * PB, host_pages * PB, PageConfig(PAGE, bytes_per_token=BPT),
+        scope="m0", enable_dedup=dedup)
+    return mk(False), mk(True)
+
+
+def _prompt(family: int, n: int) -> np.ndarray:
+    return (np.arange(n, dtype=np.int32) + 1000 * family)
+
+
+# ---------------------------------------------------------------------------
+# Accounting differentials (fast tier)
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_accounting_matches_baseline_on_shared_trace():
+    """Same trace through both allocators: every request sees the same page
+    count at every step (capacity semantics unchanged), the dedup side never
+    uses more frames, and it uses strictly fewer once prompts share."""
+    base, dd = _pair(64, 16)
+    total = 3 * PAGE + 6                       # 3 shared-able pages + tail
+    for rid in range(6):
+        prompt = _prompt(family=rid % 2, n=3 * PAGE)
+        rb = base.alloc(rid, total, prompt=prompt)
+        rd = dd.alloc(rid, total, prompt=prompt)
+        assert rb is not None and rd is not None
+        assert len(rb) == len(rd)
+        assert (base.device.used_pages + base.host.used_pages
+                >= dd.device.used_pages + dd.host.used_pages)
+        base.check_invariants()
+        dd.check_invariants()
+    # 2 families x 3 shared pages, reused by 2 later requests each
+    assert dd.dedup_pages_reused == 2 * 3 * 2
+    saved = base.device.used_pages - dd.device.used_pages
+    assert saved == dd.dedup_pages_reused
+    # interleaved frees keep the remaining requests' pages alive
+    for rid in (0, 3):
+        base.free(rid)
+        dd.free(rid)
+        base.check_invariants()
+        dd.check_invariants()
+    for rid in (1, 2, 4, 5):
+        assert len(dd.refs(rid)) == len(base.refs(rid))
+    for rid in (1, 2, 4, 5):
+        base.free(rid)
+        dd.free(rid)
+    assert dd.device.used_pages == 0 and dd.host.used_pages == 0
+    assert len(dd.index) == 0, "index entries must die with their frames"
+
+
+def test_dedup_admits_when_baseline_is_out_of_memory():
+    """The capacity win admission banks on: a device pool exactly sized for
+    one request cannot take a second identical prompt without dedup, and can
+    with it (only the private tail is new)."""
+    total = 2 * PAGE + PAGE                    # 2 prompt pages + 1 tail page
+    base, dd = _pair(dev_pages=4, host_pages=0)
+    prompt = _prompt(0, 2 * PAGE)
+    assert base.alloc(10, total, prompt=prompt) is not None
+    assert dd.alloc(10, total, prompt=prompt) is not None
+    assert base.alloc(11, total, prompt=prompt) is None     # waits forever
+    refs = dd.alloc(11, total, prompt=prompt)               # shares 2 pages
+    assert refs is not None
+    assert dd.dedup_hit_pages(11) == [0, 1]
+    assert refs[0] == dd.refs(10)[0] and refs[1] == dd.refs(10)[1]
+    dd.check_invariants()
+
+
+def test_dedup_differential_survives_migration_and_resize():
+    """Sharing must stay intact while frames move: swap the shared prefix
+    host-ward and back, shrink and regrow the device pool — afterwards a
+    third identical prompt still dedups against the (migrated) frames, and
+    the baseline/dedup page-count parity still holds."""
+    base, dd = _pair(16, 16)
+    total = 2 * PAGE + 2                       # partial third page (2 tok)
+    prompt = _prompt(0, total)                 # prompt == total: no reserve
+    for rid in (0, 1):
+        base.alloc(rid, total, prompt=prompt)
+        dd.alloc(rid, total, prompt=prompt)
+    assert dd.dedup_hit_pages(1) == [0, 1, 2]  # partial page shared too
+    for kv in (base, dd):
+        kv.swap_out(0, 2)
+        kv.check_invariants()
+    # the shared frames moved ONCE, for both owners
+    assert dd.refs(0)[:2] == dd.refs(1)[:2]
+    assert all(r.tier == HOST for r in dd.refs(1)[:2])
+    for kv in (base, dd):
+        res = kv.resize_device(8 * PB)
+        kv.check_invariants()
+        kv.swap_in(0, 99)
+        kv.check_invariants()
+    assert dd.refs(0) == dd.refs(1)[:len(dd.refs(0))]
+    assert all(r.tier == DEVICE for r in dd.refs(1))
+    # a new identical prompt dedups against the post-migration frames
+    r2 = dd.alloc(2, total, prompt=prompt)
+    assert r2 is not None and dd.dedup_hit_pages(2) == [0, 1, 2]
+    assert r2 == dd.refs(0)
+    for rid in (0, 1, 2):
+        dd.free(rid)
+    dd.check_invariants()
+    assert dd.device.used_pages == 0 and len(dd.index) == 0
+    del res
+
+
+def test_dedup_streamed_host_hits_add_no_new_capacity():
+    """Host-parked prefixes are shared too (LMCache-style): with ZERO device
+    pages, a second identical prompt claims only its private tail on host."""
+    base, dd = _pair(dev_pages=0, host_pages=8)
+    total = 2 * PAGE + PAGE
+    prompt = _prompt(0, 2 * PAGE)
+    base.alloc(0, total, prompt=prompt)
+    dd.alloc(0, total, prompt=prompt)
+    assert base.host.used_pages == 3 and dd.host.used_pages == 3
+    base.alloc(1, total, prompt=prompt)
+    dd.alloc(1, total, prompt=prompt)
+    assert base.host.used_pages == 6
+    assert dd.host.used_pages == 4               # shared prefix + 1 tail
+    sched = SwapScheduler(dd)
+    # ... and the shared host pages stream once for the pair
+    assert sched.streamed_bytes([0, 1]) == 4 * PB
+    dd.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Full-engine lock-step traces (nightly tier)
+# ---------------------------------------------------------------------------
+
+
+def _mk_engine_pair(device_pages: float, host_pages: int, max_batch=4,
+                    max_seq=48, page_size=4):
+    """Baseline (PR-2, dedup off) and dedup engine with identical params,
+    records, and memory sizing."""
+    base, _ = mk_reduced_engine(name="base", max_batch=max_batch,
+                                max_seq=max_seq, page_size=page_size,
+                                extra_device_pages=device_pages,
+                                host_pages=host_pages, batches=(1, 2, 4))
+    dd, _ = mk_reduced_engine(name="dedup", max_batch=max_batch,
+                              max_seq=max_seq, page_size=page_size,
+                              extra_device_pages=device_pages,
+                              host_pages=host_pages, prefix_dedup=True,
+                              batches=(1, 2, 4))
+    return base, dd
+
+
+def _shared_prefix_reqs(n, prefix_len, suffix_len, new, seed=0):
+    """n requests sharing a common ``prefix_len`` prompt prefix, each with a
+    distinct equal-length suffix (equal prompt lengths keep the stored
+    prefix KV bit-identical across both engines — see PagedDualEngine)."""
+    from repro.serving.request import Request
+
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, 100, prefix_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        suffix = rng.integers(0, 100, suffix_len).astype(np.int32)
+        out.append(Request(rid=i,
+                           prompt=np.concatenate([common, suffix]),
+                           max_new_tokens=new,
+                           ttft_slo_s=10.0, tpot_slo_s=10.0))
+    return out
+
+
+@pytest.mark.slow
+def test_dedup_engine_acceptance_75pct_shared_prefix():
+    """Acceptance trace: 4 requests whose prompts share a 75%-length common
+    prefix. The dedup engine must match the PR-2 baseline's logits and
+    greedy tokens at every iteration AND allocate >= 40% fewer device frames
+    at peak."""
+    base, dd = _mk_engine_pair(device_pages=44, host_pages=0)
+    dual = PagedDualEngine(base, dd)
+    # prompt 32 = 24 shared + 8 private; page 4 => 6 shared pages/request
+    for r in _shared_prefix_reqs(4, prefix_len=24, suffix_len=8, new=8):
+        base.submit(r)
+    for r in _shared_prefix_reqs(4, prefix_len=24, suffix_len=8, new=8):
+        dd.submit(r)
+    dual.run_until_drained(max_iters=100)
+
+    assert len(base.finished) == 4 and len(dd.finished) == 4
+    for rb, rd in zip(sorted(base.finished, key=lambda r: r.rid),
+                      sorted(dd.finished, key=lambda r: r.rid)):
+        assert rb.generated == rd.generated
+    assert dual.prefill_compares == 4
+    assert dual.decode_compares >= 4 * 7
+    assert dd.kv.dedup_pages_reused == 6 * 3   # 6 pages x 3 sharers
+    # acceptance: >= 40% fewer device frames at peak
+    assert base.device_pages_peak == 40
+    assert dd.device_pages_peak <= 0.6 * base.device_pages_peak
+    for eng in (base, dd):
+        assert eng.kv.device.used_pages == 0
+        eng.kv.check_invariants()
+    assert len(dd.kv.index) == 0
+
+
+@pytest.mark.slow
+def test_dedup_engine_cow_partial_page_trace():
+    """Identical prompts with a partially-filled last prompt page: every
+    later request shares it and copy-on-writes off it at its first decode
+    write. The trace must still match the baseline exactly (a missed COW
+    would cross-corrupt the four requests' contexts and fork the tokens)."""
+    base, dd = _mk_engine_pair(device_pages=44, host_pages=0)
+    dual = PagedDualEngine(base, dd)
+    for eng in (base, dd):
+        for r in _shared_prefix_reqs(4, prefix_len=10, suffix_len=0, new=8,
+                                     seed=3):
+            eng.submit(r)
+    dual.run_until_drained(max_iters=100)
+    assert dual.decode_compares >= 4 * 7
+    assert dd.cow_events == 3, "rids 1-3 must each move off the shared page"
+    assert base.cow_events == 0
+    gens = [r.generated for r in sorted(dd.finished, key=lambda r: r.rid)]
+    assert all(g == gens[0] for g in gens)     # identical prompts
+    assert dd.device_pages_peak < base.device_pages_peak
+    dd.kv.check_invariants()
+
+
+@pytest.mark.slow
+def test_dedup_engine_shared_prefix_on_host_tier():
+    """Long shared-prefix trace with the prefix parked on HOST: the shared
+    pages stream through the slab once per iteration for all sharers, and
+    the lock-step equality must survive streaming, promotion, and the COW
+    of a host-resident shared page."""
+    base, dd = _mk_engine_pair(device_pages=6.5, host_pages=64, max_batch=4,
+                               max_seq=48)
+    dual = PagedDualEngine(base, dd)
+    for eng in (base, dd):
+        for r in _shared_prefix_reqs(8, prefix_len=18, suffix_len=0, new=10,
+                                     seed=7):
+            eng.submit(r)
+    dual.run_until_drained(max_iters=300)
+    assert len(dd.finished) == 8
+    assert dd.host_kv_peak_pages > 0, "trace never used the host tier"
+    assert dd.streamed_pages_peak > 0, "trace never streamed host pages"
+    assert dd.kv.dedup_pages_reused > 0
+    assert dual.decode_compares >= 8 * 9
+    # dedup's host footprint must also shrink (prefix stored once)
+    assert dd.host_kv_peak_pages <= base.host_kv_peak_pages
+    for eng in (base, dd):
+        assert eng.kv.device.used_pages == 0 and eng.kv.host.used_pages == 0
+        eng.kv.check_invariants()

@@ -167,6 +167,140 @@ def test_paged_decode_batch_one():
                                    rtol=1e-5, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Copy-on-write through the engine path (prefix dedup)
+# ---------------------------------------------------------------------------
+
+
+def _mk_cow_engine(extra_device_pages: float, host_pages: int):
+    """Dedup engine sized so two identical 10-token prompts (page 4: two
+    full pages + a 2-token partial page) share all three prompt pages."""
+    from _engine_builders import mk_reduced_engine
+
+    eng, _ = mk_reduced_engine(name="cow", max_batch=2, max_seq=24,
+                               page_size=4,
+                               extra_device_pages=extra_device_pages,
+                               host_pages=host_pages, prefix_dedup=True,
+                               batches=(1, 2), seqs=(16, 32))
+    return eng
+
+
+def _submit_twins(eng, new=6):
+    from repro.serving.request import Request
+
+    prompt = (np.arange(10) * 7 % 97).astype(np.int32)
+    for rid in range(2):
+        eng.submit(Request(rid=rid, prompt=prompt.copy(),
+                           max_new_tokens=new,
+                           ttft_slo_s=10.0, tpot_slo_s=10.0))
+    eng._admit()                 # prefill both; rid 1 dedups all 3 pages
+    assert eng.kv.dedup_hit_pages(1) == [0, 1, 2]
+    shared = eng.kv.refs(0)[2]
+    assert eng.kv.refs(1)[2] == shared
+    return shared
+
+
+def test_cow_write_leaves_sibling_device_page_bitwise_unchanged():
+    """Engine-path COW: both twins decode into the shared partial page in
+    the same iteration — the later-admitted one must move onto its reserve
+    and the sibling-visible bytes of every shared page (the prompt token
+    slots) must be bitwise identical before and after, in the shared frame
+    AND in the private copy."""
+    eng = _mk_cow_engine(extra_device_pages=14, host_pages=0)
+    shared = _submit_twins(eng)
+    assert shared.tier == "device"
+    full_frames = [eng.kv.refs(0)[0].page, eng.kv.refs(0)[1].page]
+    ids = jnp.asarray([shared.page] + full_frames, jnp.int32)
+    before = np.asarray(ops.gather_kv_pages(eng.pool, ids))
+
+    eng.step()                   # first decode write for both twins
+    assert eng.cow_events == 1   # rid 1 moved off; rid 0 appends in place
+    new1 = eng.kv.refs(1)[2]
+    assert new1 != shared and eng.kv.refs(0)[2] == shared
+    after = np.asarray(ops.gather_kv_pages(eng.pool, ids))
+    # full shared pages: bitwise untouched entirely
+    assert np.array_equal(before[1:], after[1:])
+    # shared partial page: the 2 prompt-token slots (all a sibling's
+    # attention can see) bitwise untouched; offsets >= 2 hold rid 0's new
+    # token, which rid 1's context length masks
+    assert np.array_equal(before[0][:2], after[0][:2])
+    # rid 1's private copy preserved the prompt bytes too
+    got1 = np.asarray(ops.gather_kv_pages(
+        eng.pool, jnp.asarray([new1.page], jnp.int32)))[0]
+    assert np.array_equal(before[0][:2], got1[:2])
+    # ... and the twins keep generating identical tokens
+    for _ in range(5):
+        eng.step()
+    gens = [r.generated for r in sorted(eng.finished, key=lambda r: r.rid)]
+    assert len(gens) == 2 and gens[0] == gens[1]
+    eng.kv.check_invariants()
+
+
+def test_cow_write_on_host_resident_streamed_shared_page():
+    """Same protocol with ZERO device pages: the shared pages live on host,
+    stream through the slab every iteration, and the decode write lands on
+    a streamed page (dirty write-back). The write-back must not leak the
+    writer's token into the sibling-visible bytes of the shared host slot,
+    and the COW copy must land in the writer's host reserve."""
+    eng = _mk_cow_engine(extra_device_pages=0.25, host_pages=16)
+    assert eng.kv.device.total_pages == 0
+    shared = _submit_twins(eng)
+    assert shared.tier == "host"
+    full_slots = [eng.kv.refs(0)[0].page, eng.kv.refs(0)[1].page]
+    before_partial = eng.host_pool[shared.page].copy()
+    before_full = eng.host_pool[np.asarray(full_slots)].copy()
+
+    eng.step()
+    assert eng.cow_events == 1
+    new1 = eng.kv.refs(1)[2]
+    assert new1.tier == "host" and new1 != shared
+    assert np.array_equal(before_full,
+                          eng.host_pool[np.asarray(full_slots)])
+    # rid 0's write came back through the slab into the shared slot, but
+    # only at offsets a sibling never reads
+    assert np.array_equal(before_partial[:2],
+                          eng.host_pool[shared.page][:2])
+    assert not np.array_equal(before_partial[2],
+                              eng.host_pool[shared.page][2])
+    assert np.array_equal(before_partial[:2],
+                          eng.host_pool[new1.page][:2])
+    for _ in range(5):
+        eng.step()
+    gens = [r.generated for r in sorted(eng.finished, key=lambda r: r.rid)]
+    assert len(gens) == 2 and gens[0] == gens[1]
+    assert eng.kv.host.used_pages == 0
+    eng.kv.check_invariants()
+
+
+def test_cow_cross_tier_copy_charged_to_link_budget():
+    """A COW whose reserve sits on the other tier moves a real page over
+    the host link — the modeled iteration must charge both the d2h copy
+    and the post-COW streaming, exactly once (regression: the pre-pass
+    originally moved the bytes without billing them)."""
+    import pytest as _pytest
+
+    from repro.core.interval import iter_time_with_interval_kv
+
+    eng = _mk_cow_engine(extra_device_pages=4, host_pages=16)
+    shared = _submit_twins(eng)
+    assert shared.tier == "device"           # twin 0 owns all 4 dev pages
+    assert eng.kv.reserve_of(1).tier == "host"   # dev pool full: host spare
+    t0 = eng.clock_s
+    pb = eng.kv.page_bytes
+    times = eng.times_fn(2, eng.ecfg.max_seq, "decode")
+    eng.step()                               # twin 1's write COWs dev->host
+    assert eng.cow_events == 1
+    assert eng.kv.refs(1)[2].tier == "host"
+    # link charge: the post-COW streamed pages (twin 1's tail + its new
+    # private write page) gate compute; the COW page itself writes back
+    streamed_after = eng.swap.streamed_bytes([0, 1])
+    assert streamed_after == 2 * pb
+    predicted = iter_time_with_interval_kv(times, eng.interval,
+                                           streamed_after, pb)
+    assert eng.clock_s - t0 == _pytest.approx(predicted, rel=1e-9)
+    eng.kv.check_invariants()
+
+
 def test_flash_matches_model_chunked_attention():
     """Kernel and the jnp chunked implementation used at dry-run scale must
     agree (they are the same algorithm at different layers)."""

@@ -241,6 +241,56 @@ def test_page_copy_round_trip_bitwise():
     assert np.array_equal(np.asarray(out0), np.asarray(out1))
 
 
+def test_streamed_and_writeback_bytes_count_shared_pages_once():
+    """Regression for a latent PR-1 double-count that sharing exposes: a
+    host page referenced by several active requests streams over the link
+    ONCE per iteration and a shared demotion writes back ONCE — but the
+    per-request accounting (`sum(host_bytes_of(r))`) bills it per owner.
+    The SLO math consumes these numbers directly, so the double-count would
+    inflate the modeled iteration time and make admission refuse requests
+    the link can actually serve."""
+    pcfg = _pcfg()
+    pb = pcfg.page_size * pcfg.bytes_per_token
+    kv = TieredKVAllocator(0, 8 * pb, pcfg, scope="m", enable_dedup=True)
+    prompt = np.arange(2 * pcfg.page_size, dtype=np.int64)
+    kv.alloc(1, 2 * pcfg.page_size, prompt=prompt)   # 2 host pages
+    kv.alloc(2, 2 * pcfg.page_size, prompt=prompt)   # same 2 frames shared
+    assert kv.host.used_pages == 2
+    sched = SwapScheduler(kv)
+    # frame-wise: 2 unique pages, not 4 owner references
+    assert sched.streamed_bytes([1, 2]) == 2 * pb
+    assert sum(kv.host_bytes_of(r) for r in (1, 2)) == 4 * pb  # the trap
+    # tie to the SLO math: the modeled iteration charges the deduped
+    # stream; per-owner billing would claim a strictly slower iteration
+    times = LayerTimes(2e-3, 5e-3, 8, 1 << 20, 0.0)
+    bw = link_bandwidth(times)
+    t = iter_time_with_interval_kv(times, NO_OFFLOAD,
+                                   sched.streamed_bytes([1, 2]))
+    assert t == pytest.approx(times.t_iter_no_offload_s + 2 * pb / bw)
+    t_wrong = iter_time_with_interval_kv(
+        times, NO_OFFLOAD, sum(kv.host_bytes_of(r) for r in (1, 2)))
+    assert t_wrong > t
+    # write-back side: demoting a shared frame is ONE migration -> one
+    # pending-out page, charged once
+    kv2 = TieredKVAllocator(4 * pb, 8 * pb, pcfg, scope="m",
+                            enable_dedup=True)
+    p2 = np.arange(2 * pcfg.page_size, dtype=np.int64) + 7
+    kv2.alloc(1, 2 * pcfg.page_size, prompt=p2)
+    kv2.alloc(2, 2 * pcfg.page_size, prompt=p2)
+    res = kv2.resize_device(0)
+    assert res.num_demoted == 2                      # unique frames moved
+    sched2 = SwapScheduler(kv2)
+    sched2.note_demotions(res.num_demoted)
+    assert sched2.pending_out_bytes() == 2 * pb
+    # and promotion back in bills each shared frame once as kv_in
+    kv2.resize_device(4 * pb)
+    plan = sched2.plan_iteration([1, 2])
+    assert len(plan.promotions) == 2
+    assert plan.kv_in_bytes == 2 * pb + plan.streamed_bytes
+    assert plan.streamed_bytes == 0.0
+    kv2.check_invariants()
+
+
 # ---------------------------------------------------------------------------
 # Combined weight+KV link algebra (acceptance: SLO-exact under swap traffic)
 # ---------------------------------------------------------------------------
