@@ -25,6 +25,7 @@ MODULES = [
     "fig14_max_length",
     "fig15_kv_tiering",
     "fig16_prefix_dedup",
+    "fig17_preemption",
     "roofline",
 ]
 

@@ -60,6 +60,15 @@ def main(argv=None) -> dict:
                     help="fraction of the prompt budget drawn from one "
                          "common prefix (chat-style system prompt; what "
                          "--prefix-dedup deduplicates)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="preempt-to-host: park an active victim's whole KV "
+                         "on the host tier when a queued request cannot be "
+                         "admitted (wait-only otherwise)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                    help="chunked prefill: scatter long prompts in "
+                         "page-aligned chunks of this many tokens, "
+                         "piggybacked on decode iterations (0 = one-shot "
+                         "prefill at admission)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--peer", action="store_true",
@@ -72,7 +81,9 @@ def main(argv=None) -> dict:
                         hbm_budget_bytes=args.hbm_gb * 1e9,
                         host_kv_bytes=args.host_kv_gb * 1e9,
                         page_size=args.page_size,
-                        prefix_dedup=args.prefix_dedup)
+                        prefix_dedup=args.prefix_dedup,
+                        preemption=args.preemption,
+                        prefill_chunk_tokens=args.prefill_chunk_tokens)
     slos = [0.002 * k for k in range(1, 120)]
     eng = build_engine("e0", cfg, hw, ecfg, slos)
     peers = []
@@ -111,6 +122,11 @@ def main(argv=None) -> dict:
     summary["device_pages_peak"] = eng.device_pages_peak
     summary["dedup_pages_reused"] = eng.kv.dedup_pages_reused
     summary["cow_events"] = eng.cow_events
+    summary["scheduler"] = {"preemption": args.preemption,
+                            "prefill_chunk_tokens": args.prefill_chunk_tokens}
+    # preemptions / resumes / chunked_prefill_iters / queue_delay_p99_s come
+    # from engine.run (scheduler IterationOutcome stats) and are already in
+    # the summary dict above
     print(json.dumps(summary, indent=1))
     return out
 

@@ -1,12 +1,14 @@
-"""SLO-aware serving engine: paged-kernel decode with Select-N offloading.
+"""SLO-aware serving executor: paged-kernel decode with Select-N offloading.
 
-One engine = one model instance (one TP group on real hardware). Per
-iteration it: admits queued requests whose SLO is feasible (performance
-record + memory bound, §4.2's admission check), prefills them into free
-batch slots, runs one decode step for all active slots, and advances a
+One engine = one model instance (one TP group on real hardware). Scheduling
+POLICY lives in ``serving.scheduler``: per iteration the engine snapshots
+its state into a ``SchedulerView``, receives an ``IterationPlan``
+(preemptions, resumes, admissions, prefill chunks, decode slots), applies it
+— page copies, prefill compute + scatter, one decode step for all active
+slots — and reports an ``IterationOutcome`` back. The engine still owns the
 *modeled* clock (LayerTimes under the current offload plan — token flow is
 real JAX compute; SLO timing is the deterministic analytic schedule, which on
-a real TPU host would be wall clock).
+a real TPU host would be wall clock) and every physical page byte.
 
 Decode computes through the paged Pallas kernel against a SINGLE physical
 page-pool buffer: the frames the ``TieredKVAllocator`` accounts for are the
@@ -62,6 +64,10 @@ from repro.serving.kv_cache import PageConfig, PagedKVAllocator
 from repro.serving.kv_offload import (DEVICE, HOST, SwapScheduler,
                                       TieredKVAllocator)
 from repro.serving.request import Request, State
+from repro.serving.scheduler import (ActiveInfo, IterationOutcome,
+                                     IterationPlan, PlannedPreemption,
+                                     PlannedResume, PrefillChunk, Scheduler,
+                                     SchedulerConfig, SchedulerView)
 
 
 @dataclasses.dataclass
@@ -82,6 +88,14 @@ class EngineConfig:
     # dedup-off engine is the PR-2 baseline the differential suite locksteps
     # against.
     prefix_dedup: bool = False
+    # Scheduling policies (serving.scheduler). Both default off — the
+    # policy-off scheduler reproduces the fused engine's admission decisions
+    # exactly, which is what the differential suite locksteps.
+    preemption: bool = False           # preempt-to-host under admission stalls
+    prefill_chunk_tokens: int = 0      # >0: chunked prefill, page-aligned
+    # Prefix-cache keep-alive: host frames whose last owner freed survive
+    # (LRU, this many pages) so a re-submitted shared prefix still dedups.
+    host_prefix_cache_pages: int = 0
 
 
 class ServingEngine:
@@ -110,7 +124,6 @@ class ServingEngine:
         self.params = model.init(jax.random.PRNGKey(0))
         self.clock_s = 0.0
         self.interval = NO_OFFLOAD
-        self.queue: list[Request] = []
         self.finished: list[Request] = []
         self.rejected: list[Request] = []
 
@@ -133,8 +146,18 @@ class ServingEngine:
         self.kv = TieredKVAllocator(
             max(int(weight_free), 0), ecfg.host_kv_bytes,
             PageConfig(ecfg.page_size, bytes_per_token=kv_tok),
-            scope=scope, enable_dedup=ecfg.prefix_dedup)
+            scope=scope, enable_dedup=ecfg.prefix_dedup,
+            host_prefix_cache_pages=ecfg.host_prefix_cache_pages)
         self.swap = SwapScheduler(self.kv)
+        # policy layer: owns the queue, the preempted set and slot
+        # assignment; this engine executes the plans it emits
+        self.scheduler = Scheduler(
+            self.kv, self.swap, ecfg.max_batch, ecfg.max_seq,
+            rec_decode, self.times_fn, self._modeled_ttft,
+            self._max_interval_now,
+            SchedulerConfig(preemption=ecfg.preemption,
+                            prefill_chunk_tokens=ecfg.prefill_chunk_tokens),
+            prefill_seconds=self._prefill_seconds)
         self.host_kv_peak_pages = 0
         self.streamed_pages_peak = 0
         self.device_pages_peak = 0
@@ -220,12 +243,21 @@ class ServingEngine:
         return self._runtime[interval]
 
     # ------------------------------------------------------------ admission --
+    @property
+    def queue(self) -> list[Request]:
+        """Waiting requests (owned by the scheduler; back-compat accessor)."""
+        return self.scheduler.queue
+
     def _active_rids(self) -> list[int]:
         return [r.rid for r in self.slot_req if r is not None]
 
-    def _min_active_tpot(self) -> float:
-        slos = [r.tpot_slo_s for r in self.slot_req if r is not None]
-        return min(slos) if slos else float("inf")
+    def _max_interval_now(self) -> int:
+        """Memory-bounded interval ceiling under current KV usage (shared by
+        the coordinator state and the scheduler's admission check)."""
+        return max_interval_for_memory(
+            self.num_units, self.unit_bytes,
+            self.ecfg.hbm_budget_bytes
+            - self.allocator.used_pages * self.allocator.page_bytes)
 
     def instance_state(self, idle: bool | None = None) -> InstanceState:
         waiting = self.queue[0] if self.queue else None
@@ -237,11 +269,9 @@ class ServingEngine:
             min_i = self.interval if self.interval < NO_OFFLOAD else 1
         times = self.times_fn(max(self._active_batch(), 1),
                               self.ecfg.max_seq, "decode")
-        max_i = max_interval_for_memory(
-            self.num_units, self.unit_bytes,
-            self.ecfg.hbm_budget_bytes
-            - self.allocator.used_pages * self.allocator.page_bytes)
-        kv_stream = self.swap.streamed_bytes(self._active_rids())
+        max_i = self._max_interval_now()
+        kv_stream = (self.swap.streamed_bytes(self._active_rids())
+                     + self.swap.pending_in_bytes())
         kv_out = self.swap.pending_out_bytes()
         return InstanceState(
             name=self.name, num_units=self.num_units,
@@ -251,95 +281,94 @@ class ServingEngine:
                 kv_stream, kv_out),
             min_interval=min_i, max_interval=max_i,
             idle=idle if idle is not None else self._active_batch() == 0
-            and not self.queue,
+            and not self.scheduler.has_work(),
             kv_bytes_per_iter=kv_stream + kv_out)
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        req.submitted_s = self.clock_s
+        self.scheduler.submit(req)
 
     def _active_batch(self) -> int:
         return int(self.active.sum())
 
-    def _admit(self) -> None:
-        while self.queue:
-            req = self.queue[0]
-            free_slots = [i for i in range(self.ecfg.max_batch)
-                          if not self.active[i]]
-            if not free_slots:
-                return
-            total = req.prompt_len + req.max_new_tokens
-            if total > self.ecfg.max_seq:
-                req.state = State.REJECTED
-                req.reject_reason = "exceeds max_seq"
-                self.rejected.append(self.queue.pop(0))
-                continue
-            # SLO feasibility (paper: pass back to upper scheduler if not)
-            min_i = self.rec["decode"].lookup(
-                req.tpot_slo_s, self._active_batch() + 1, total)
-            max_i = max_interval_for_memory(
-                self.num_units, self.unit_bytes,
-                self.ecfg.hbm_budget_bytes
-                - self.allocator.used_pages * self.allocator.page_bytes)
-            if min_i > max_i:
-                req.state = State.REJECTED
-                req.reject_reason = (f"SLO infeasible: min interval {min_i} > "
-                                     f"max {max_i}")
-                self.rejected.append(self.queue.pop(0))
-                continue
-            if self.kv.alloc(req.rid, total, allow_host=False,
-                             prompt=req.prompt) is None \
-                    and not self._spill_admit(req, total):
-                return  # wait for memory
-            self.queue.pop(0)
-            self._prefill_into_slot(req, free_slots[0])
+    def _view(self) -> SchedulerView:
+        active = [ActiveInfo(req, slot)
+                  for slot, req in enumerate(self.slot_req)
+                  if req is not None and self.active[slot]]
+        free_slots = [i for i in range(self.ecfg.max_batch)
+                      if self.slot_req[i] is None]
+        return SchedulerView(interval=self.interval, free_slots=free_slots,
+                             active=active)
 
-    def _spill_admit(self, req: Request, total: int) -> bool:
-        """§4.2 admission, extended for the host KV tier: the device pool is
-        full, but the request can be admitted with its cold prefix on host —
-        provided the streamed KV traffic keeps every active request's TPOT
-        and the new request's TTFT feasible at the current interval. The
-        stream rides the same link as weight prefetch, so feasibility is
-        evaluated with the combined-traffic iteration time.
+    def _admit(self) -> IterationPlan:
+        """Plan one iteration and apply everything but the decode step:
+        preemption write-backs, resume promotions, admissions (one-shot
+        prefill for non-chunked ones). Chunk compute is applied by ``step``
+        so its time rides the decode iteration."""
+        plan = self.scheduler.plan(self._view())
+        self.rejected.extend(plan.rejections)
+        # data-plane order MUST follow planning order: resumes were planned
+        # before preemptions, so a park's host destination may be the very
+        # slot a resume promotion vacated — the resume must read its host
+        # bytes before the park overwrites them
+        self._apply_resumes(plan.resumes)
+        self._apply_preemptions(plan.preemptions)
+        for adm in plan.admissions:
+            adm.req.admitted_s = self.clock_s
+            if adm.chunked:
+                adm.req.state = State.PREFILLING
+                adm.req.slot = adm.slot
+                self.slot_req[adm.slot] = adm.req
+            else:
+                self._prefill_into_slot(adm.req, adm.slot)
+        return plan
 
-        Prefix-dedup savings are accounted here: pages the prompt shares
-        with live frames claim no new capacity, shared host pages already
-        streamed for an active sibling add no link traffic, and dedup'd
-        pages need no spill write-back during prefill — so a request the
-        PR-2 accounting had to park can now clear both SLO checks."""
-        pv = self.kv.dedup_preview(req.prompt, total)
-        n_fresh = (self.kv.device.pages_for(total) - pv.n_hits
-                   + int(pv.need_reserve))
-        n_host = max(n_fresh - self.kv.device.free_pages, 0)
-        if n_host > self.kv.host.free_pages:
-            return False                       # no host room: wait
-        if n_host <= 0 and not pv.host_hit_pages():
-            # cannot happen in the synchronous engine: alloc(allow_host=
-            # False) fails exactly when fresh pages overflow to host or a
-            # hit is host-resident, and nothing mutates between that call
-            # and this recomputation. Kept as a defensive wait (not an
-            # assert) so an accounting bug degrades to queueing, never to
-            # an unchecked host admission.
-            return False
-        pb = self.kv.page_bytes
-        iv = self.interval if self.interval else NO_OFFLOAD
-        # unique host frames after admission: currently streamed ∪ shared
-        # host hits, plus the freshly spilled pages
-        streamed_pages = self.swap.streamed_host_pages(self._active_rids())
-        streamed_after = (len(streamed_pages | pv.host_hit_pages())
-                          + n_host) * pb
-        times_d = self.times_fn(self._active_batch() + 1,
-                                self.ecfg.max_seq, "decode")
-        dt = iter_time_with_interval_kv(times_d, iv, streamed_after,
-                                        self.swap.pending_out_bytes())
-        tpot_bound = min(self._min_active_tpot(), req.tpot_slo_s)
-        if dt > tpot_bound * (1 + 1e-9):
-            return False                       # streaming would break TPOT
-        if self._modeled_ttft(req, n_host * pb) > req.ttft_slo_s * (1 + 1e-9):
-            return False                       # spill write-back breaks TTFT
-        refs = self.kv.alloc(req.rid, total, allow_host=True,
-                             prompt=req.prompt, preview=pv)
-        assert refs is not None
-        return True
+    def _apply_preemptions(self, items: list[PlannedPreemption]) -> None:
+        """Park victims: copy their device-resident pages into the host
+        slots the scheduler claimed (BEFORE anything re-writes the freed
+        frames — admissions in the same plan may reuse them), snapshot the
+        decode cursor for a token-exact resume, and vacate the slot. The
+        write-back bytes were charged by the scheduler
+        (``swap.note_demotions``) and land on this iteration's link."""
+        for it in items:
+            req, slot = it.req, it.slot
+            if it.migrations:
+                assert self.host_pool is not None
+                ops.copy_pages_to_host(self.pool,
+                                       [m.src_page for m in it.migrations],
+                                       self.host_pool,
+                                       [m.dst_page for m in it.migrations])
+            req.state = State.PREEMPTED
+            req.preempt_count += 1
+            req.parked_at_s = self.clock_s
+            req.next_token = int(self.tokens[slot])
+            req.resume_pos = int(self.pos[slot])
+            req.slot = -1
+            self.active[slot] = False
+            self.slot_req[slot] = None
+
+    def _apply_resumes(self, items: list[PlannedResume]) -> None:
+        """Un-park: copy promoted pages back into their device frames and
+        restore the decode cursor exactly where preemption snapshot it —
+        the next decode step continues the token stream bit-for-bit.
+        Promotion bytes were charged by the scheduler
+        (``swap.note_promotions``)."""
+        for it in items:
+            req, slot = it.req, it.slot
+            if it.migrations:
+                assert self.host_pool is not None
+                self.pool = ops.copy_pages_from_host(
+                    self.host_pool, [m.src_page for m in it.migrations],
+                    self.pool, [m.dst_page for m in it.migrations])
+            req.state = State.DECODING
+            if req.parked_at_s is not None:
+                req.preempt_stall_s += self.clock_s - req.parked_at_s
+                req.parked_at_s = None
+            req.slot = slot
+            self.slot_req[slot] = req
+            self.tokens[slot] = req.next_token
+            self.pos[slot] = req.resume_pos
+            self.active[slot] = True
 
     def _modeled_ttft(self, req: Request, host_spill_bytes: float) -> float:
         """Prefill latency: the spilled KV prefix is written back (d2h)
@@ -351,23 +380,29 @@ class ServingEngine:
                                           0.0, host_spill_bytes)
 
     # -------------------------------------------------------------- prefill --
-    def _prefill_into_slot(self, req: Request, slot: int) -> None:
-        req.state = State.PREFILLING
-        req.slot = slot
-        self.slot_req[slot] = req
+    def _jitted_prefill(self, tokens: np.ndarray, cache_len: int):
+        """Run the offload-aware jitted prefill over ``tokens`` (retraces
+        per distinct length; chunk boundaries are page-aligned to bound the
+        variety)."""
         rt = self._rt(self.interval)
         if self.interval not in self._jit_prefill:
             self._jit_prefill[self.interval] = jax.jit(
                 rt.prefill, static_argnames=("cache_len",))
-        # prefill this request alone (chunked-prefill piggybacking is an
-        # engine-level extension; the paper separates phases). cache_len is
+        inputs = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
+        return self._jit_prefill[self.interval](
+            self._params_split[self.interval], inputs, cache_len=cache_len)
+
+    def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        req.state = State.PREFILLING
+        req.slot = slot
+        self.slot_req[slot] = req
+        # prefill this request alone (chunked prefill routes through
+        # _run_chunks instead; the paper separates phases). cache_len is
         # the exact prompt length: the tokens shape [1, S] forces a retrace
         # per distinct S anyway, so this adds no compiles and the merged
         # caches carry no padding into the page scatter.
-        inputs = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-        logits, caches1, _ = self._jit_prefill[self.interval](
-            self._params_split[self.interval], inputs,
-            cache_len=req.prompt_len)
+        logits, caches1, _ = self._jitted_prefill(req.prompt, req.prompt_len)
+        req.prefill_pos = req.prompt_len
         self._scatter_prefill_kv(req, caches1)
         # modeled prefill latency = TTFT (same formula admission checked):
         # only freshly spilled pages cost write-back — dedup'd host pages
@@ -395,17 +430,24 @@ class ServingEngine:
         self.active[slot] = True
         req.state = State.DECODING
 
-    def _scatter_prefill_kv(self, req: Request, caches1: Any) -> None:
+    def _scatter_prefill_kv(self, req: Request, caches1: Any,
+                            n_tokens: int | None = None,
+                            start_page: int = 0) -> None:
         """Land the prefilled KV in the page pools: device-tier pages go into
         the physical pool via one batched scatter, host-tier (spilled cold
         prefix) pages go straight into the pinned-host buffer. Pages the
         allocator mapped onto existing frames (prefix dedup) already hold
         this exact KV — scattering into them would clobber a sibling's live
-        page, so they are skipped (that skip is the dedup bandwidth win)."""
+        page, so they are skipped (that skip is the dedup bandwidth win).
+        A chunked prefill passes ``n_tokens`` (the chunk's end position) and
+        ``start_page``: only pages the chunk completed or started are
+        written — earlier pages already landed with earlier chunks."""
+        if n_tokens is None:
+            n_tokens = req.prompt_len
         rt = self._rt(self.interval)
         merged = merge_stacked(caches1, rt.plan)   # per pattern j: [R,1,S,..]
         # global layer order: unit-major, pattern-minor (u * P + j)
-        shape = (self.cfg.num_layers, req.prompt_len, *self.page_shape[3:])
+        shape = (self.cfg.num_layers, n_tokens, *self.page_shape[3:])
         k_all = np.stack([np.asarray(m["self"]["k"])[:, 0] for m in merged],
                          axis=1).reshape(shape)
         v_all = np.stack([np.asarray(m["self"]["v"])[:, 0] for m in merged],
@@ -415,7 +457,7 @@ class ServingEngine:
         refs = self.kv.refs(req.rid)
         deduped = set(self.kv.dedup_hit_pages(req.rid))
         dev_frames, dev_vals = [], []
-        for i in range(vals.shape[0]):
+        for i in range(start_page, vals.shape[0]):
             if i in deduped:
                 continue
             r = refs[i]
@@ -430,6 +472,82 @@ class ServingEngine:
             self.pool = ops.scatter_kv_pages(
                 self.pool, jnp.asarray(dev_frames, jnp.int32),
                 jnp.asarray(np.stack(dev_vals)))
+
+    # ------------------------------------------------------- chunked prefill --
+    def _prefill_seconds(self, tokens: int) -> float:
+        """Modeled compute seconds of a prompt prefill up to ``tokens``
+        (no-offload stack time; the weight stream already serves the decode
+        iteration the chunk piggybacks on)."""
+        if tokens <= 0:
+            return 0.0
+        return self.times_fn(1, tokens, "prefill").t_iter_no_offload_s
+
+    def _run_chunks(self, chunks: list[PrefillChunk]
+                    ) -> tuple[float, list[tuple[PrefillChunk, np.ndarray]]]:
+        """Compute + scatter this iteration's prefill chunks. The real
+        compute recomputes the prefix (prefill over ``prompt[:end]`` —
+        causal attention makes the chunk's KV bit-identical to a one-shot
+        prefill, which is what keeps chunking numerically invisible); the
+        *modeled* chunk cost is the incremental stack time
+        T(end) - T(start), charged on top of the decode iteration it rides.
+        Returns (modeled chunk seconds, final-chunk logits)."""
+        t = 0.0
+        finals: list[tuple[PrefillChunk, np.ndarray]] = []
+        for ch in chunks:
+            req = ch.req
+            logits, caches1, _ = self._jitted_prefill(req.prompt[:ch.end],
+                                                      ch.end)
+            page = self.ecfg.page_size
+            self._scatter_prefill_kv(req, caches1, n_tokens=ch.end,
+                                     start_page=ch.start // page)
+            # a chunk that lands on spilled (fresh host-tier) pages writes
+            # them over the same link as everything else: charge the d2h
+            # bytes like the one-shot path does via _modeled_ttft. Dedup'd
+            # host hits are already resident and cost nothing.
+            refs = self.kv.refs(req.rid)
+            deduped = set(self.kv.dedup_hit_pages(req.rid))
+            n_host_written = sum(
+                1 for i in range(ch.start // page, -(-ch.end // page))
+                if i not in deduped and i < len(refs)
+                and refs[i].tier == HOST)
+            if n_host_written:
+                self.swap.note_demotions(n_host_written)
+            req.prefill_pos = ch.end
+            t += max(self._prefill_seconds(ch.end)
+                     - self._prefill_seconds(ch.start), 0.0)
+            if ch.final:
+                finals.append((ch, np.asarray(logits[0], np.float32)))
+        return t, finals
+
+    def _finish_chunks(self, chunks: list[PrefillChunk],
+                       finals: list[tuple[PrefillChunk, np.ndarray]],
+                       dt: float) -> list[int]:
+        """Per-chunk TTFT accounting: every in-flight chunked prefill
+        absorbs this iteration's latency; a final chunk closes TTFT, emits
+        the request's first token, and activates the slot for the next
+        decode step. Returns rids finished at prefill (token budget <= 1)."""
+        done: list[int] = []
+        for ch in chunks:
+            ch.req.ttft_accum_s += dt
+        for ch, logits_np in finals:
+            req = ch.req
+            req.ttft_s = req.ttft_accum_s
+            self.prefill_log.append((req, ch.slot, logits_np))
+            tok = int(np.argmax(logits_np))
+            req.generated.append(tok)
+            if req.done:
+                # token budget exhausted at prefill: never activate the slot
+                req.state = State.FINISHED
+                self.finished.append(req)
+                self.slot_req[ch.slot] = None
+                self.kv.free(req.rid)
+                done.append(req.rid)
+                continue
+            self.tokens[ch.slot] = tok
+            self.pos[ch.slot] = req.prompt_len
+            self.active[ch.slot] = True
+            req.state = State.DECODING
+        return done
 
     # ---------------------------------------------------------------- decode --
     def _build_iteration_tables(self) -> tuple:
@@ -527,7 +645,9 @@ class ServingEngine:
 
     def step(self, peers: list["ServingEngine"] | None = None,
              link_bw: float | None = None) -> None:
-        """One inference iteration: coordinate -> admit -> decode all slots."""
+        """One inference iteration: coordinate -> plan -> apply (preempt /
+        resume / admit / chunk) -> decode all active slots -> report the
+        outcome to the scheduler."""
         self.prefill_log = []
         self.last_decode = None
         if peers is not None and link_bw is not None:
@@ -541,23 +661,55 @@ class ServingEngine:
         elif self.interval == 0:
             self.set_interval(NO_OFFLOAD)
 
-        self._admit()
+        fin0 = len(self.finished)
+        plan = self._admit()
+        # one-shot prefills emit a first token each and may finish their
+        # request outright (token budget <= 1): count them in the outcome
+        # like the chunked finals are counted
+        prefill_tokens = sum(1 for adm in plan.admissions if not adm.chunked)
+        prefill_finished = [r.rid for r in self.finished[fin0:]]
+        # the applied plan must agree with the executor's resulting state —
+        # the typed contract is checked, not decorative
+        assert plan.target_interval == self.interval, \
+            "plan was built against a stale interval"
+        assert plan.decode_slots == [s for s in range(self.ecfg.max_batch)
+                                     if self.active[s]], \
+            "scheduler decode_slots diverge from executor slot state"
         self.host_kv_peak_pages = max(self.host_kv_peak_pages,
                                       self.kv.host.used_pages)
         self.device_pages_peak = max(self.device_pages_peak,
                                      self.kv.device.used_pages)
+        chunk_s, finals = self._run_chunks(plan.chunks)
         if self._active_batch() == 0:
+            # no decode this iteration; chunk compute still advances the
+            # clock and the chunked requests' TTFT accrual
+            if plan.chunks:
+                self.clock_s += chunk_s
+                done = self._finish_chunks(plan.chunks, finals, chunk_s)
+                self.scheduler.note_outcome(IterationOutcome(
+                    dt_s=chunk_s, finished_rids=prefill_finished + done,
+                    tokens_emitted=prefill_tokens + len(finals),
+                    chunks_run=len(plan.chunks),
+                    preemptions=len(plan.preemptions),
+                    resumes=len(plan.resumes)))
+            else:
+                self.scheduler.note_outcome(IterationOutcome(
+                    dt_s=0.0, finished_rids=prefill_finished,
+                    tokens_emitted=prefill_tokens,
+                    preemptions=len(plan.preemptions),
+                    resumes=len(plan.resumes)))
             return
         # KV tier activity of this iteration: promote host pages into freed
         # device frames, stream the rest in for attention, write back any
-        # pending demotions. Promotion is never a traffic spike: a promoted
-        # page's one-time copy replaces its recurring streamed copy.
-        plan = self.swap.plan_iteration(self._active_rids())
-        if plan.promotions:
+        # pending demotions (incl. preemption parks) and charge resume
+        # promotions. Promotion is never a traffic spike: a promoted page's
+        # one-time copy replaces its recurring streamed copy.
+        sp = self.swap.plan_iteration(self._active_rids())
+        if sp.promotions:
             assert self.host_pool is not None
             self.pool = ops.copy_pages_from_host(
-                self.host_pool, [m.src_page for m in plan.promotions],
-                self.pool, [m.dst_page for m in plan.promotions])
+                self.host_pool, [m.src_page for m in sp.promotions],
+                self.pool, [m.dst_page for m in sp.promotions])
         cow_in, cow_out = self._resolve_cow_writes()
         if cow_in or cow_out:
             # a cross-tier COW moved a write page between tiers, changing
@@ -566,10 +718,10 @@ class ServingEngine:
             # the charged bytes equal the gathers the tables will issue,
             # then add the one-off COW copies themselves
             streamed_now = self.swap.streamed_bytes(self._active_rids())
-            plan.kv_in_bytes += streamed_now - plan.streamed_bytes
-            plan.streamed_bytes = streamed_now
-        plan.kv_in_bytes += cow_in
-        plan.kv_out_bytes += cow_out
+            sp.kv_in_bytes += streamed_now - sp.streamed_bytes
+            sp.streamed_bytes = streamed_now
+        sp.kv_in_bytes += cow_in
+        sp.kv_out_bytes += cow_out
         self._rt(self.interval)
         bt, cl, wf, wo, stream_src, stream_dst, writeback = \
             self._build_iteration_tables()
@@ -595,10 +747,15 @@ class ServingEngine:
 
         times = self.times_fn(self._active_batch(), self.ecfg.max_seq,
                               "decode")
+        # piggybacked chunk compute rides the same iteration: its stack time
+        # adds to the latency every active request pays this step
         dt = iter_time_with_interval_kv(times, self.interval,
-                                        plan.kv_in_bytes, plan.kv_out_bytes)
+                                        sp.kv_in_bytes, sp.kv_out_bytes) \
+            + chunk_s
         self.clock_s += dt
 
+        finished_rids: list[int] = list(prefill_finished)
+        tokens_out = prefill_tokens
         for slot in range(self.ecfg.max_batch):
             if not self.active[slot]:
                 continue
@@ -608,6 +765,7 @@ class ServingEngine:
             tok = int(np.argmax(logits[slot]))
             req.generated.append(tok)
             req.tpot_s.append(dt)
+            tokens_out += 1
             self.tokens[slot] = tok
             self.pos[slot] += 1
             if req.done:
@@ -616,17 +774,29 @@ class ServingEngine:
                 self.active[slot] = False
                 self.slot_req[slot] = None
                 self.kv.free(req.rid)
+                finished_rids.append(req.rid)
+        finished_rids += self._finish_chunks(plan.chunks, finals, dt)
+        tokens_out += len(finals)
+        self.scheduler.note_outcome(IterationOutcome(
+            dt_s=dt, finished_rids=finished_rids, tokens_emitted=tokens_out,
+            chunks_run=len(plan.chunks), preemptions=len(plan.preemptions),
+            resumes=len(plan.resumes)))
 
     def run(self, requests: list[Request], max_iters: int = 10_000,
             peers=None, link_bw=None) -> dict:
         for r in requests:
             self.submit(r)
         it = 0
-        while (self.queue or self._active_batch() > 0) and it < max_iters:
+        while (self.scheduler.has_work() or self._active_batch() > 0) \
+                and it < max_iters:
             self.step(peers=peers, link_bw=link_bw)
             it += 1
         done = [r.metrics() for r in self.finished]
         total_tokens = sum(m["tokens"] for m in done)
+        delays = [m["queue_delay_s"] for m in done
+                  if m["queue_delay_s"] is not None]
+        st = self.scheduler.stats
+        stalls = [m["preempt_stall_s"] for m in done]
         return {
             "finished": len(self.finished),
             "rejected": len(self.rejected),
@@ -635,5 +805,11 @@ class ServingEngine:
             "throughput_tok_s": total_tokens / self.clock_s
             if self.clock_s > 0 else 0.0,
             "slo_ok": all(m["ttft_ok"] and m["tpot_ok"] for m in done),
+            "preemptions": st["preemptions"],
+            "resumes": st["resumes"],
+            "preempt_stall_max_s": max(stalls) if stalls else 0.0,
+            "chunked_prefill_iters": st["chunked_prefill_iters"],
+            "queue_delay_p99_s": float(np.quantile(delays, 0.99))
+            if delays else 0.0,
             "per_request": done,
         }

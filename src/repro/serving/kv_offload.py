@@ -23,7 +23,16 @@ refcounts, LMCache-style cross-request prefix sharing:
                           whose prompt shares a prefix with a live or
                           host-parked request maps its block-table entries
                           onto the same frames (refcount += 1) instead of
-                          recomputing + re-storing them.
+                          recomputing + re-storing them. With
+                          ``host_prefix_cache_pages > 0`` indexed host
+                          frames outlive their last owner under a synthetic
+                          cache owner (LRU-bounded, reclaimed on demand), so
+                          a re-submitted prefix still dedups.
+  * ``park`` / ``resume`` — preempt-to-host: one whole-request migration of
+                          a victim's device-resident KV to the host tier
+                          (frame-wise and dedup-aware — frames an active
+                          sibling still references stay put), and the
+                          promotion back when the scheduler un-parks it.
   * ``SwapScheduler``   — per-iteration planner: promotes host pages into
                           freed device frames, streams the still-host-resident
                           KV of active requests in for attention, and charges
@@ -74,6 +83,11 @@ from repro.serving.kv_cache import (PageConfig, PagedKVAllocator,
 
 DEVICE = "device"
 HOST = "host"
+
+# Synthetic owner of keep-alive prefix-cache frames: host pages whose last
+# real owner freed but whose content stays indexed (bounded LRU), so a
+# re-submitted shared prefix still dedups. Real request ids are >= 0.
+CACHE_RID = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,6 +210,9 @@ class PrefixIndex:
         if key is not None:
             del self._by_key[key]
 
+    def has_frame(self, ref: PageRef) -> bool:
+        return ref in self._by_frame
+
     def __len__(self) -> int:
         return len(self._by_key)
 
@@ -233,7 +250,8 @@ class TieredKVAllocator:
 
     def __init__(self, device_bytes: float, host_bytes: float,
                  pcfg: PageConfig, scope: str = "",
-                 enable_dedup: bool = False):
+                 enable_dedup: bool = False,
+                 host_prefix_cache_pages: int = 0):
         self.pcfg = pcfg
         self.device = PagedKVAllocator(max(int(device_bytes), 0), pcfg)
         self.host = HostKVPool(max(int(host_bytes), 0), pcfg)
@@ -246,6 +264,13 @@ class TieredKVAllocator:
         self._reserve: dict[int, PageRef] = {}        # rid -> COW reserve
         self.dedup_pages_reused = 0                   # cumulative hit count
         self.cow_copies = 0                           # cumulative COW moves
+        # prefix-cache keep-alive: up to this many host frames survive their
+        # last owner under CACHE_RID (LRU; 0 disables). A cached frame keeps
+        # its index entry, so a later identical prefix still dedups; cache
+        # frames are reclaimed on demand when the host pool runs dry.
+        self.host_prefix_cache_pages = host_prefix_cache_pages
+        self._cache_lru: dict[int, None] = {}  # host frame -> None (ordered)
+        self.cache_hits = 0                    # dedup hits on cached frames
 
     # ---- queries -------------------------------------------------------------
     @property
@@ -346,6 +371,11 @@ class TieredKVAllocator:
         if not allow_host and (n_host > 0 or pv.host_hit_pages()):
             return None
         if n_host > self.host.free_pages:
+            # keep-alive cache frames are reclaimable capacity — but never
+            # the ones this very allocation is about to share
+            self._reclaim_host(n_host - self.host.free_pages,
+                               keep=pv.host_hit_pages())
+        if n_host > self.host.free_pages:
             return None
         hp = self.host.alloc_pages(rid, n_host)
         dp = self.device.alloc_pages(rid, n_fresh - n_host)
@@ -358,6 +388,12 @@ class TieredKVAllocator:
         for ref in pv.hit_refs:
             pool = self.device if ref.tier == DEVICE else self.host
             pool.share_pages(rid, [ref.page])
+            if ref.tier == HOST and ref.page in self._cache_lru:
+                # keep-alive hit: refresh recency (the cache keeps its claim,
+                # so the frame re-enters the cache when this owner frees)
+                self._cache_lru.pop(ref.page)
+                self._cache_lru[ref.page] = None
+                self.cache_hits += 1
         self.dedup_pages_reused += pv.n_hits
         # position-wise refs: hits keep their page index, fresh pages fill
         # the rest host-first (cold prefix on host)
@@ -424,7 +460,18 @@ class TieredKVAllocator:
     def free(self, rid: int) -> None:
         """Drop every reference ``rid`` holds (refs + COW reserve). Shared
         frames survive for their remaining owners; frames whose last
-        reference dropped leave the prefix index with them."""
+        reference dropped leave the prefix index with them — except indexed
+        host frames when the keep-alive prefix cache is on, which survive
+        under ``CACHE_RID`` (LRU-bounded) so a re-submitted prefix dedups."""
+        adopted = False
+        if self.host_prefix_cache_pages > 0:
+            for ref in self._refs.get(rid, []):
+                if (ref.tier == HOST and self.host.refcount(ref.page) == 1
+                        and self.index.has_frame(ref)
+                        and ref.page not in self._cache_lru):
+                    self.host.share_pages(CACHE_RID, [ref.page])
+                    self._cache_lru[ref.page] = None
+                    adopted = True
         for p in self.device.free(rid):
             self.index.evict(PageRef(DEVICE, p))
         for p in self.host.free(rid):
@@ -433,6 +480,52 @@ class TieredKVAllocator:
         self._dedup_hits.pop(rid, None)
         self._fresh_host.pop(rid, None)
         self._reserve.pop(rid, None)
+        if adopted:
+            # trim AFTER rid's own claims are gone: adopted frames are
+            # refcount-1 (pure cache) only now, so the LRU bound can evict
+            self._trim_cache()
+
+    # ---- keep-alive prefix cache ---------------------------------------------
+    def cached_pages(self) -> list[int]:
+        """Host frames alive only as prefix-cache entries (LRU order,
+        oldest first). Frames also held by a live request are listed too —
+        they cost no extra capacity and re-enter pure-cache state when the
+        owner frees."""
+        return list(self._cache_lru)
+
+    def reclaimable_host_pages(self) -> int:
+        return sum(1 for p in self._cache_lru if self.host.refcount(p) == 1)
+
+    def _evict_cached(self, page: int) -> None:
+        del self._cache_lru[page]
+        freed = self.host.release_pages(CACHE_RID, [page])
+        for p in freed:
+            self.index.evict(PageRef(HOST, p))
+
+    def _trim_cache(self) -> None:
+        over = len(self._cache_lru) - self.host_prefix_cache_pages
+        for p in list(self._cache_lru):
+            if over <= 0:
+                break
+            if self.host.refcount(p) == 1:   # only pure-cache frames evict
+                self._evict_cached(p)
+                over -= 1
+
+    def _reclaim_host(self, n_pages: int, keep: set[int] | None = None
+                      ) -> int:
+        """Free up to ``n_pages`` host frames by evicting prefix-cache
+        entries, oldest first. Frames with a live owner free no capacity and
+        are skipped; ``keep`` protects frames the caller is about to share."""
+        freed = 0
+        for p in list(self._cache_lru):
+            if freed >= n_pages:
+                break
+            if keep and p in keep:
+                continue
+            if self.host.refcount(p) == 1:
+                self._evict_cached(p)
+                freed += 1
+        return freed
 
     # ---- copy-on-write -------------------------------------------------------
     def prepare_write(self, rid: int, page_idx: int) -> list[CowMove]:
@@ -506,6 +599,11 @@ class TieredKVAllocator:
         dp = dst_pool.alloc_pages(holders[0], 1)
         if dp is None:
             return None
+        if ref.tier == HOST and ref.page in self._cache_lru:
+            # promotion moves the frame (and its index entry) to device; the
+            # keep-alive cache only spans the host tier, so its claim drops
+            del self._cache_lru[ref.page]
+            self.host.release_pages(CACHE_RID, [ref.page])
         for rid in holders[1:]:
             dst_pool.share_pages(rid, [dp[0]])
         for rid in holders:
@@ -524,6 +622,8 @@ class TieredKVAllocator:
                 break
             if ref.tier != DEVICE or ref not in refs:
                 continue
+            if self.host.free_pages == 0:
+                self._reclaim_host(1)
             hp = self._transfer_frame(ref, self.host, HOST)
             if hp is None:
                 break
@@ -546,12 +646,77 @@ class TieredKVAllocator:
             moves.append(Migration(rid, HOST, ref.page, dp))
         return moves
 
+    # ---- preempt-to-host (whole-request park/resume) -------------------------
+    def _park_targets(self, rid: int, active_rids=()) -> list[PageRef]:
+        """Device frames ``park`` would migrate: every device frame ``rid``
+        references (block table + COW reserve) EXCEPT frames a still-active
+        request also references — moving those frees no capacity (the
+        sibling keeps the claim) and would force the sibling to stream a
+        page it attends through every iteration. Frame-wise: a frame
+        referenced at several positions appears once."""
+        keep: set[int] = set()
+        for arid in active_rids:
+            if arid == rid:
+                continue
+            keep.update(r.page for r in self._refs.get(arid, [])
+                        if r.tier == DEVICE)
+            res = self._reserve.get(arid)
+            if res is not None and res.tier == DEVICE:
+                keep.add(res.page)
+        cands = list(self._refs.get(rid, []))
+        res = self._reserve.get(rid)
+        if res is not None:
+            cands.append(res)
+        uniq: list[PageRef] = []
+        seen: set[int] = set()
+        for r in cands:
+            if r.tier == DEVICE and r.page not in keep and r.page not in seen:
+                seen.add(r.page)
+                uniq.append(r)
+        return uniq
+
+    def park_preview(self, rid: int, active_rids=()) -> tuple[int, int]:
+        """(device frames ``park(rid)`` would free, host frames it needs) —
+        the scheduler's feasibility precheck, no mutation."""
+        n = len(self._park_targets(rid, active_rids))
+        return n, n
+
+    def park(self, rid: int, active_rids=()) -> list[Migration] | None:
+        """Preempt-to-host: migrate the request's ENTIRE device-resident KV
+        (block-table frames + COW reserve) to the host tier in one
+        whole-request move. Shared prefix frames move once for all owners —
+        and not at all while an active sibling still references them (they
+        free nothing and would cost the sibling streaming traffic). Returns
+        the migrations for the data plane, or None (nothing moved) when the
+        host pool cannot absorb the parked set even after reclaiming
+        prefix-cache frames."""
+        targets = self._park_targets(rid, active_rids)
+        if len(targets) > self.host.free_pages:
+            self._reclaim_host(len(targets) - self.host.free_pages)
+        if len(targets) > self.host.free_pages:
+            return None
+        moves: list[Migration] = []
+        for ref in targets:
+            hp = self._transfer_frame(ref, self.host, HOST)
+            assert hp is not None          # capacity checked up front
+            moves.append(Migration(rid, DEVICE, ref.page, hp))
+        return moves
+
+    def resume(self, rid: int) -> list[Migration]:
+        """Un-park: promote the request's host pages back into free device
+        frames, oldest first (shared frames move once, for every owner).
+        Whatever does not fit stays host-resident — the engine's streaming
+        slab covers it until the swap scheduler promotes the rest."""
+        return self.swap_in(rid, len(self.host_pages_of(rid)))
+
     def can_resize_device(self, new_total_bytes: float) -> bool:
         """Would ``resize_device`` succeed? False when the shrink's overflow
         exceeds free host capacity (resize_device would raise). Shared
-        frames count once — ``used_pages`` is unique frames."""
+        frames count once — ``used_pages`` is unique frames; keep-alive
+        cache frames count as reclaimable capacity."""
         new_pages = max(int(new_total_bytes), 0) // self.page_bytes
-        return self.device.used_pages - new_pages <= self.host.free_pages
+        return (self.device.used_pages - new_pages
+                <= self.host.free_pages + self.reclaimable_host_pages())
 
     def resize_device(self, new_total_bytes: float) -> ResizeResult:
         """Rebuild the device pool for a new byte budget (the offloading
@@ -567,6 +732,9 @@ class TieredKVAllocator:
             # validated up front so failure never leaves partial state
             raise RuntimeError("device KV overflow exceeds host capacity")
         new_total = max(int(new_total_bytes), 0) // self.page_bytes
+        overflow = self.device.used_pages - new_total
+        if overflow > self.host.free_pages:
+            self._reclaim_host(overflow - self.host.free_pages)
         demotions: list[Migration] = []
         # shed overflow: take from the requests holding the most device
         # pages, their oldest (front) frames first. Counts are maintained
@@ -652,6 +820,13 @@ class TieredKVAllocator:
             assert self.refcount(ref) >= 1, "index entry on a dead frame"
         for ref, key in self.index._by_frame.items():
             assert self.index._by_key.get(key) == ref
+        # keep-alive cache: CACHE_RID's host claims are exactly the LRU set,
+        # and every cached frame still answers a prefix lookup
+        assert sorted(self._cache_lru) == sorted(
+            self.host.pages_of(CACHE_RID)), "cache LRU out of sync with pool"
+        for p in self._cache_lru:
+            assert self.index.has_frame(PageRef(HOST, p)), \
+                "cached frame lost its index entry"
 
 
 # ---------------------------------------------------------------------------
@@ -685,15 +860,25 @@ class SwapScheduler:
     def __init__(self, kv: TieredKVAllocator):
         self.kv = kv
         self._pending_out_pages = 0
+        self._pending_in_pages = 0
 
     def note_demotions(self, n_pages: int) -> None:
-        """Register demotions performed by resize/extend since last plan
-        (callers pass unique frame moves — one per ``Migration``)."""
+        """Register demotions performed by resize/extend/park since last
+        plan (callers pass unique frame moves — one per ``Migration``)."""
         self._pending_out_pages += n_pages
+
+    def note_promotions(self, n_pages: int) -> None:
+        """Register promotions already performed by the data plane (resume)
+        whose copy bytes must be charged to the next iteration's link."""
+        self._pending_in_pages += n_pages
 
     def pending_out_bytes(self) -> float:
         """Write-back traffic already queued for the next iteration."""
         return self._pending_out_pages * self.kv.page_bytes
+
+    def pending_in_bytes(self) -> float:
+        """Promotion traffic (resume copies) charged to the next iteration."""
+        return self._pending_in_pages * self.kv.page_bytes
 
     def streamed_host_pages(self, active_rids: list[int]) -> set[int]:
         """UNIQUE host frames the active requests attend through."""
@@ -707,6 +892,8 @@ class SwapScheduler:
         plan = SwapPlan()
         plan.kv_out_bytes = self._pending_out_pages * self.kv.page_bytes
         self._pending_out_pages = 0
+        plan.kv_in_bytes = self._pending_in_pages * self.kv.page_bytes
+        self._pending_in_pages = 0
         # promote into free device frames, cheapest request first (a shared
         # frame promotes once: the first owner's swap_in rewrites them all)
         order = sorted((r for r in active_rids if self.kv.host_pages_of(r)),

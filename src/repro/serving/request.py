@@ -11,6 +11,11 @@ class State(enum.Enum):
     QUEUED = "queued"
     PREFILLING = "prefilling"
     DECODING = "decoding"
+    # Preempt-to-host: the scheduler parked this request's entire KV on the
+    # host tier to vacate device frames (and its streaming traffic) for a
+    # blocked admission; it resumes decoding — token-exactly — once capacity
+    # and the TPOT budget allow.
+    PREEMPTED = "preempted"
     FINISHED = "finished"
     REJECTED = "rejected"
 
@@ -30,6 +35,24 @@ class Request:
     ttft_s: float | None = None
     tpot_s: list[float] = dataclasses.field(default_factory=list)
     reject_reason: str = ""
+    # chunked prefill: tokens of the prompt whose KV has been computed and
+    # scattered so far; TTFT accrues per chunk into ttft_accum_s until the
+    # final chunk lands (prefill_pos == prompt_len) and sets ttft_s.
+    prefill_pos: int = 0
+    ttft_accum_s: float = 0.0
+    # preempt-to-host resume snapshot: the sampled-but-not-yet-decoded token
+    # and the write position, restored verbatim when the request is resumed.
+    next_token: int = -1
+    resume_pos: int = 0
+    preempt_count: int = 0
+    # modeled clock spent parked (inter-token stall the per-iteration TPOT
+    # samples deliberately do NOT include — reported separately so a parked
+    # request's starvation is visible, not hidden inside a passing tpot_ok)
+    preempt_stall_s: float = 0.0
+    parked_at_s: float | None = None
+    # queueing-delay accounting (modeled clock)
+    submitted_s: float | None = None
+    admitted_s: float | None = None
 
     @property
     def prompt_len(self) -> int:
@@ -38,6 +61,12 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def queue_delay_s(self) -> float | None:
+        if self.submitted_s is None or self.admitted_s is None:
+            return None
+        return self.admitted_s - self.submitted_s
 
     def metrics(self) -> dict:
         tpot = float(np.mean(self.tpot_s)) if self.tpot_s else 0.0
@@ -52,4 +81,7 @@ class Request:
             "tpot_ok": all(t <= self.tpot_slo_s * (1 + 1e-9)
                            for t in self.tpot_s),
             "tokens": len(self.generated),
+            "preempts": self.preempt_count,
+            "preempt_stall_s": self.preempt_stall_s,
+            "queue_delay_s": self.queue_delay_s,
         }

@@ -23,11 +23,15 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                       hbm_gb: float | None = None,
                       extra_device_pages: float | None = None,
                       host_pages: int = 0, prefix_dedup: bool = False,
+                      preemption: bool = False,
+                      prefill_chunk_tokens: int = 0,
+                      host_prefix_cache_pages: int = 0,
                       batches=(1, 2, 4, 8), seqs=(16, 32, 64)):
     """Reduced-qwen engine + analyzer. Size HBM either directly (``hbm_gb``)
     or as resident weights plus ``extra_device_pages`` KV pages (the
     tiered-serving shape); ``host_pages`` sizes the pinned-host KV pool in
-    pages of the same geometry."""
+    pages of the same geometry. ``preemption`` / ``prefill_chunk_tokens`` /
+    ``host_prefix_cache_pages`` switch on the scheduler policies."""
     cfg = reduce_config(get_config("qwen2.5-3b"), d_model=d_model,
                         heads=heads, layers=layers, d_ff=d_ff, vocab=vocab)
     model = build_model(cfg)
@@ -50,5 +54,9 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                                      page_size=page_size,
                                      hbm_budget_bytes=hbm,
                                      host_kv_bytes=host_pages * page_bytes,
-                                     prefix_dedup=prefix_dedup))
+                                     prefix_dedup=prefix_dedup,
+                                     preemption=preemption,
+                                     prefill_chunk_tokens=prefill_chunk_tokens,
+                                     host_prefix_cache_pages=
+                                     host_prefix_cache_pages))
     return eng, an

@@ -111,27 +111,41 @@ class DualEngine:
 
     def step(self, **kw) -> None:
         self.eng.step(**kw)
-        for req, slot, logits in self.eng.prefill_log:
-            ref = self.shadow.prefill(req.prompt, slot)
-            self._check(logits, ref, f"prefill rid={req.rid} slot={slot} "
-                                     f"iter={self.iters}")
-            self.prefill_compares += 1
         d = self.eng.last_decode
+        # Apply shadow prefills in engine order relative to the decode: a
+        # one-shot prefill activates its slot before the decode step (the
+        # slot is active in last_decode), while a chunked prefill's final
+        # chunk activates it after (inactive this iteration — the shadow's
+        # idle-row decode write must not land on the fresh cache).
+        before, after = [], []
+        for e in self.eng.prefill_log:
+            (before if d is not None and d["active"][e[1]] else after).append(e)
+
+        def apply(entries):
+            for req, slot, logits in entries:
+                ref = self.shadow.prefill(req.prompt, slot)
+                self._check(logits, ref, f"prefill rid={req.rid} slot={slot} "
+                                         f"iter={self.iters}")
+                self.prefill_compares += 1
+
+        apply(before)
         if d is not None:
             ref = self.shadow.decode(d["tokens"], d["pos"])
             for slot in np.flatnonzero(d["active"]):
                 self._check(d["logits"][slot], ref[slot],
                             f"decode iter={self.iters} slot={slot}")
                 self.decode_compares += 1
+        apply(after)
         self.iters += 1
 
     def run_until_drained(self, max_iters: int = 2000, **kw) -> None:
         it = 0
-        while (self.eng.queue or self.eng._active_batch() > 0) \
-                and it < max_iters:
+        while (self.eng.scheduler.has_work()
+               or self.eng._active_batch() > 0) and it < max_iters:
             self.step(**kw)
             it += 1
-        assert not self.eng.queue and self.eng._active_batch() == 0, \
+        assert not self.eng.scheduler.has_work() \
+            and self.eng._active_batch() == 0, \
             f"trace did not drain in {max_iters} iterations"
 
 
@@ -198,13 +212,15 @@ class PagedDualEngine:
 
     def run_until_drained(self, max_iters: int = 2000, **kw) -> None:
         it = 0
-        while (self.base.queue or self.base._active_batch() > 0
-               or self.dedup.queue or self.dedup._active_batch() > 0) \
-                and it < max_iters:
+        while (self.base.scheduler.has_work()
+               or self.base._active_batch() > 0
+               or self.dedup.scheduler.has_work()
+               or self.dedup._active_batch() > 0) and it < max_iters:
             self.step(**kw)
             it += 1
         for eng in (self.base, self.dedup):
-            assert not eng.queue and eng._active_batch() == 0, \
+            assert not eng.scheduler.has_work() \
+                and eng._active_batch() == 0, \
                 f"trace did not drain in {max_iters} iterations"
 
     def device_frames_saved(self) -> int:

@@ -449,3 +449,115 @@ def test_engine_spill_admission_respects_tpot():
     assert out["finished"] == 0
     assert len(eng.queue) == 1                  # waiting on device pages
     assert eng.kv.host.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex keep-alive (host-tier prefix cache, LRU-bounded)
+# ---------------------------------------------------------------------------
+
+def _mk_cached_kv(device_pages=1, host_pages=8, cache_pages=4):
+    return TieredKVAllocator(device_pages * 16, host_pages * 16,
+                             _pcfg(page_size=4, bpt=4), scope="cache-test",
+                             enable_dedup=True,
+                             host_prefix_cache_pages=cache_pages)
+
+
+def _prompt(seed, n=12):
+    return (np.arange(n) * 7 + seed).astype(np.int64) % 97
+
+
+def test_prefix_cache_keeps_host_entries_after_last_owner_frees():
+    """A re-submitted shared prefix dedups even when no live request holds
+    the pages anymore: the last owner's indexed host frames survive under
+    the cache owner instead of dying with the request."""
+    kv = _mk_cached_kv()
+    p = _prompt(0)
+    kv.alloc(0, 16, prompt=p)              # 3 prompt pages on host, tail dev
+    assert len(kv.host_pages_of(0)) == 3
+    idx_before = len(kv.index)
+    kv.free(0)
+    kv.check_invariants()
+    assert len(kv.cached_pages()) == 3     # frames survived their owner
+    assert len(kv.index) == idx_before     # content still addressable
+    assert kv.host.used_pages == 3
+
+    refs = kv.alloc(1, 16, prompt=p)       # same prefix re-submitted
+    assert refs is not None
+    assert kv.dedup_hit_pages(1) == [0, 1, 2]
+    assert kv.cache_hits == 3
+    kv.free(1)
+    kv.check_invariants()
+    assert len(kv.cached_pages()) == 3     # re-entered the cache
+
+
+def test_prefix_cache_lru_capacity_evicts_oldest():
+    kv = _mk_cached_kv(host_pages=16, cache_pages=3)
+    kv.alloc(0, 16, prompt=_prompt(0))     # 3 host prompt pages
+    kv.free(0)
+    first_gen = set(kv.cached_pages())
+    kv.alloc(1, 16, prompt=_prompt(1))     # different content: 3 more
+    kv.free(1)
+    kv.check_invariants()
+    cached = kv.cached_pages()
+    assert len(cached) == 3                # capacity bound holds
+    # the survivors are the newest entries (rid 1's), oldest evicted first
+    assert not (set(cached) & first_gen)
+    assert kv.host.used_pages == 3
+
+
+def test_prefix_cache_reclaimed_under_host_pressure():
+    """Cache frames are capacity, not a leak: an allocation that needs host
+    pages evicts LRU entries instead of failing."""
+    kv = _mk_cached_kv(host_pages=4, cache_pages=4)
+    kv.alloc(0, 16, prompt=_prompt(0))
+    kv.free(0)
+    assert len(kv.cached_pages()) == 3 and kv.host.free_pages == 1
+    # a fresh prompt needs 3 host pages: 2 cache entries must be reclaimed
+    refs = kv.alloc(1, 16, prompt=_prompt(5))
+    assert refs is not None
+    assert len(kv.host_pages_of(1)) == 3
+    assert len(kv.cached_pages()) <= 1
+    kv.check_invariants()
+
+
+def test_prefix_cache_hit_frames_not_reclaimed_for_same_alloc():
+    """Reclaim under pressure must spare the frames the very same
+    allocation is about to share: the OTHER prompt's entries evict, the hit
+    prompt's entries survive and dedup."""
+    kv = _mk_cached_kv(host_pages=8, cache_pages=6)
+    pa, pb = _prompt(0), _prompt(50)
+    kv.alloc(0, 16, prompt=pa)
+    kv.free(0)                             # pa cached (older)
+    kv.alloc(1, 16, prompt=pb)
+    kv.free(1)                             # pb cached (newer)
+    assert len(kv.cached_pages()) == 6 and kv.host.free_pages == 2
+    # pb resubmitted with a longer tail: hits pb's 3 cached pages, needs 3
+    # fresh host pages (free 2) -> reclaim must evict pa's LRU entries, not
+    # the pb frames this allocation shares
+    refs = kv.alloc(2, 28, prompt=np.concatenate([pb, _prompt(9, 8)]))
+    assert refs is not None
+    assert kv.dedup_hit_pages(2)[:3] == [0, 1, 2]
+    assert kv.cache_hits == 3
+    kv.check_invariants()
+
+
+def test_prefix_cache_disabled_by_default_frames_die_with_owner():
+    kv = TieredKVAllocator(16, 8 * 16, _pcfg(page_size=4, bpt=4),
+                           scope="nocache", enable_dedup=True)
+    kv.alloc(0, 16, prompt=_prompt(0))
+    kv.free(0)
+    assert kv.host.used_pages == 0 and len(kv.index) == 0
+    assert kv.cached_pages() == []
+
+
+def test_prefix_cache_single_owner_over_cap_trims_at_free():
+    """Regression: the LRU bound must hold even when ONE owner frees more
+    indexed host pages than the capacity — the trim runs after the owner's
+    own claims are released, so the excess frames are evictable
+    immediately, not only under later pressure."""
+    kv = _mk_cached_kv(host_pages=8, cache_pages=2)
+    kv.alloc(0, 16, prompt=_prompt(0))     # 3 indexed host pages
+    kv.free(0)
+    kv.check_invariants()
+    assert len(kv.cached_pages()) == 2     # bound holds right away
+    assert kv.host.used_pages == 2

@@ -1,0 +1,344 @@
+"""Scheduler policy unit tests (fast tier — no engine, no jit).
+
+The ``Scheduler`` is constructed directly over a real ``TieredKVAllocator``
+with stubbed SLO models (performance record, layer times, TTFT model), so
+plan construction, queue policy, chunk boundaries, victim selection and
+park/resume accounting are all checkable without compiling a model.
+"""
+import numpy as np
+import pytest
+
+from repro.core.interval import NO_OFFLOAD, LayerTimes
+from repro.serving.kv_cache import PageConfig
+from repro.serving.kv_offload import (DEVICE, HOST, SwapScheduler,
+                                      TieredKVAllocator)
+from repro.serving.request import Request, State
+from repro.serving.scheduler import (ActiveInfo, IterationOutcome, Scheduler,
+                                     SchedulerConfig, SchedulerView)
+
+PAGE = 8
+BPT = 16
+PB = PAGE * BPT                      # page bytes
+
+# stub link: layer_bytes / t_transfer = 1e9 B/s; base iter = 4 us
+TIMES = LayerTimes(t_compute_s=1e-6, t_transfer_s=1e-6, num_layers=4,
+                   layer_bytes=1000)
+
+
+class StubRecord:
+    """Performance record stub: every SLO admits interval 1."""
+
+    def __init__(self, min_interval=1):
+        self.min_interval = min_interval
+
+    def lookup(self, slo_s, batch, seq):
+        return self.min_interval
+
+
+def mk_sched(device_pages=8, host_pages=0, *, preemption=False,
+             chunk_tokens=0, cache_pages=0, max_batch=4, max_seq=64,
+             max_interval=NO_OFFLOAD, record=None):
+    kv = TieredKVAllocator(device_pages * PB, host_pages * PB,
+                           PageConfig(PAGE, bytes_per_token=BPT),
+                           scope="sched-test", enable_dedup=cache_pages > 0,
+                           host_prefix_cache_pages=cache_pages)
+    swap = SwapScheduler(kv)
+    sched = Scheduler(kv, swap, max_batch, max_seq,
+                      record or StubRecord(),
+                      lambda b, s, phase: TIMES,
+                      lambda req, spill_bytes: 0.0,
+                      lambda: max_interval,
+                      SchedulerConfig(preemption=preemption,
+                                      prefill_chunk_tokens=chunk_tokens))
+    return sched, kv, swap
+
+
+def mk_req(rid, prompt_len=8, new=8, ttft=10.0, tpot=10.0):
+    rng = np.random.default_rng(rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(0, 100, prompt_len).astype(np.int32),
+                   max_new_tokens=new, ttft_slo_s=ttft, tpot_slo_s=tpot)
+
+
+def view(free_slots=None, active=(), interval=NO_OFFLOAD, max_batch=4):
+    if free_slots is None:
+        used = {a.slot for a in active}
+        free_slots = [i for i in range(max_batch) if i not in used]
+    return SchedulerView(interval=interval, free_slots=list(free_slots),
+                         active=list(active))
+
+
+def activate(sched, kv, req, slot):
+    """Admit ``req`` the way the executor would have: alloc + DECODING."""
+    assert kv.alloc(req.rid, req.prompt_len + req.max_new_tokens,
+                    prompt=req.prompt) is not None
+    req.state = State.DECODING
+    req.slot = slot
+    return ActiveInfo(req, slot)
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+def test_plan_admits_fifo_into_lowest_slots_and_allocates():
+    sched, kv, _ = mk_sched(device_pages=8)
+    a, b = mk_req(0, 8, 8), mk_req(1, 8, 8)      # 2 pages each
+    sched.submit(a)
+    sched.submit(b)
+    plan = sched.plan(view())
+    assert [(adm.req.rid, adm.slot) for adm in plan.admissions] \
+        == [(0, 0), (1, 1)]
+    assert not plan.rejections and not plan.chunks and not plan.preemptions
+    assert plan.decode_slots == [0, 1]           # one-shot prefills decode
+    assert not sched.queue
+    # the scheduler owns the accounting plane: pages are already claimed
+    assert kv.device.used_pages == 4
+    assert len(kv.refs(0)) == 2 and len(kv.refs(1)) == 2
+
+
+def test_plan_rejects_overlength_and_slo_infeasible():
+    sched, _, _ = mk_sched(max_seq=16, max_interval=2,
+                           record=StubRecord(min_interval=4))
+    too_long = mk_req(0, prompt_len=12, new=8)   # 20 > max_seq
+    bad_slo = mk_req(1, prompt_len=4, new=4)     # min_i 4 > max_i 2
+    sched.submit(too_long)
+    sched.submit(bad_slo)
+    plan = sched.plan(view())
+    assert not plan.admissions
+    assert [r.rid for r in plan.rejections] == [0, 1]
+    assert too_long.state == State.REJECTED
+    assert "max_seq" in too_long.reject_reason
+    assert "infeasible" in bad_slo.reject_reason
+
+
+def test_outcome_feeds_stats():
+    sched, _, _ = mk_sched()
+    sched.note_outcome(IterationOutcome(dt_s=1e-3, tokens_emitted=3,
+                                        chunks_run=2, preemptions=1,
+                                        resumes=1))
+    sched.note_outcome(IterationOutcome(dt_s=1e-3, tokens_emitted=1))
+    assert sched.stats["iterations"] == 2
+    assert sched.stats["tokens"] == 4
+    assert sched.stats["preemptions"] == 1
+    assert sched.stats["resumes"] == 1
+    assert sched.stats["chunked_prefill_iters"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Head-of-line fix (satellite): whole-queue scan
+# ---------------------------------------------------------------------------
+
+def test_short_request_admitted_behind_infeasible_long_one():
+    """Regression: the fused engine's ``_admit`` stopped at the first
+    memory-infeasible request, starving every later request that would fit.
+    The scheduler scans the whole queue: the long head stays QUEUED (not
+    rejected) and the short request behind it is admitted this iteration."""
+    sched, kv, _ = mk_sched(device_pages=2, host_pages=0)
+    long_req = mk_req(0, prompt_len=16, new=24)  # 40 tokens -> 5 pages: no fit
+    short = mk_req(1, prompt_len=8, new=8)       # 2 pages: fits
+    sched.submit(long_req)
+    sched.submit(short)
+    plan = sched.plan(view())
+    assert [adm.req.rid for adm in plan.admissions] == [1]
+    assert [r.rid for r in sched.queue] == [0]   # still waiting, FIFO retry
+    assert long_req.state == State.QUEUED
+    assert not plan.rejections
+    assert kv.device.used_pages == 2
+
+
+def test_fifo_order_preserved_when_all_fit():
+    sched, _, _ = mk_sched(device_pages=8)
+    reqs = [mk_req(i, 8, 8) for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    plan = sched.plan(view())
+    assert [adm.req.rid for adm in plan.admissions] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill
+# ---------------------------------------------------------------------------
+
+def test_chunk_boundaries_page_aligned_and_final():
+    sched, kv, _ = mk_sched(device_pages=8, chunk_tokens=10)  # rounds to 16
+    assert sched.chunk_tokens == 16
+    req = mk_req(0, prompt_len=20, new=8)
+    sched.submit(req)
+    plan = sched.plan(view())
+    assert len(plan.admissions) == 1 and plan.admissions[0].chunked
+    assert plan.decode_slots == []               # nothing decodes yet
+    assert [(c.start, c.end, c.final) for c in plan.chunks] \
+        == [(0, 16, False)]
+    req.prefill_pos = 16                         # executor's advance
+    plan2 = sched.plan(view(free_slots=[1, 2, 3]))
+    assert [(c.start, c.end, c.final) for c in plan2.chunks] \
+        == [(16, 20, True)]
+    req.prefill_pos = 20
+    req.state = State.DECODING
+    plan3 = sched.plan(view(free_slots=[1, 2, 3]))
+    assert not plan3.chunks                      # prefill complete
+    assert not sched._prefilling
+
+
+def test_single_chunk_prompt_still_routes_through_chunks():
+    sched, _, _ = mk_sched(device_pages=8, chunk_tokens=32)
+    req = mk_req(0, prompt_len=8, new=8)
+    sched.submit(req)
+    plan = sched.plan(view())
+    assert plan.admissions[0].chunked
+    assert [(c.start, c.end, c.final) for c in plan.chunks] \
+        == [(0, 8, True)]
+
+
+# ---------------------------------------------------------------------------
+# Victim selection + preempt-to-host planning
+# ---------------------------------------------------------------------------
+
+def test_victim_selection_prefers_streaming_then_remaining():
+    sched, kv, _ = mk_sched(device_pages=4, host_pages=8)
+    # a: 2 device pages; b: spills 2 pages to host (streams every iteration)
+    a = activate(sched, kv, mk_req(0, 8, 8), 0)
+    b = activate(sched, kv, mk_req(1, 16, 16), 1)    # 4 pages: 2 spill
+    assert len(kv.host_pages_of(1)) == 2
+    assert sched._select_victim([a, b]).rid == 1
+    # tie on streaming -> most remaining work loses the least sunk progress
+    c = activate(sched, kv, mk_req(2, 8, 16), 2)
+    a.req.generated.extend([5] * 6)                  # a: 2 tokens remain
+    assert sched._select_victim([a, c]).rid == 2
+    # non-DECODING actives (planned same-iteration admissions) are excluded
+    c.req.state = State.QUEUED
+    assert sched._select_victim([c]) is None
+
+
+def test_preemption_parks_victim_and_admits_blocked_request():
+    # victim: 4 pages, 2 device + 2 host (a streaming-heavy request); its
+    # recurring 2-page stream is what blocks the tight-TPOT admission
+    sched, kv, swap = mk_sched(device_pages=2, host_pages=8, preemption=True)
+    victim = activate(sched, kv, mk_req(0, 16, 16), 0)
+    assert kv.device.free_pages == 0 and len(kv.host_pages_of(0)) == 2
+    # base iteration (4us) is affordable, victim's streaming (+0.256us) not
+    blocked = mk_req(1, 4, 4, tpot=4.1e-6)
+    sched.submit(blocked)
+    plan = sched.plan(view(free_slots=[1, 2, 3], active=[victim]))
+    # victim parked whole-request: its 2 device frames migrated, once each
+    assert [p.req.rid for p in plan.preemptions] == [0]
+    assert len(plan.preemptions[0].migrations) == 2
+    assert kv.device_pages_of(0) == [] and len(kv.host_pages_of(0)) == 4
+    assert [r.rid for r in sched.preempted] == [0]
+    # the blocked request took the freed frames (device-only admission)
+    assert [adm.req.rid for adm in plan.admissions] == [1]
+    assert len(kv.device_pages_of(1)) == 1
+    # park write-back charged to the link (frame-wise)
+    assert swap.pending_out_bytes() == 2 * PB
+    kv.check_invariants()
+
+
+def test_preemption_needs_strict_streaming_relief():
+    """Anti-thrash: a victim with no host-streaming burden is never parked
+    for a same-shape request — pure capacity eviction is a wait."""
+    sched, kv, swap = mk_sched(device_pages=2, host_pages=8, preemption=True)
+    victim = activate(sched, kv, mk_req(0, 8, 8), 0)     # 2 device, 0 host
+    blocked = mk_req(1, 8, 8, tpot=1e-9)
+    sched.submit(blocked)
+    plan = sched.plan(view(free_slots=[1, 2, 3], active=[victim]))
+    assert not plan.preemptions and not plan.admissions
+    assert victim.req.state == State.DECODING
+    assert [r.rid for r in sched.queue] == [1]
+    assert swap.pending_out_bytes() == 0
+
+
+def test_preemption_declined_when_it_cannot_help():
+    """No parking spree when even parking everyone would not fit the
+    request: the queue entry just waits."""
+    sched, kv, swap = mk_sched(device_pages=2, host_pages=2, preemption=True)
+    victim = activate(sched, kv, mk_req(0, 8, 8), 0)
+    huge = mk_req(1, prompt_len=16, new=40)      # 7 pages > 2 freeable + host
+    sched.submit(huge)
+    plan = sched.plan(view(free_slots=[1, 2, 3], active=[victim]))
+    assert not plan.preemptions and not plan.admissions
+    assert victim.req.state == State.DECODING    # untouched
+    assert swap.pending_out_bytes() == 0
+    assert [r.rid for r in sched.queue] == [1]
+
+
+def test_shared_prefix_frames_stay_for_active_sibling_on_park():
+    """Dedup-aware park: a frame the victim shares with a live request must
+    not move (it frees nothing and would force the sibling to stream it)."""
+    sched, kv, _ = mk_sched(device_pages=8, host_pages=8, cache_pages=0)
+    kv.enable_dedup = True
+    prompt = (np.arange(16) * 3 % 97).astype(np.int32)
+    r0, r1 = mk_req(0, 16, 8), mk_req(1, 16, 8)
+    r0.prompt = prompt.copy()
+    r1.prompt = prompt.copy()
+    a0 = activate(sched, kv, r0, 0)
+    a1 = activate(sched, kv, r1, 1)
+    shared = [r.page for r in kv.refs(0) if r in kv.refs(1)]
+    assert shared, "prompts must dedup for this test"
+    n_free, n_host = kv.park_preview(1, [0])
+    moves = kv.park(1, [0])
+    assert len(moves) == n_free == n_host
+    moved = {m.src_page for m in moves}
+    assert not (moved & set(shared)), "shared frame moved despite live owner"
+    # the sibling's view of the shared frames is unchanged
+    assert all(r.tier == DEVICE for r in kv.refs(0))
+    kv.check_invariants()
+    del a0, a1
+
+
+# ---------------------------------------------------------------------------
+# Resume planning + park/resume accounting (fast variant of the e2e test)
+# ---------------------------------------------------------------------------
+
+def test_resume_has_priority_and_restores_accounting():
+    sched, kv, swap = mk_sched(device_pages=2, host_pages=8, preemption=True)
+    victim = activate(sched, kv, mk_req(0, 16, 16), 0)   # 2 dev + 2 host
+    blocked = mk_req(1, 4, 4, tpot=4.1e-6)               # 1 page
+    sched.submit(blocked)
+    sched.plan(view(free_slots=[1, 2, 3], active=[victim]))
+    assert [r.rid for r in sched.preempted] == [0]
+    victim.req.state = State.PREEMPTED           # executor's transition
+    swap.plan_iteration([1])                     # drain the park write-back
+    # rid 1 finished: frames free again
+    kv.free(1)
+    waiting = mk_req(2, 8, 8)
+    sched.submit(waiting)
+    plan = sched.plan(view(free_slots=[0, 2, 3], active=[]))
+    # the parked request resumes FIRST (oldest work), then the queue admits
+    assert [r.req.rid for r in plan.resumes] == [0]
+    assert plan.resumes[0].slot == 0
+    assert [adm.req.rid for adm in plan.admissions] == [2]
+    assert not sched.preempted
+    # resume promoted what fits (2 free device frames of the 4 parked host
+    # pages) and charged the promotion copies to the link
+    assert len(plan.resumes[0].migrations) == 2
+    assert len(kv.device_pages_of(0)) == 2 and len(kv.host_pages_of(0)) == 2
+    assert swap.pending_in_bytes() == 2 * PB
+    # rid 2 spill-admitted onto host (the resume took the device frames):
+    # next iteration's kv_in = promotion copies (once) + streaming (the
+    # victim's 2 unpromoted pages + rid 2's spilled pages)
+    assert len(kv.host_pages_of(2)) == 2
+    sp = swap.plan_iteration([0, 2])
+    assert sp.kv_in_bytes == 2 * PB + sp.streamed_bytes
+    assert sp.streamed_bytes == 4 * PB
+    assert swap.pending_in_bytes() == 0
+    kv.check_invariants()
+
+
+def test_resume_waits_for_tpot_headroom_unless_alone():
+    sched, kv, swap = mk_sched(device_pages=2, host_pages=8, preemption=True)
+    parked = mk_req(0, 8, 8)
+    assert kv.alloc(0, 16, prompt=parked.prompt) is not None
+    assert kv.park(0, []) is not None
+    parked.state = State.PREEMPTED
+    sched.preempted.append(parked)
+    # an active request with a TPOT so tight the return traffic breaks it
+    tight = activate(sched, kv, mk_req(1, 8, 8, tpot=1e-9), 0)
+    plan = sched.plan(view(free_slots=[1, 2, 3], active=[tight]))
+    assert not plan.resumes                      # stays parked
+    assert [r.rid for r in sched.preempted] == [0]
+    # starvation guard: once nothing else is decoding, resume fires even
+    # though the one-time return spike exceeds the (absurd) TPOT bound
+    kv.free(1)
+    plan2 = sched.plan(view(free_slots=[0, 1, 2, 3], active=[]))
+    assert [r.req.rid for r in plan2.resumes] == [0]
