@@ -26,6 +26,7 @@ MODULES = [
     "fig15_kv_tiering",
     "fig16_prefix_dedup",
     "fig17_preemption",
+    "fig18_disk_tier",
     "roofline",
 ]
 

@@ -114,14 +114,35 @@ def iter_time_with_interval(times: LayerTimes, interval: int) -> float:
     return iter_time_with_interval_kv(times, interval)
 
 
+def disk_transfer_seconds(disk_in_bytes: float, disk_out_bytes: float,
+                          disk_bw: float, disk_latency_s: float = 0.0
+                          ) -> float:
+    """NVMe-channel seconds for one iteration's disk-tier KV traffic
+    (three-tier offloading, see serving.kv_offload). The disk link is its
+    own channel — its bytes must never ride the PCIe copy stream the
+    weight prefetches and host-tier KV share — but it is also never free:
+    an iteration that staged or demoted disk pages cannot complete before
+    its NVMe queue drains."""
+    total = disk_in_bytes + disk_out_bytes
+    if total <= 0:
+        return 0.0
+    if disk_bw <= 0:
+        raise ValueError("disk KV traffic needs a disk link bandwidth")
+    return disk_latency_s + total / disk_bw
+
+
 def iter_time_with_interval_kv(times: LayerTimes, interval: int,
                                kv_in_bytes: float = 0.0,
                                kv_out_bytes: float = 0.0,
-                               link_bw: float | None = None) -> float:
+                               link_bw: float | None = None,
+                               disk_in_bytes: float = 0.0,
+                               disk_out_bytes: float = 0.0,
+                               disk_bw: float = 0.0,
+                               disk_latency_s: float = 0.0) -> float:
     """Iteration latency when KV-page traffic shares the copy stream with
-    weight prefetch (two-tier KV offloading, see serving.kv_offload).
+    weight prefetch (tiered KV offloading, see serving.kv_offload).
 
-    Model — one copy stream, strict issue order (matches the event
+    Model — one PCIe copy stream, strict issue order (matches the event
     simulator's extended ``LayerSchedule``, property-tested):
 
       1. ``kv_in_bytes`` (host->device swap-in / streamed host-resident KV)
@@ -136,11 +157,19 @@ def iter_time_with_interval_kv(times: LayerTimes, interval: int,
     Every byte is charged exactly once: KV bytes occupy the copy stream
     before the first weight transfer, so combined traffic is neither
     double-counted nor hidden.
-    """
+
+    Disk-tier traffic (``disk_in_bytes`` / ``disk_out_bytes``) runs on its
+    OWN channel (NVMe) concurrently with the PCIe schedule: the iteration
+    ends when both channels drain, ``max(t_pcie, t_disk)`` — disk bytes get
+    their own term instead of silently riding (or being hidden from) the
+    PCIe budget the TPOT math certifies. With no disk traffic this reduces
+    exactly to the two-tier model."""
+    t_disk = disk_transfer_seconds(disk_in_bytes, disk_out_bytes,
+                                   disk_bw, disk_latency_s)
     t_kv_in = kv_transfer_seconds(times, kv_in_bytes, link_bw)
     t_kv_out = kv_transfer_seconds(times, kv_out_bytes, link_bw)
     if interval >= times.num_layers + 1 or interval >= NO_OFFLOAD:
-        return t_kv_in + times.t_iter_no_offload_s
+        return max(t_kv_in + times.t_iter_no_offload_s, t_disk)
     i, tc, tt = interval, times.t_compute_s, times.t_transfer_s
     groups = times.num_layers // i
     t = t_kv_in
@@ -153,7 +182,7 @@ def iter_time_with_interval_kv(times: LayerTimes, interval: int,
         t = group_start + (i - 1) * tc          # resident layers
         t = max(t, xfer_done) + tc              # offloaded layer
     t += (times.num_layers - groups * i) * tc   # remainder layers (resident)
-    return t + times.t_rest_s
+    return max(t + times.t_rest_s, t_disk)
 
 
 def min_feasible_interval(times: LayerTimes, slo_s: float) -> int:

@@ -49,6 +49,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--host-kv-gb", type=float, default=0.0,
                     help="pinned-host KV pool (two-tier KV offloading); "
                          "0 disables the host tier")
+    ap.add_argument("--disk-kv-gb", type=float, default=0.0,
+                    help="NVMe (disk) KV tier below the host pool: parked "
+                         "requests and aged-out prefix-cache frames retire "
+                         "here under host pressure; 0 disables the tier")
+    ap.add_argument("--disk-bw-gbps", type=float, default=3.0,
+                    help="disk link bandwidth in GB/s (its traffic gets "
+                         "its own term in the SLO latency model)")
+    ap.add_argument("--disk-backing-path", default=None,
+                    help="file path for the disk pool (np.memmap); default "
+                         "keeps a RAM buffer standing in for NVMe")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size in tokens (the paged decode kernel's "
                          "block granularity)")
@@ -74,12 +84,18 @@ def main(argv=None) -> dict:
     ap.add_argument("--peer", action="store_true",
                     help="second engine on the same host link (coordinator)")
     args = ap.parse_args(argv)
+    if args.disk_kv_gb > 0 and args.host_kv_gb <= 0:
+        ap.error("--disk-kv-gb requires a host tier to stage through: "
+                 "set --host-kv-gb > 0")
 
     cfg = reduce_config(get_config(args.arch))
     hw = PRESETS[args.hw]
     ecfg = EngineConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                         hbm_budget_bytes=args.hbm_gb * 1e9,
                         host_kv_bytes=args.host_kv_gb * 1e9,
+                        disk_kv_bytes=args.disk_kv_gb * 1e9,
+                        disk_bw_bytes_s=args.disk_bw_gbps * 1e9,
+                        disk_backing_path=args.disk_backing_path,
                         page_size=args.page_size,
                         prefix_dedup=args.prefix_dedup,
                         preemption=args.preemption,
@@ -116,6 +132,9 @@ def main(argv=None) -> dict:
     summary["final_interval"] = (None if eng.interval >= 10**9
                                  else eng.interval)
     summary["host_kv_peak_pages"] = eng.host_kv_peak_pages
+    summary["disk_kv_peak_pages"] = eng.disk_kv_peak_pages
+    summary["kv_tiers"] = (1 + int(eng.kv.host.total_pages > 0)
+                           + int(eng.kv.disk.total_pages > 0))
     summary["decode_path"] = "paged"     # single page pool + Pallas kernel
     summary["streamed_pages_peak"] = eng.streamed_pages_peak
     summary["prefix_dedup"] = args.prefix_dedup

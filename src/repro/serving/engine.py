@@ -61,8 +61,8 @@ from repro.kernels import ops
 from repro.models.model import Model
 from repro.models.transformer import pattern_info
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
-from repro.serving.kv_offload import (DEVICE, HOST, SwapScheduler,
-                                      TieredKVAllocator)
+from repro.serving.kv_offload import (DEVICE, DISK, HOST, LinkSpec,
+                                      SwapScheduler, TieredKVAllocator)
 from repro.serving.request import Request, State
 from repro.serving.scheduler import (ActiveInfo, IterationOutcome,
                                      IterationPlan, PlannedPreemption,
@@ -96,6 +96,19 @@ class EngineConfig:
     # Prefix-cache keep-alive: host frames whose last owner freed survive
     # (LRU, this many pages) so a re-submitted shared prefix still dedups.
     host_prefix_cache_pages: int = 0
+    # Disk (NVMe) KV tier below the host pool: parked/preempted requests
+    # and aged-out prefix-cache frames retire here under host pressure
+    # instead of blocking parks / evicting cache. 0 disables the tier —
+    # the three-tier engine with disk disabled is bit-identical to the
+    # two-tier baseline (differential-gated).
+    disk_kv_bytes: float = 0.0
+    # NVMe link model: traffic to/from the disk tier gets its own term in
+    # the iteration-latency model (it never rides the PCIe budget).
+    disk_bw_bytes_s: float = 3e9
+    disk_latency_s: float = 1e-4
+    # Optional file path for the disk pool's backing store (np.memmap);
+    # None keeps a RAM buffer standing in for NVMe.
+    disk_backing_path: str | None = None
 
 
 class ServingEngine:
@@ -147,7 +160,11 @@ class ServingEngine:
             max(int(weight_free), 0), ecfg.host_kv_bytes,
             PageConfig(ecfg.page_size, bytes_per_token=kv_tok),
             scope=scope, enable_dedup=ecfg.prefix_dedup,
-            host_prefix_cache_pages=ecfg.host_prefix_cache_pages)
+            host_prefix_cache_pages=ecfg.host_prefix_cache_pages,
+            disk_bytes=ecfg.disk_kv_bytes,
+            disk_link=LinkSpec(bw_bytes_s=ecfg.disk_bw_bytes_s,
+                               latency_s=ecfg.disk_latency_s),
+            disk_backing_path=ecfg.disk_backing_path)
         self.swap = SwapScheduler(self.kv)
         # policy layer: owns the queue, the preempted set and slot
         # assignment; this engine executes the plans it emits
@@ -161,6 +178,7 @@ class ServingEngine:
         self.host_kv_peak_pages = 0
         self.streamed_pages_peak = 0
         self.device_pages_peak = 0
+        self.disk_kv_peak_pages = 0
         self.cow_events = 0
 
         # physical page pool (see module docstring for the frame map).
@@ -178,6 +196,24 @@ class ServingEngine:
         self.host_pool = (self.kv.host.make_pool_buffer(self.page_shape,
                                                         jnp.bfloat16)
                           if self.kv.host.total_pages > 0 else None)
+        # disk-tier data plane: every host<->disk accounting move fires the
+        # synchronous copy hook below, so the bytes are saved while the
+        # vacated frame is still intact (numpy<->numpy: the device pool is
+        # never touched — disk pages stage through host)
+        self.disk_pool = (self.kv.disk.make_pool_buffer(self.page_shape,
+                                                        jnp.bfloat16)
+                          if self.kv.disk.total_pages > 0 else None)
+        if self.disk_pool is not None:
+            assert self.host_pool is not None, \
+                "a disk KV tier requires a host tier to stage through"
+            self.kv.disk_copy = self._disk_page_copy
+            # resume staging chains disk pages through host transit frames:
+            # its h2d promotion legs must read those frames in planning
+            # order, before the next staging overwrites them; park's d2h
+            # legs must likewise land before a same-pass demotion retires
+            # the parked frames to NVMe
+            self.kv.promote_copy = self._promote_page_copy
+            self.kv.park_copy = self._park_page_copy
 
         self._runtime: dict[int, OffloadRuntime] = {}
         self._jit_decode: dict[int, Any] = {}
@@ -276,9 +312,17 @@ class ServingEngine:
         return InstanceState(
             name=self.name, num_units=self.num_units,
             unit_bytes=self.unit_bytes,
+            # NVMe is instance-local: its pending traffic lengthens this
+            # instance's iteration (own term) but is not part of the
+            # shared-PCIe rate the coordinator arbitrates
+            # (kv_bytes_per_iter stays PCIe-only)
             t_iter_s=iter_time_with_interval_kv(
                 times, self.interval if self.interval else NO_OFFLOAD,
-                kv_stream, kv_out),
+                kv_stream, kv_out,
+                disk_in_bytes=self.swap.pending_disk_in_bytes(),
+                disk_out_bytes=self.swap.pending_disk_out_bytes(),
+                disk_bw=self.kv.disk_link.bw_bytes_s,
+                disk_latency_s=self.kv.disk_link.latency_s),
             min_interval=min_i, max_interval=max_i,
             idle=idle if idle is not None else self._active_batch() == 0
             and not self.scheduler.has_work(),
@@ -332,7 +376,9 @@ class ServingEngine:
         (``swap.note_demotions``) and land on this iteration's link."""
         for it in items:
             req, slot = it.req, it.slot
-            if it.migrations:
+            if it.migrations and self.kv.park_copy is None:
+                # with a disk tier the parked bytes already moved in
+                # planning order (see _park_page_copy)
                 assert self.host_pool is not None
                 ops.copy_pages_to_host(self.pool,
                                        [m.src_page for m in it.migrations],
@@ -355,7 +401,10 @@ class ServingEngine:
         (``swap.note_promotions``)."""
         for it in items:
             req, slot = it.req, it.slot
-            if it.migrations:
+            if it.migrations and self.kv.promote_copy is None:
+                # with a disk tier the promotion bytes already moved in
+                # planning order (see _promote_page_copy); copying again
+                # here would re-read transit frames later stagings reused
                 assert self.host_pool is not None
                 self.pool = ops.copy_pages_from_host(
                     self.host_pool, [m.src_page for m in it.migrations],
@@ -369,6 +418,41 @@ class ServingEngine:
             self.tokens[slot] = req.next_token
             self.pos[slot] = req.resume_pos
             self.active[slot] = True
+
+    def _disk_page_copy(self, src_tier: str, src_page: int,
+                        dst_tier: str, dst_page: int) -> None:
+        """Synchronous NVMe data plane (TieredKVAllocator.disk_copy hook):
+        fired by the allocator the moment a host<->disk accounting move
+        lands, before the vacated frame can be reused by the same planning
+        pass. Byte traffic is charged to the disk link's own latency term
+        via the allocator's pending disk counters — never to PCIe."""
+        assert self.disk_pool is not None and self.host_pool is not None
+        if src_tier == HOST and dst_tier == DISK:
+            self.disk_pool[dst_page] = self.host_pool[src_page]
+        elif src_tier == DISK and dst_tier == HOST:
+            self.host_pool[dst_page] = self.disk_pool[src_page]
+        else:
+            raise ValueError(f"disk copy between {src_tier} and {dst_tier}")
+
+    def _park_page_copy(self, src_dev_frame: int,
+                        dst_host_page: int) -> None:
+        """Synchronous d2h leg of a park (TieredKVAllocator.park_copy
+        hook, wired with the disk tier): executed in planning order so a
+        demotion planned later in the SAME pass reads the parked bytes,
+        not the host frame's previous content. ``_apply_preemptions``
+        skips its apply-time batch copy when this hook is wired."""
+        ops.copy_pages_to_host(self.pool, [src_dev_frame],
+                               self.host_pool, [dst_host_page])
+
+    def _promote_page_copy(self, src_host_page: int,
+                           dst_dev_frame: int) -> None:
+        """Synchronous h2d leg of a disk-staged resume
+        (TieredKVAllocator.promote_copy hook): executed in planning order
+        so a host transit frame is read before the next NVMe staging
+        reuses it. ``_apply_resumes`` skips its apply-time batch copy when
+        this hook is wired — the bytes already moved."""
+        self.pool = ops.copy_pages_from_host(
+            self.host_pool, [src_host_page], self.pool, [dst_dev_frame])
 
     def _modeled_ttft(self, req: Request, host_spill_bytes: float) -> float:
         """Prefill latency: the spilled KV prefix is written back (d2h)
@@ -466,7 +550,10 @@ class ServingEngine:
                 dev_frames.append(r.page)
                 dev_vals.append(vals[i])
             else:
-                assert self.host_pool is not None
+                # fresh allocations land on device or host only; disk-tier
+                # hits were revived host-ward inside alloc (and are in the
+                # deduped skip-set anyway)
+                assert r.tier == HOST and self.host_pool is not None
                 self.host_pool[r.page] = vals[i]
         if dev_frames:
             self.pool = ops.scatter_kv_pages(
@@ -577,6 +664,11 @@ class ServingEngine:
                         "LIFO high-water bound violated"
                     bt[slot, i] = r.page
                 else:
+                    # only host pages stream through the slab: an ACTIVE
+                    # request must never hold disk-tier pages (resume
+                    # stages disk->host before the slot re-activates)
+                    assert r.tier == HOST, \
+                        f"active rid {req.rid} holds a {r.tier} page"
                     if r.page not in slab_of:
                         slab_of[r.page] = slab_next
                         stream_src.append(r.page)
@@ -679,6 +771,8 @@ class ServingEngine:
                                       self.kv.host.used_pages)
         self.device_pages_peak = max(self.device_pages_peak,
                                      self.kv.device.used_pages)
+        self.disk_kv_peak_pages = max(self.disk_kv_peak_pages,
+                                      self.kv.disk.used_pages)
         chunk_s, finals = self._run_chunks(plan.chunks)
         if self._active_batch() == 0:
             # no decode this iteration; chunk compute still advances the
@@ -748,10 +842,15 @@ class ServingEngine:
         times = self.times_fn(self._active_batch(), self.ecfg.max_seq,
                               "decode")
         # piggybacked chunk compute rides the same iteration: its stack time
-        # adds to the latency every active request pays this step
-        dt = iter_time_with_interval_kv(times, self.interval,
-                                        sp.kv_in_bytes, sp.kv_out_bytes) \
-            + chunk_s
+        # adds to the latency every active request pays this step; NVMe
+        # traffic (park-to-disk demotions, resume stagings, cache revivals)
+        # gets the disk link's own term — it never rides the PCIe budget
+        dt = iter_time_with_interval_kv(
+            times, self.interval, sp.kv_in_bytes, sp.kv_out_bytes,
+            disk_in_bytes=sp.disk_in_bytes,
+            disk_out_bytes=sp.disk_out_bytes,
+            disk_bw=self.kv.disk_link.bw_bytes_s,
+            disk_latency_s=self.kv.disk_link.latency_s) + chunk_s
         self.clock_s += dt
 
         finished_rids: list[int] = list(prefill_finished)
@@ -807,6 +906,8 @@ class ServingEngine:
             "slo_ok": all(m["ttft_ok"] and m["tpot_ok"] for m in done),
             "preemptions": st["preemptions"],
             "resumes": st["resumes"],
+            "disk_demotions": st["disk_demotions"],
+            "disk_stagings": st["disk_stagings"],
             "preempt_stall_max_s": max(stalls) if stalls else 0.0,
             "chunked_prefill_iters": st["chunked_prefill_iters"],
             "queue_delay_p99_s": float(np.quantile(delays, 0.99))

@@ -1,22 +1,38 @@
-"""Two-tier SLO-aware KV-cache host offloading with cross-request dedup.
+"""N-tier SLO-aware KV-cache offloading with cross-request dedup.
 
 The paper offloads model *state*; the seed engine only tiered weights — KV
 pages never left HBM, so max context/batch stayed HBM-bound however small
 the offloading interval got (Fig. 14 saturates). This subsystem extends the
-paged KV allocator with a pinned-host tier and, on top of the page
-refcounts, LMCache-style cross-request prefix sharing:
+paged KV allocator with an ordered hierarchy of page pools below HBM and,
+on top of the page refcounts, LMCache-style cross-request prefix sharing.
+The hierarchy is ``DEVICE`` -> ``HOST`` -> ``DISK`` (``TIER_ORDER``):
+frames migrate only between adjacent tiers, every tier is a
+``PagedKVAllocator`` with the same page geometry, and each inter-tier link
+carries a ``LinkSpec`` (bandwidth + latency) so the SLO math can charge the
+right channel — host<->device traffic rides the PCIe copy stream the weight
+prefetches use, host<->disk traffic rides the NVMe link and must never be
+billed to (or hidden from) the TPOT-critical PCIe budget.
 
   * ``HostKVPool``      — host-side page pool, same page geometry as the
                           device pool, with an optional numpy backing buffer
                           (host memory on every backend; the pinned staging
                           area on a real TPU host).
-  * ``TieredKVAllocator`` — per-request block tables spanning both tiers.
-                          Pages are ordered oldest-first; the host tier holds
-                          the *front* (cold prefix) so the decode write path
-                          always lands on device frames. Page migration
-                          (``swap_out`` / ``swap_in``) rewrites refs and
-                          reports (src, dst) frame pairs for the data plane
-                          (``kernels.ops.copy_pages_to_host/from_host``).
+  * ``DiskKVPool``      — NVMe-tier page pool: buffer-backed by default, or
+                          file-backed (``np.memmap``) when a backing path is
+                          given. Holds parked/preempted state and aged-out
+                          prefix-cache frames; never read by the decode
+                          kernel directly — disk pages stage through host.
+  * ``TieredKVAllocator`` — per-request block tables spanning the tiers.
+                          Pages are ordered oldest-first; the lower tiers
+                          hold the *front* (cold prefix) so the decode write
+                          path always lands on device frames. Page migration
+                          (``swap_out`` / ``swap_in`` / ``demote_to_disk``)
+                          rewrites refs and reports (src, dst) frame pairs
+                          for the data plane
+                          (``kernels.ops.copy_pages_to_host/from_host``);
+                          host<->disk moves additionally fire the
+                          synchronous ``disk_copy`` hook so the bytes are
+                          saved before a vacated frame can be reused.
   * ``PrefixIndex``     — content-addressed map from (page position, rolling
                           hash over the token ids, model-config scope) to the
                           physical frame holding that page's KV. A request
@@ -83,6 +99,23 @@ from repro.serving.kv_cache import (PageConfig, PagedKVAllocator,
 
 DEVICE = "device"
 HOST = "host"
+DISK = "disk"
+
+# Ordered tier hierarchy: frames migrate only between adjacent tiers
+# (device <-> host over PCIe, host <-> disk over NVMe). Generalizing this
+# tuple is how a fourth tier would land: every migration / invariant /
+# reclaim path below iterates it instead of naming pools.
+TIER_ORDER = (DEVICE, HOST, DISK)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One inter-tier link of the hierarchy: sustained bandwidth plus a
+    fixed per-batch issue latency. ``bw_bytes_s == 0`` means "modeled
+    elsewhere" — the device<->host link's bandwidth is implied by the
+    measured ``LayerTimes`` the SLO algebra already carries."""
+    bw_bytes_s: float = 0.0
+    latency_s: float = 0.0
 
 # Synthetic owner of keep-alive prefix-cache frames: host pages whose last
 # real owner freed but whose content stays indexed (bounded LRU), so a
@@ -105,6 +138,25 @@ class HostKVPool(PagedKVAllocator):
         return np.zeros((self.total_pages, *page_shape), dtype)
 
 
+class DiskKVPool(HostKVPool):
+    """NVMe-tier page pool. Accounting is identical to the host pool; the
+    backing buffer is a plain numpy array (a RAM stand-in for NVMe on dev
+    boxes) or an ``np.memmap`` over ``backing_path`` (a real file — what a
+    production host points at its NVMe mount)."""
+
+    def __init__(self, total_bytes: int, pcfg: PageConfig,
+                 backing_path: str | None = None):
+        super().__init__(total_bytes, pcfg)
+        self.backing_path = backing_path
+
+    def make_pool_buffer(self, page_shape: tuple, dtype=np.float32
+                         ) -> np.ndarray:
+        if self.backing_path is None:
+            return super().make_pool_buffer(page_shape, dtype)
+        return np.memmap(self.backing_path, dtype=dtype, mode="w+",
+                         shape=(self.total_pages, *page_shape))
+
+
 @dataclasses.dataclass
 class Migration:
     """One page move; src/dst are frame ids in the respective pools."""
@@ -112,6 +164,7 @@ class Migration:
     src_tier: str
     src_page: int
     dst_page: int
+    dst_tier: str = HOST
 
 
 @dataclasses.dataclass
@@ -236,6 +289,11 @@ class DedupPreview:
     def host_hit_pages(self) -> set[int]:
         return {r.page for r in self.hit_refs if r.tier == HOST}
 
+    def disk_hit_pages(self) -> set[int]:
+        """Disk-resident (pure prefix-cache) frames the allocation would
+        revive: each needs a host frame and one NVMe read to stage."""
+        return {r.page for r in self.hit_refs if r.tier == DISK}
+
 
 class TieredKVAllocator:
     """Paged KV accounting across device HBM + pinned host memory.
@@ -251,10 +309,45 @@ class TieredKVAllocator:
     def __init__(self, device_bytes: float, host_bytes: float,
                  pcfg: PageConfig, scope: str = "",
                  enable_dedup: bool = False,
-                 host_prefix_cache_pages: int = 0):
+                 host_prefix_cache_pages: int = 0,
+                 disk_bytes: float = 0.0,
+                 disk_link: LinkSpec = LinkSpec(),
+                 disk_backing_path: str | None = None):
         self.pcfg = pcfg
         self.device = PagedKVAllocator(max(int(device_bytes), 0), pcfg)
         self.host = HostKVPool(max(int(host_bytes), 0), pcfg)
+        self.disk = DiskKVPool(max(int(disk_bytes), 0), pcfg,
+                               backing_path=disk_backing_path)
+        # ordered hierarchy view: every tier-generic path below goes through
+        # this map instead of naming a pool
+        self.pools: dict[str, PagedKVAllocator] = {
+            DEVICE: self.device, HOST: self.host, DISK: self.disk}
+        self.disk_link = disk_link
+        # synchronous data-plane hook for host<->disk moves: called as
+        # disk_copy(src_tier, src_page, dst_tier, dst_page) the moment the
+        # accounting move lands, while the vacated frame's bytes are still
+        # intact (the engine wires this to its host/disk pool buffers; pure
+        # accounting users leave it None)
+        self.disk_copy = None
+        # synchronous hook for ``resume``'s host->device promotion legs,
+        # called as promote_copy(src_host_page, dst_device_frame). Required
+        # whenever disk_copy is wired: resume staging chains several disk
+        # pages through one host transit frame, so a deferred (apply-time)
+        # promotion copy would read a frame the NEXT staging already
+        # overwrote — the promotion must read its bytes in planning order.
+        self.promote_copy = None
+        # synchronous hook for ``park``'s device->host legs, called as
+        # park_copy(src_device_frame, dst_host_frame). Also required with a
+        # disk tier: a park and a demotion of the parked pages can land in
+        # ONE planning pass, so a deferred park copy would let the NVMe
+        # hook read a host frame whose bytes had not arrived yet.
+        self.park_copy = None
+        # NVMe traffic performed since the swap scheduler last planned:
+        # charged to the disk link's own latency term, never to PCIe
+        self.pending_disk_in_pages = 0    # disk -> host staging reads
+        self.pending_disk_out_pages = 0   # host -> disk demotion writes
+        self.disk_in_pages_total = 0
+        self.disk_out_pages_total = 0
         self._refs: dict[int, list[PageRef]] = {}
         self.scope = scope
         self.enable_dedup = enable_dedup
@@ -270,6 +363,10 @@ class TieredKVAllocator:
         # frames are reclaimed on demand when the host pool runs dry.
         self.host_prefix_cache_pages = host_prefix_cache_pages
         self._cache_lru: dict[int, None] = {}  # host frame -> None (ordered)
+        # cache frames that retired to disk under host pressure (all pure —
+        # refcount 1 under CACHE_RID: a dedup hit revives them host-ward
+        # before any request maps them)
+        self._disk_cache: dict[int, None] = {}
         self.cache_hits = 0                    # dedup hits on cached frames
 
     # ---- queries -------------------------------------------------------------
@@ -277,14 +374,23 @@ class TieredKVAllocator:
     def page_bytes(self) -> int:
         return self.device.page_bytes
 
+    def pool_of(self, tier: str) -> PagedKVAllocator:
+        return self.pools[tier]
+
     def refs(self, rid: int) -> list[PageRef]:
         return list(self._refs.get(rid, []))
 
+    def tier_pages_of(self, rid: int, tier: str) -> list[int]:
+        return [r.page for r in self._refs.get(rid, []) if r.tier == tier]
+
     def device_pages_of(self, rid: int) -> list[int]:
-        return [r.page for r in self._refs.get(rid, []) if r.tier == DEVICE]
+        return self.tier_pages_of(rid, DEVICE)
 
     def host_pages_of(self, rid: int) -> list[int]:
-        return [r.page for r in self._refs.get(rid, []) if r.tier == HOST]
+        return self.tier_pages_of(rid, HOST)
+
+    def disk_pages_of(self, rid: int) -> list[int]:
+        return self.tier_pages_of(rid, DISK)
 
     def host_bytes_of(self, rid: int) -> int:
         return len(self.host_pages_of(rid)) * self.page_bytes
@@ -304,8 +410,7 @@ class TieredKVAllocator:
         return self._reserve.get(rid)
 
     def refcount(self, ref: PageRef) -> int:
-        pool = self.device if ref.tier == DEVICE else self.host
-        return pool.refcount(ref.page)
+        return self.pool_of(ref.tier).refcount(ref.page)
 
     def max_allocatable_tokens(self, include_host: bool = True) -> int:
         """Fig. 14's metric, lifted by the host tier."""
@@ -323,7 +428,11 @@ class TieredKVAllocator:
         Hits are the contiguous leading run of index matches (prefix
         semantics); ``need_reserve`` is True when the trailing partial prompt
         page is a hit AND the request will decode into it (tokens >
-        prompt length), which pre-claims one private frame for the COW."""
+        prompt length), which pre-claims one private frame for the COW.
+        Disk-resident entries count as hits only while they are pure cache
+        frames (revivable by staging one NVMe read through a host frame);
+        a disk frame a parked request still owns ends the hit run — staging
+        it would drag the whole parked set's sharing along."""
         if not self.enable_dedup or prompt is None or len(prompt) == 0:
             return DedupPreview([], [], False)
         keys = self._prompt_keys(prompt)
@@ -333,6 +442,8 @@ class TieredKVAllocator:
         for (idx, digest, ntok) in keys:
             ref = self.index.get((idx, digest, ntok))
             if ref is None:
+                break
+            if ref.tier == DISK and ref.page not in self._disk_cache:
                 break
             hits.append(ref)
             idxs.append(idx)
@@ -368,15 +479,24 @@ class TieredKVAllocator:
             else self.dedup_preview(prompt, tokens)
         n_fresh = need - pv.n_hits + (1 if pv.need_reserve else 0)
         n_host = max(n_fresh - self.device.free_pages, 0)
-        if not allow_host and (n_host > 0 or pv.host_hit_pages()):
+        disk_hits = pv.disk_hit_pages()
+        if not allow_host and (n_host > 0 or pv.host_hit_pages()
+                               or disk_hits):
             return None
-        if n_host > self.host.free_pages:
+        # disk-resident cache hits are revived through fresh host frames
+        # (one NVMe read each), so they claim host capacity like a spill
+        if n_host + len(disk_hits) > self.host.free_pages:
             # keep-alive cache frames are reclaimable capacity — but never
             # the ones this very allocation is about to share
-            self._reclaim_host(n_host - self.host.free_pages,
-                               keep=pv.host_hit_pages())
-        if n_host > self.host.free_pages:
+            self._reclaim_host(n_host + len(disk_hits)
+                               - self.host.free_pages,
+                               keep=pv.host_hit_pages(),
+                               keep_disk=disk_hits)
+        if n_host + len(disk_hits) > self.host.free_pages:
             return None
+        revived = {p: self._revive_cached_from_disk(p) for p in disk_hits}
+        hit_refs = [PageRef(HOST, revived[r.page]) if r.tier == DISK else r
+                    for r in pv.hit_refs]
         hp = self.host.alloc_pages(rid, n_host)
         dp = self.device.alloc_pages(rid, n_fresh - n_host)
         assert hp is not None and dp is not None
@@ -385,9 +505,8 @@ class TieredKVAllocator:
             # decode write page); it is claimed in the pool but not in refs
             self._reserve[rid] = (PageRef(DEVICE, dp.pop()) if dp
                                   else PageRef(HOST, hp.pop()))
-        for ref in pv.hit_refs:
-            pool = self.device if ref.tier == DEVICE else self.host
-            pool.share_pages(rid, [ref.page])
+        for ref in hit_refs:
+            self.pool_of(ref.tier).share_pages(rid, [ref.page])
             if ref.tier == HOST and ref.page in self._cache_lru:
                 # keep-alive hit: refresh recency (the cache keeps its claim,
                 # so the frame re-enters the cache when this owner frees)
@@ -399,7 +518,7 @@ class TieredKVAllocator:
         # the rest host-first (cold prefix on host)
         fresh = iter([PageRef(HOST, p) for p in hp]
                      + [PageRef(DEVICE, p) for p in dp])
-        hitmap = dict(zip(pv.hit_indices, pv.hit_refs))
+        hitmap = dict(zip(pv.hit_indices, hit_refs))
         refs = [hitmap.get(i) or next(fresh) for i in range(need)]
         if refs:
             self._refs.setdefault(rid, []).extend(refs)
@@ -412,17 +531,18 @@ class TieredKVAllocator:
         return refs
 
     def extend(self, rid: int, new_total_tokens: int,
-               allow_host: bool = True, on_demote=None
+               allow_host: bool = True, on_demote=None, active_rids=()
                ) -> list[Migration] | None:
         """Grow ``rid`` to ``new_total_tokens``. New (tail) pages must be
         device frames; if the device pool is exhausted, the request's own
-        oldest device page is demoted to host to vacate a frame — which the
-        very next tail allocation may recycle. A data plane holding real
-        page buffers must therefore copy demoted pages out *synchronously*
-        via ``on_demote(migration)``, which fires while the vacated frame is
-        still unclaimed; the returned list is for traffic accounting only.
-        None if the growth cannot be satisfied (nothing is changed then
-        beyond already-performed demotions)."""
+        oldest cold device page is demoted to host to vacate a frame —
+        frames an ``active_rids`` sibling still references spill last (see
+        ``swap_out``) — which the very next tail allocation may recycle. A
+        data plane holding real page buffers must therefore copy demoted
+        pages out *synchronously* via ``on_demote(migration)``, which fires
+        while the vacated frame is still unclaimed; the returned list is
+        for traffic accounting only. None if the growth cannot be satisfied
+        (nothing is changed then beyond already-performed demotions)."""
         have = len(self._refs.get(rid, []))
         need = self.device.pages_for(new_total_tokens) - have
         if need <= 0:
@@ -444,7 +564,7 @@ class TieredKVAllocator:
             if self.device.free_pages == 0:
                 if not allow_host:
                     return rollback()
-                moved = self.swap_out(rid, 1)
+                moved = self.swap_out(rid, 1, active_rids)
                 if not moved:
                     return rollback()
                 if on_demote is not None:
@@ -472,10 +592,9 @@ class TieredKVAllocator:
                     self.host.share_pages(CACHE_RID, [ref.page])
                     self._cache_lru[ref.page] = None
                     adopted = True
-        for p in self.device.free(rid):
-            self.index.evict(PageRef(DEVICE, p))
-        for p in self.host.free(rid):
-            self.index.evict(PageRef(HOST, p))
+        for tier in TIER_ORDER:
+            for p in self.pool_of(tier).free(rid):
+                self.index.evict(PageRef(tier, p))
         self._refs.pop(rid, None)
         self._dedup_hits.pop(rid, None)
         self._fresh_host.pop(rid, None)
@@ -496,26 +615,91 @@ class TieredKVAllocator:
     def reclaimable_host_pages(self) -> int:
         return sum(1 for p in self._cache_lru if self.host.refcount(p) == 1)
 
+    def reclaimable_disk_pages(self) -> int:
+        """Disk frames alive only as prefix-cache entries (always pure —
+        a dedup hit revives them host-ward before any request maps them)."""
+        return len(self._disk_cache)
+
     def _evict_cached(self, page: int) -> None:
         del self._cache_lru[page]
         freed = self.host.release_pages(CACHE_RID, [page])
         for p in freed:
             self.index.evict(PageRef(HOST, p))
 
+    def _evict_cached_disk(self, page: int) -> None:
+        del self._disk_cache[page]
+        for p in self.disk.release_pages(CACHE_RID, [page]):
+            self.index.evict(PageRef(DISK, p))
+
+    def _reclaim_disk(self, n_pages: int, keep: set[int] | None = None
+                      ) -> int:
+        """Evict up to ``n_pages`` disk-tier prefix-cache frames, oldest
+        first (the end of the hierarchy: below disk there is nowhere left
+        to demote to)."""
+        freed = 0
+        for p in list(self._disk_cache):
+            if freed >= n_pages:
+                break
+            if keep and p in keep:
+                continue
+            self._evict_cached_disk(p)
+            freed += 1
+        return freed
+
+    def _demote_cached_to_disk(self, page: int,
+                               keep_disk: set[int] | None = None) -> bool:
+        """Retire one pure host-cache frame to the disk tier (NVMe write,
+        index entry follows) instead of evicting its content outright."""
+        if self.disk.total_pages == 0:
+            return False
+        if self.disk.free_pages == 0 and self._reclaim_disk(1, keep_disk) == 0:
+            return False
+        dp = self.disk.alloc_pages(CACHE_RID, 1)
+        assert dp is not None
+        del self._cache_lru[page]
+        self.host.release_pages(CACHE_RID, [page])
+        self._fire_disk_copy(HOST, page, DISK, dp[0])
+        self.pending_disk_out_pages += 1
+        self.disk_out_pages_total += 1
+        self.index.move(PageRef(HOST, page), PageRef(DISK, dp[0]))
+        self._disk_cache[dp[0]] = None
+        return True
+
+    def _revive_cached_from_disk(self, page: int) -> int:
+        """Stage a disk-resident cache frame back into a host frame (one
+        NVMe read) so a dedup hit on it can be shared. Host capacity must
+        have been checked by the caller."""
+        hp = self.host.alloc_pages(CACHE_RID, 1)
+        assert hp is not None, "revival without host room"
+        del self._disk_cache[page]
+        self.disk.release_pages(CACHE_RID, [page])
+        self._fire_disk_copy(DISK, page, HOST, hp[0])
+        self.pending_disk_in_pages += 1
+        self.disk_in_pages_total += 1
+        self.index.move(PageRef(DISK, page), PageRef(HOST, hp[0]))
+        self._cache_lru[hp[0]] = None
+        return hp[0]
+
     def _trim_cache(self) -> None:
         over = len(self._cache_lru) - self.host_prefix_cache_pages
         for p in list(self._cache_lru):
             if over <= 0:
                 break
-            if self.host.refcount(p) == 1:   # only pure-cache frames evict
-                self._evict_cached(p)
+            if self.host.refcount(p) == 1:   # only pure-cache frames leave
+                # aged out of the host LRU bound: retire to disk when a
+                # disk tier exists, evict only at the end of the hierarchy
+                if not self._demote_cached_to_disk(p):
+                    self._evict_cached(p)
                 over -= 1
 
-    def _reclaim_host(self, n_pages: int, keep: set[int] | None = None
-                      ) -> int:
-        """Free up to ``n_pages`` host frames by evicting prefix-cache
-        entries, oldest first. Frames with a live owner free no capacity and
-        are skipped; ``keep`` protects frames the caller is about to share."""
+    def _reclaim_host(self, n_pages: int, keep: set[int] | None = None,
+                      keep_disk: set[int] | None = None) -> int:
+        """Free up to ``n_pages`` host frames by retiring prefix-cache
+        entries, oldest first — demoted to the disk tier when one exists
+        (content survives, rides the NVMe link), evicted otherwise. Frames
+        with a live owner free no capacity and are skipped; ``keep``
+        protects host frames the caller is about to share, ``keep_disk``
+        protects disk frames it is about to revive."""
         freed = 0
         for p in list(self._cache_lru):
             if freed >= n_pages:
@@ -523,9 +707,15 @@ class TieredKVAllocator:
             if keep and p in keep:
                 continue
             if self.host.refcount(p) == 1:
-                self._evict_cached(p)
+                if not self._demote_cached_to_disk(p, keep_disk):
+                    self._evict_cached(p)
                 freed += 1
         return freed
+
+    def _fire_disk_copy(self, src_tier: str, src_page: int,
+                        dst_tier: str, dst_page: int) -> None:
+        if self.disk_copy is not None:
+            self.disk_copy(src_tier, src_page, dst_tier, dst_page)
 
     # ---- copy-on-write -------------------------------------------------------
     def prepare_write(self, rid: int, page_idx: int) -> list[CowMove]:
@@ -545,7 +735,7 @@ class TieredKVAllocator:
         refs = self._refs.get(rid, [])
         assert 0 <= page_idx < len(refs)
         ref = refs[page_idx]
-        pool = self.device if ref.tier == DEVICE else self.host
+        pool = self.pool_of(ref.tier)
         if pool.refcount(ref.page) <= 1:
             self._drop_reserve(rid)
             return []
@@ -561,8 +751,7 @@ class TieredKVAllocator:
         res = self._reserve.pop(rid, None)
         if res is None:
             return
-        pool = self.device if res.tier == DEVICE else self.host
-        pool.release_pages(rid, [res.page])
+        self.pool_of(res.tier).release_pages(rid, [res.page])
 
     # ---- migration -----------------------------------------------------------
     def _owners_of(self, ref: PageRef) -> list[tuple[int, list[int]]]:
@@ -590,7 +779,7 @@ class TieredKVAllocator:
                         ) -> int | None:
         """Move one frame — with EVERY owner's reference — to ``dst_pool``.
         Returns the new frame id, or None when the destination is full."""
-        src_pool = self.device if ref.tier == DEVICE else self.host
+        src_pool = self.pool_of(ref.tier)
         holders: list[int] = []        # one entry per reference held
         for rid, idxs in self._owners_of(ref):
             holders.extend([rid] * len(idxs))
@@ -600,10 +789,13 @@ class TieredKVAllocator:
         if dp is None:
             return None
         if ref.tier == HOST and ref.page in self._cache_lru:
-            # promotion moves the frame (and its index entry) to device; the
-            # keep-alive cache only spans the host tier, so its claim drops
+            # the frame (and its index entry) leaves the host tier; the
+            # keep-alive LRU only spans the host tier, so its claim drops
             del self._cache_lru[ref.page]
             self.host.release_pages(CACHE_RID, [ref.page])
+        elif ref.tier == DISK and ref.page in self._disk_cache:
+            del self._disk_cache[ref.page]
+            self.disk.release_pages(CACHE_RID, [ref.page])
         for rid in holders[1:]:
             dst_pool.share_pages(rid, [dp[0]])
         for rid in holders:
@@ -611,23 +803,49 @@ class TieredKVAllocator:
         self._move_frame(ref, PageRef(dst_tier, dp[0]))
         return dp[0]
 
-    def swap_out(self, rid: int, n_pages: int) -> list[Migration]:
-        """Demote ``rid``'s ``n_pages`` oldest device pages to host. A shared
-        frame moves once, for every owner. Returns the moves actually
-        performed (host pool may fill up)."""
-        moves: list[Migration] = []
+    def hot_pages(self, active_rids, tier: str,
+                  exclude_rid: int | None = None) -> set[int]:
+        """Frames on ``tier`` a still-active request references (block
+        table or COW reserve). Demoting one frees no net capacity for
+        long: the active owner streams (host) or re-promotes (device) the
+        page — every per-tier "don't touch the siblings' frames" rule
+        below and in the scheduler derives from this one set."""
+        hot: set[int] = set()
+        for arid in active_rids:
+            if arid == exclude_rid:
+                continue
+            hot.update(r.page for r in self._refs.get(arid, [])
+                       if r.tier == tier)
+            res = self._reserve.get(arid)
+            if res is not None and res.tier == tier:
+                hot.add(res.page)
+        return hot
+
+    def swap_out(self, rid: int, n_pages: int, active_rids=()
+                 ) -> list[Migration]:
+        """Demote ``rid``'s ``n_pages`` device pages to host, oldest first
+        — but frames a still-active sibling references go LAST: demoting a
+        hot shared frame moves it for every owner, so the sibling would
+        stream it back over the link every subsequent iteration. Unshared
+        (or sibling-cold) frames spill first; shared hot frames only when
+        nothing else remains. A shared frame moves once, for every owner.
+        Returns the moves actually performed (host pool may fill up)."""
+        hot = self.hot_pages(active_rids, DEVICE, rid)
         refs = self._refs.get(rid, [])
-        for ref in list(refs):
+        order = ([r for r in refs if r.tier == DEVICE and r.page not in hot]
+                 + [r for r in refs if r.tier == DEVICE and r.page in hot])
+        moves: list[Migration] = []
+        for ref in order:
             if len(moves) >= n_pages:
                 break
-            if ref.tier != DEVICE or ref not in refs:
+            if ref not in self._refs.get(rid, []):
                 continue
             if self.host.free_pages == 0:
                 self._reclaim_host(1)
             hp = self._transfer_frame(ref, self.host, HOST)
             if hp is None:
                 break
-            moves.append(Migration(rid, DEVICE, ref.page, hp))
+            moves.append(Migration(rid, DEVICE, ref.page, hp, HOST))
         return moves
 
     def swap_in(self, rid: int, n_pages: int) -> list[Migration]:
@@ -643,7 +861,45 @@ class TieredKVAllocator:
             dp = self._transfer_frame(ref, self.device, DEVICE)
             if dp is None:
                 break
-            moves.append(Migration(rid, HOST, ref.page, dp))
+            moves.append(Migration(rid, HOST, ref.page, dp, DEVICE))
+        return moves
+
+    def demote_to_disk(self, rid: int, n_pages: int, active_rids=(),
+                       keep=(), keep_disk: set[int] | None = None
+                       ) -> list[Migration]:
+        """Demote ``rid``'s ``n_pages`` oldest host pages to the disk tier
+        (NVMe writes, fired synchronously through ``disk_copy``). Frames a
+        still-ACTIVE sibling references are skipped entirely — an active
+        request streams its host pages every iteration and the engine never
+        reads the disk pool directly; frames shared only with other parked
+        requests move once for all owners. The COW reserve rides along.
+        ``keep`` protects extra host frames (a caller's dedup-preview hits:
+        moving them would invalidate the preview it is about to allocate
+        with); ``keep_disk`` protects disk-cache frames from the reclaim
+        this demotion may trigger, for the same reason."""
+        skip = self.hot_pages(active_rids, HOST, rid) | set(keep)
+        cands = list(self._refs.get(rid, []))
+        res = self._reserve.get(rid)
+        if res is not None:
+            cands.append(res)
+        moves: list[Migration] = []
+        seen: set[int] = set()
+        for ref in cands:
+            if len(moves) >= n_pages:
+                break
+            if ref.tier != HOST or ref.page in skip or ref.page in seen:
+                continue
+            seen.add(ref.page)
+            if self.disk.free_pages == 0:
+                self._reclaim_disk(1, keep_disk)
+            src = ref.page
+            dp = self._transfer_frame(ref, self.disk, DISK)
+            if dp is None:
+                break
+            self._fire_disk_copy(HOST, src, DISK, dp)
+            self.pending_disk_out_pages += 1
+            self.disk_out_pages_total += 1
+            moves.append(Migration(rid, HOST, src, dp, DISK))
         return moves
 
     # ---- preempt-to-host (whole-request park/resume) -------------------------
@@ -654,15 +910,7 @@ class TieredKVAllocator:
         sibling keeps the claim) and would force the sibling to stream a
         page it attends through every iteration. Frame-wise: a frame
         referenced at several positions appears once."""
-        keep: set[int] = set()
-        for arid in active_rids:
-            if arid == rid:
-                continue
-            keep.update(r.page for r in self._refs.get(arid, [])
-                        if r.tier == DEVICE)
-            res = self._reserve.get(arid)
-            if res is not None and res.tier == DEVICE:
-                keep.add(res.page)
+        keep = self.hot_pages(active_rids, DEVICE, rid)
         cands = list(self._refs.get(rid, []))
         res = self._reserve.get(rid)
         if res is not None:
@@ -676,10 +924,15 @@ class TieredKVAllocator:
         return uniq
 
     def park_preview(self, rid: int, active_rids=()) -> tuple[int, int]:
-        """(device frames ``park(rid)`` would free, host frames it needs) —
-        the scheduler's feasibility precheck, no mutation."""
+        """(device frames ``park(rid)`` would free, host frames it still
+        NEEDS once prefix-cache reclaim is counted) — the scheduler's
+        feasibility precheck, no mutation. ``park`` reclaims keep-alive
+        cache frames via ``_reclaim_host`` before giving up, so a preview
+        reporting the raw target count would refuse parks the real call
+        absorbs: the second element nets out ``reclaimable_host_pages()``
+        and is the number to compare against ``host.free_pages``."""
         n = len(self._park_targets(rid, active_rids))
-        return n, n
+        return n, max(n - self.reclaimable_host_pages(), 0)
 
     def park(self, rid: int, active_rids=()) -> list[Migration] | None:
         """Preempt-to-host: migrate the request's ENTIRE device-resident KV
@@ -699,15 +952,113 @@ class TieredKVAllocator:
         for ref in targets:
             hp = self._transfer_frame(ref, self.host, HOST)
             assert hp is not None          # capacity checked up front
-            moves.append(Migration(rid, DEVICE, ref.page, hp))
+            if self.park_copy is not None:
+                # synchronous d2h leg: the parked bytes must be resident
+                # before a same-pass demotion can retire them to disk
+                self.park_copy(ref.page, hp)
+            moves.append(Migration(rid, DEVICE, ref.page, hp, HOST))
         return moves
 
-    def resume(self, rid: int) -> list[Migration]:
-        """Un-park: promote the request's host pages back into free device
-        frames, oldest first (shared frames move once, for every owner).
-        Whatever does not fit stays host-resident — the engine's streaming
-        slab covers it until the swap scheduler promotes the rest."""
-        return self.swap_in(rid, len(self.host_pages_of(rid)))
+    def _disk_refs_of(self, rid: int) -> list[PageRef]:
+        """Unique disk-tier frames ``rid`` references (block table + COW
+        reserve), oldest first."""
+        cands = list(self._refs.get(rid, []))
+        res = self._reserve.get(rid)
+        if res is not None:
+            cands.append(res)
+        out: list[PageRef] = []
+        seen: set[int] = set()
+        for r in cands:
+            if r.tier == DISK and r.page not in seen:
+                seen.add(r.page)
+                out.append(r)
+        return out
+
+    def unspill_from_disk(self, rid: int) -> int:
+        """Stage every disk page of ``rid`` back into host frames (the
+        exact reverse of ``demote_to_disk``, NVMe reads through the same
+        hooks). Defensive path for a park that fell through AFTER its
+        victim's spill was already retired: an ACTIVE request must never
+        be left holding disk-tier pages (the decode path cannot read
+        them). The host frames the demotion just vacated are still free —
+        nothing claimed them between the two calls — so this cannot run
+        out of room."""
+        n = 0
+        for ref in self._disk_refs_of(rid):
+            src = ref.page
+            hp = self._transfer_frame(ref, self.host, HOST)
+            assert hp is not None, "unspill without host room"
+            self._fire_disk_copy(DISK, src, HOST, hp)
+            self.pending_disk_in_pages += 1
+            self.disk_in_pages_total += 1
+            n += 1
+        return n
+
+    def parked_disk_pages(self, rid: int) -> int:
+        """Unique disk frames ``resume(rid)`` would stage back: block-table
+        entries AND the COW reserve — what the scheduler must charge as
+        NVMe reads (``disk_pages_of`` alone misses the reserve)."""
+        return len(self._disk_refs_of(rid))
+
+    def resume_staging_shortfall(self, rid: int) -> int:
+        """Host frames ``resume`` is short of for staging ``rid``'s disk
+        pages back, even after its own host pages promote device-ward and
+        prefix-cache frames are reclaimed. Staging INTERLEAVES with
+        promotion (stage one page into a host frame, promote it onward,
+        reuse the frame), so pages passing through to the device need only
+        ONE transit frame; only pages that must STAY host-resident (no
+        device frame left) hold a frame each. The scheduler demotes OTHER
+        parked requests to cover exactly this shortfall."""
+        n_disk = len(self._disk_refs_of(rid))
+        if n_disk == 0:
+            return 0
+        promote = min(len(self.host_pages_of(rid)), self.device.free_pages)
+        dev_after = self.device.free_pages - promote
+        host_after = (self.host.free_pages + promote
+                      + self.reclaimable_host_pages())
+        stay = max(n_disk - dev_after, 0)   # pages the device cannot take
+        return max(max(stay, 1) - host_after, 0)
+
+    def resume(self, rid: int) -> list[Migration] | None:
+        """Un-park. Host-resident pages promote into free device frames
+        first (oldest first; shared frames move once, for every owner) —
+        this also vacates host frames. Disk-resident pages (a long-parked
+        request demoted under host pressure) are then staged disk->host
+        one at a time — the decode path can stream host pages through the
+        slab but never reads the disk pool — each promoting onward while
+        device frames remain, so a chain of pages can pass through a host
+        pool smaller than the disk set. Whatever stays host-resident
+        streams through the slab until the swap scheduler promotes the
+        rest. Returns None (nothing moved) when the host tier cannot
+        absorb the staging even after the promotions and prefix-cache
+        reclaim; otherwise the host->device promotions (NVMe staging reads
+        are charged through the pending disk counters)."""
+        if self.resume_staging_shortfall(rid) > 0:
+            return None
+
+        def promote(n: int) -> list[Migration]:
+            ms = self.swap_in(rid, n)
+            if self.promote_copy is not None:
+                for m in ms:
+                    self.promote_copy(m.src_page, m.dst_page)
+            return ms
+
+        moves = promote(len(self.host_pages_of(rid)))
+        for ref in self._disk_refs_of(rid):
+            if self.host.free_pages == 0:
+                self._reclaim_host(1)
+            src = ref.page
+            hp = self._transfer_frame(ref, self.host, HOST)
+            assert hp is not None          # shortfall checked up front
+            self._fire_disk_copy(DISK, src, HOST, hp)
+            self.pending_disk_in_pages += 1
+            self.disk_in_pages_total += 1
+            if self.device.free_pages > 0:
+                moves.extend(promote(1))
+        # sweep any remaining host pages into still-free device frames
+        if self.device.free_pages > 0:
+            moves.extend(promote(len(self.host_pages_of(rid))))
+        return moves
 
     def can_resize_device(self, new_total_bytes: float) -> bool:
         """Would ``resize_device`` succeed? False when the shrink's overflow
@@ -756,7 +1107,7 @@ class TieredKVAllocator:
             assert hp is not None            # entry check guarantees room
             for orid, idxs in owners:
                 counts[orid] -= len(idxs)
-            demotions.append(Migration(rid, DEVICE, ref.page, hp))
+            demotions.append(Migration(rid, DEVICE, ref.page, hp, HOST))
         # re-assign surviving device frames to fresh frames in a new pool
         new_dev = PagedKVAllocator(max(int(new_total_bytes), 0), self.pcfg)
         frame_new: dict[int, int] = {}
@@ -783,6 +1134,7 @@ class TieredKVAllocator:
         # new frame ids overlap)
         self.index.remap_frames(DEVICE, remap)
         self.device = new_dev
+        self.pools[DEVICE] = new_dev
         return ResizeResult(demotions=demotions, remap=remap)
 
     # ---- block tables --------------------------------------------------------
@@ -797,22 +1149,23 @@ class TieredKVAllocator:
         return padded_block_table([r.page for r in refs], max_pages, rid)
 
     def check_invariants(self) -> None:
-        self.device.check_invariants()
-        self.host.check_invariants()
+        for pool in self.pools.values():
+            pool.check_invariants()
         rids = set(self._refs) | set(self._reserve)
         for rid in rids:
             refs = self._refs.get(rid, [])
-            dev = [r.page for r in refs if r.tier == DEVICE]
-            host = [r.page for r in refs if r.tier == HOST]
+            by_tier = {t: [r.page for r in refs if r.tier == t]
+                       for t in TIER_ORDER}
             res = self._reserve.get(rid)
             if res is not None:
-                (dev if res.tier == DEVICE else host).append(res.page)
-            assert sorted(dev) == sorted(self.device.pages_of(rid))
-            assert sorted(host) == sorted(self.host.pages_of(rid))
+                by_tier[res.tier].append(res.page)
+            for tier in TIER_ORDER:
+                assert sorted(by_tier[tier]) == \
+                    sorted(self.pool_of(tier).pages_of(rid)), \
+                    f"{tier} refs out of sync with pool for rid {rid}"
         for rid, res in self._reserve.items():
             # a COW reserve is a claimed, private, spare frame
-            pool = self.device if res.tier == DEVICE else self.host
-            assert pool.refcount(res.page) == 1, "reserve frame is shared"
+            assert self.refcount(res) == 1, "reserve frame is shared"
             assert all(res != r for r in self._refs.get(rid, [])), \
                 "reserve frame already mapped in the block table"
         for key, ref in self.index._by_key.items():
@@ -820,13 +1173,21 @@ class TieredKVAllocator:
             assert self.refcount(ref) >= 1, "index entry on a dead frame"
         for ref, key in self.index._by_frame.items():
             assert self.index._by_key.get(key) == ref
-        # keep-alive cache: CACHE_RID's host claims are exactly the LRU set,
-        # and every cached frame still answers a prefix lookup
+        # keep-alive cache: CACHE_RID's claims are exactly the per-tier
+        # LRU sets, and every cached frame still answers a prefix lookup
         assert sorted(self._cache_lru) == sorted(
             self.host.pages_of(CACHE_RID)), "cache LRU out of sync with pool"
+        assert sorted(self._disk_cache) == sorted(
+            self.disk.pages_of(CACHE_RID)), \
+            "disk cache out of sync with pool"
         for p in self._cache_lru:
             assert self.index.has_frame(PageRef(HOST, p)), \
                 "cached frame lost its index entry"
+        for p in self._disk_cache:
+            assert self.index.has_frame(PageRef(DISK, p)), \
+                "disk-cached frame lost its index entry"
+            assert self.disk.refcount(p) == 1, \
+                "disk cache frame gained a live owner without revival"
 
 
 # ---------------------------------------------------------------------------
@@ -836,10 +1197,15 @@ class TieredKVAllocator:
 
 @dataclasses.dataclass
 class SwapPlan:
-    """Link traffic of one inference iteration's KV tier activity."""
+    """Link traffic of one inference iteration's KV tier activity. PCIe
+    (kv_in/kv_out) and NVMe (disk_in/disk_out) are separate channels: the
+    SLO model charges each to its own term, never disk bytes to the
+    TPOT-critical PCIe budget."""
     kv_in_bytes: float = 0.0      # host->device: promotions + streamed KV
     kv_out_bytes: float = 0.0     # device->host: demotions / spill write-back
     streamed_bytes: float = 0.0   # recurring share of kv_in (no residency change)
+    disk_in_bytes: float = 0.0    # disk->host staging reads (NVMe)
+    disk_out_bytes: float = 0.0   # host->disk demotion writes (NVMe)
     promotions: list[Migration] = dataclasses.field(default_factory=list)
 
 
@@ -848,13 +1214,17 @@ class SwapScheduler:
 
     Policy: freed device frames are back-filled by promoting the oldest host
     pages of active requests (cheapest first: the request with the fewest
-    host pages clears its streaming debt soonest); whatever stays on host is
-    streamed in for attention each iteration. Demotions queued by interval
-    changes or tail growth are charged as write-back traffic. All byte
-    accounting is frame-wise: a host page shared by several active requests
-    streams ONCE per iteration and a shared demotion writes back ONCE —
-    charging per owner would double-bill the link the SLO math budgets
-    (``iter_time_with_interval_kv``).
+    host pages clears its streaming debt soonest — re-selected after every
+    promotion, because a shared-frame swap_in rewrites sibling counts);
+    whatever stays on host is streamed in for attention each iteration.
+    Demotions queued by interval changes or tail growth are charged as
+    write-back traffic; NVMe moves the allocator performed since the last
+    plan (park-to-disk, cache retirement/revival, resume staging) are
+    drained into the plan's ``disk_in/out_bytes`` — the disk link's own
+    term, never the PCIe budget. All byte accounting is frame-wise: a host
+    page shared by several active requests streams ONCE per iteration and a
+    shared demotion writes back ONCE — charging per owner would double-bill
+    the link the SLO math budgets (``iter_time_with_interval_kv``).
     """
 
     def __init__(self, kv: TieredKVAllocator):
@@ -880,6 +1250,15 @@ class SwapScheduler:
         """Promotion traffic (resume copies) charged to the next iteration."""
         return self._pending_in_pages * self.kv.page_bytes
 
+    def pending_disk_in_bytes(self) -> float:
+        """NVMe staging reads (disk->host) performed since the last plan —
+        the allocator counts them at the moment the copy fires."""
+        return self.kv.pending_disk_in_pages * self.kv.page_bytes
+
+    def pending_disk_out_bytes(self) -> float:
+        """NVMe demotion writes (host->disk) performed since the last plan."""
+        return self.kv.pending_disk_out_pages * self.kv.page_bytes
+
     def streamed_host_pages(self, active_rids: list[int]) -> set[int]:
         """UNIQUE host frames the active requests attend through."""
         return {p for r in active_rids for p in self.kv.host_pages_of(r)}
@@ -894,14 +1273,25 @@ class SwapScheduler:
         self._pending_out_pages = 0
         plan.kv_in_bytes = self._pending_in_pages * self.kv.page_bytes
         self._pending_in_pages = 0
+        plan.disk_in_bytes = self.pending_disk_in_bytes()
+        plan.disk_out_bytes = self.pending_disk_out_bytes()
+        self.kv.pending_disk_in_pages = 0
+        self.kv.pending_disk_out_pages = 0
         # promote into free device frames, cheapest request first (a shared
-        # frame promotes once: the first owner's swap_in rewrites them all)
-        order = sorted((r for r in active_rids if self.kv.host_pages_of(r)),
-                       key=lambda r: len(self.kv.host_pages_of(r)))
-        for rid in order:
-            if self.kv.device.free_pages == 0:
+        # frame promotes once: the first owner's swap_in rewrites them all).
+        # The cheapest request is RE-selected after every promotion: a
+        # shared-frame swap_in rewrites sibling refs too, so host-page
+        # counts taken before the move go stale mid-loop — a one-shot
+        # up-front sort could promote a request that is no longer the one
+        # clearing its streaming debt soonest.
+        while self.kv.device.free_pages > 0:
+            cands = [r for r in active_rids if self.kv.host_pages_of(r)]
+            if not cands:
                 break
+            rid = min(cands, key=lambda r: len(self.kv.host_pages_of(r)))
             moves = self.kv.swap_in(rid, self.kv.device.free_pages)
+            if not moves:
+                break
             plan.promotions.extend(moves)
             plan.kv_in_bytes += len(moves) * self.kv.page_bytes
         plan.streamed_bytes = self.streamed_bytes(active_rids)

@@ -39,6 +39,14 @@ Policies shipped on the contract:
   * **Chunked prefill** (``SchedulerConfig.prefill_chunk_tokens``): long
     prompts prefill in page-aligned chunks piggybacked on decode iterations
     instead of stalling the batch; TTFT accrues per chunk.
+  * **Disk-tier demotion** (three-tier allocator with ``disk_bytes > 0``):
+    under host pressure, instead of refusing a park (or evicting prefix
+    cache), the HOST pages of long-parked preempted requests — oldest park
+    first, never frames an active sibling streams — retire to the NVMe
+    tier (``TieredKVAllocator.demote_to_disk``), and resume stages them
+    disk->host->device. NVMe traffic is charged to the disk link's own
+    term of ``iter_time_with_interval_kv`` in every feasibility check; it
+    never rides the TPOT-critical PCIe budget unmodeled.
 
 With both policies off, the plans preserve the fused engine's admission
 semantics up to two deliberate, always-on fixes shipped with the split —
@@ -54,7 +62,7 @@ import dataclasses
 from typing import Callable
 
 from repro.core.interval import NO_OFFLOAD, iter_time_with_interval_kv
-from repro.serving.kv_offload import (Migration, SwapScheduler,
+from repro.serving.kv_offload import (HOST, Migration, SwapScheduler,
                                       TieredKVAllocator)
 from repro.serving.request import Request, State
 
@@ -212,7 +220,8 @@ class Scheduler:
         self.preempted: list[Request] = []
         self._prefilling: list[Request] = []   # chunked prefills in flight
         self.stats = {"iterations": 0, "tokens": 0, "preemptions": 0,
-                      "resumes": 0, "chunked_prefill_iters": 0}
+                      "resumes": 0, "chunked_prefill_iters": 0,
+                      "disk_demotions": 0, "disk_stagings": 0}
         self._iv = NO_OFFLOAD                  # interval of the current plan
 
     # ------------------------------------------------------------- queue I/O --
@@ -245,19 +254,115 @@ class Scheduler:
         self.stats["resumes"] += outcome.resumes
         self.stats["chunked_prefill_iters"] += int(outcome.chunks_run > 0)
 
+    # ------------------------------------------------------------- disk tier --
+    def _iter_dt(self, n_active: int, kv_in: float, kv_out: float,
+                 chunk_s: float = 0.0, extra_disk_in_pages: int = 0,
+                 extra_disk_out_pages: int = 0) -> float:
+        """Modeled next-iteration latency under the given PCIe KV traffic
+        PLUS the disk link's own term: NVMe bytes already pending at the
+        allocator and any prospective staging/demotion pages the caller is
+        about to cause. Disk traffic never rides the PCIe budget — but a
+        feasibility check that ignored it would certify TPOTs the NVMe
+        queue then breaks."""
+        link = self.kv.disk_link
+        pb = self.kv.page_bytes
+        times = self.times_fn(n_active, self.max_seq, "decode")
+        return iter_time_with_interval_kv(
+            times, self._iv, kv_in, kv_out,
+            disk_in_bytes=self.swap.pending_disk_in_bytes()
+            + extra_disk_in_pages * pb,
+            disk_out_bytes=self.swap.pending_disk_out_bytes()
+            + extra_disk_out_pages * pb,
+            disk_bw=link.bw_bytes_s,
+            disk_latency_s=link.latency_s) + chunk_s
+
+    def _demotable_to_disk(self, active_rids: list[int],
+                           exclude_rid: int | None = None,
+                           include_rids=(), pinned=()) -> int:
+        """Host frames the disk tier could absorb right now: unique HOST
+        frames of parked requests (oldest park first) — plus those of
+        ``include_rids`` (a victim about to be parked: once it parks, its
+        spilled pages are cold too) — that no active sibling references
+        and that are not ``pinned`` (a dedup preview's hit frames:
+        ``_free_host_via_disk`` will refuse to move them, so counting
+        them would certify capacity that cannot be freed), capped by
+        free + reclaimable disk capacity. Zero without a disk tier."""
+        if self.kv.disk.total_pages == 0:
+            return 0
+        hot = self.kv.hot_pages(active_rids, HOST) | set(pinned)
+        frames: set[int] = set()
+        rids = [r.rid for r in self.preempted if r.rid != exclude_rid]
+        rids += [r for r in include_rids if r not in rids]
+        for rid in rids:
+            frames.update(p for p in self.kv.host_pages_of(rid)
+                          if p not in hot)
+            res = self.kv.reserve_of(rid)
+            if res is not None and res.tier == HOST \
+                    and res.page not in hot:
+                frames.add(res.page)
+        room = self.kv.disk.free_pages + self.kv.reclaimable_disk_pages()
+        return min(len(frames), room)
+
+    def _free_host_via_disk(self, n_pages: int, active_rids: list[int],
+                            exclude_rid: int | None = None,
+                            also_rids=(), keep=(),
+                            keep_disk: set[int] | None = None,
+                            youngest_first: bool = False) -> int:
+        """Make host room by demoting parked preempted requests' host
+        pages to the disk tier — the policy that replaces "refuse the park
+        / evict the cache" under host pressure. Park/admission pressure
+        takes the LONGEST-parked first (oldest pays the NVMe round trip:
+        it resumes last anyway); a resume staging takes the YOUNGEST first
+        (oldest work wins the host tier — demoting the next-to-resume
+        would bounce its pages straight back). ``also_rids`` go last (a
+        victim whose park is being arranged: its spilled pages were hot a
+        moment ago); ``keep``/``keep_disk`` protect a caller's
+        dedup-preview frames from moving under the allocation they
+        certify. Returns the pages actually freed; NVMe write-back bytes
+        are accumulated at the allocator and charged to the disk term of
+        the next iteration."""
+        freed = 0
+        parked = [r.rid for r in self.preempted if r.rid != exclude_rid]
+        if youngest_first:
+            parked.reverse()
+        rids = parked + [r for r in also_rids if r not in parked]
+        for rid in rids:
+            if freed >= n_pages:
+                break
+            moves = self.kv.demote_to_disk(rid, n_pages - freed,
+                                           active_rids, keep=keep,
+                                           keep_disk=keep_disk)
+            freed += len(moves)
+            self.stats["disk_demotions"] += len(moves)
+        return freed
+
     # --------------------------------------------------------------- resumes --
     def _plan_resumes(self, plan: IterationPlan, active: list[ActiveInfo],
                       free_slots: list[int]) -> None:
         """Parked requests re-enter with priority over new admissions (they
         are the oldest work in the system), as soon as a slot is free and
         the worst case of their return traffic — every still-host page
-        streamed or promoted next iteration — fits every TPOT budget."""
+        streamed or promoted next iteration, plus the NVMe staging of any
+        disk-demoted pages — fits every TPOT budget. A disk-parked request
+        whose staging cannot fit the host tier first pushes YOUNGER parked
+        requests' pages down to disk (oldest work wins the host tier)."""
         for req in list(self.preempted):
             if not free_slots:
                 return
             if not self._resume_feasible(req, active):
                 continue
+            n_disk = self.kv.parked_disk_pages(req.rid)
+            short = self.kv.resume_staging_shortfall(req.rid)
+            if short > 0:
+                # youngest parked first: oldest work wins the host tier
+                self._free_host_via_disk(short, [a.rid for a in active],
+                                         exclude_rid=req.rid,
+                                         youngest_first=True)
             moves = self.kv.resume(req.rid)
+            if moves is None:
+                continue                     # host cannot stage: stay parked
+            if n_disk:
+                self.stats["disk_stagings"] += n_disk
             self.swap.note_promotions(len(moves))
             slot = free_slots.pop(0)
             self.preempted.remove(req)
@@ -271,17 +376,26 @@ class Scheduler:
             # request is the system's only work — resume unconditionally
             # rather than stall forever on its own one-time return spike
             return True
+        n_disk = self.kv.parked_disk_pages(req.rid)
+        shortfall = self.kv.resume_staging_shortfall(req.rid)
+        if shortfall > self._demotable_to_disk([a.rid for a in active],
+                                               exclude_rid=req.rid):
+            return False                     # NVMe staging cannot land
         host_pages = set(self.kv.host_pages_of(req.rid))
         streamed = self.swap.streamed_host_pages([a.rid for a in active])
         # next iteration's kv_in is promotion copies + remaining streaming —
         # together exactly one pass over the union, however the swap
-        # scheduler splits it; later iterations are strictly cheaper
-        kv_in = (len(streamed | host_pages) * self.kv.page_bytes
-                 + self.swap.pending_in_bytes())
-        times = self.times_fn(len(active) + 1, self.max_seq, "decode")
-        dt = iter_time_with_interval_kv(times, self._iv, kv_in,
-                                        self.swap.pending_out_bytes()) \
-            + self._chunk_overhead_s()
+        # scheduler splits it; later iterations are strictly cheaper. Disk
+        # pages stage to host first, so they join the same worst-case pass
+        # AND charge the NVMe term — reads for the staging itself plus the
+        # write-backs of the shortfall demotions it will trigger.
+        kv_in = ((len(streamed | host_pages) + n_disk)
+                 * self.kv.page_bytes + self.swap.pending_in_bytes())
+        dt = self._iter_dt(len(active) + 1, kv_in,
+                           self.swap.pending_out_bytes(),
+                           self._chunk_overhead_s(),
+                           extra_disk_in_pages=n_disk,
+                           extra_disk_out_pages=shortfall)
         bound = min([a.tpot_slo_s for a in active] + [req.tpot_slo_s])
         return dt <= bound * (1 + 1e-9)
 
@@ -345,10 +459,11 @@ class Scheduler:
                      + self.swap.pending_in_bytes())
         kv_out_now = self.swap.pending_out_bytes()
         chunk_s = self._chunk_overhead_s(req)
-        if kv_in_now or kv_out_now or chunk_s:
-            times = self.times_fn(len(active) + 1, self.max_seq, "decode")
-            dt = iter_time_with_interval_kv(times, self._iv, kv_in_now,
-                                            kv_out_now) + chunk_s
+        disk_now = (self.swap.pending_disk_in_bytes()
+                    + self.swap.pending_disk_out_bytes())
+        if kv_in_now or kv_out_now or chunk_s or disk_now:
+            dt = self._iter_dt(len(active) + 1, kv_in_now, kv_out_now,
+                               chunk_s)
             slos = [a.tpot_slo_s for a in active] + [req.tpot_slo_s]
             if dt > min(slos) * (1 + 1e-9):
                 return False               # current KV traffic breaks TPOT
@@ -371,13 +486,18 @@ class Scheduler:
         streamed for an active sibling add no link traffic, and dedup'd
         pages need no spill write-back during prefill."""
         kv = self.kv
+        active_rids = [a.rid for a in active]
         pv = kv.dedup_preview(req.prompt, total)
         n_fresh = (kv.device.pages_for(total) - pv.n_hits
                    + int(pv.need_reserve))
         n_host = max(n_fresh - kv.device.free_pages, 0)
-        if n_host > kv.host.free_pages + kv.reclaimable_host_pages():
+        n_revive = len(pv.disk_hit_pages())
+        host_room = (kv.host.free_pages + kv.reclaimable_host_pages()
+                     + self._demotable_to_disk(
+                         active_rids, pinned=pv.host_hit_pages()))
+        if n_host + n_revive > host_room:
             return False                       # no host room: wait
-        if n_host <= 0 and not pv.host_hit_pages():
+        if n_host <= 0 and not pv.host_hit_pages() and not n_revive:
             # cannot happen in the synchronous engine: alloc(allow_host=
             # False) fails exactly when fresh pages overflow to host or a
             # hit is host-resident, and nothing mutates between that call
@@ -387,24 +507,38 @@ class Scheduler:
             return False
         pb = kv.page_bytes
         # unique host frames after admission: currently streamed ∪ shared
-        # host hits, plus the freshly spilled pages
-        streamed_pages = self.swap.streamed_host_pages(
-            [a.rid for a in active])
+        # host hits, plus the freshly spilled pages and revived disk hits
+        streamed_pages = self.swap.streamed_host_pages(active_rids)
         streamed_after = (len(streamed_pages | pv.host_hit_pages())
-                          + n_host) * pb + self.swap.pending_in_bytes()
-        times_d = self.times_fn(len(active) + 1, self.max_seq, "decode")
-        dt = iter_time_with_interval_kv(times_d, self._iv, streamed_after,
-                                        self.swap.pending_out_bytes()) \
-            + self._chunk_overhead_s(req)
+                          + n_host + n_revive) * pb \
+            + self.swap.pending_in_bytes()
+        # prospective NVMe traffic: demotions that make the host room plus
+        # the disk-hit revival reads — charged to the disk term up front
+        shortfall = max(n_host + n_revive - kv.host.free_pages
+                        - kv.reclaimable_host_pages(), 0)
+        dt = self._iter_dt(len(active) + 1, streamed_after,
+                           self.swap.pending_out_bytes(),
+                           self._chunk_overhead_s(req),
+                           extra_disk_in_pages=n_revive,
+                           extra_disk_out_pages=shortfall)
         slos = [a.tpot_slo_s for a in active]
         tpot_bound = min(slos + [req.tpot_slo_s])
         if dt > tpot_bound * (1 + 1e-9):
             return False                       # streaming would break TPOT
         if self.ttft_model(req, n_host * pb) > req.ttft_slo_s * (1 + 1e-9):
             return False                       # spill write-back breaks TTFT
+        if shortfall > 0:
+            # host pressure: push long-parked requests' pages down to NVMe
+            # instead of letting the admission wait. The preview's hit
+            # frames are pinned — demoting or evicting one would leave the
+            # alloc below holding dangling references
+            self._free_host_via_disk(shortfall, active_rids,
+                                     keep=pv.host_hit_pages(),
+                                     keep_disk=pv.disk_hit_pages())
         refs = kv.alloc(req.rid, total, allow_host=True,
                         prompt=req.prompt, preview=pv)
-        assert refs is not None
+        if refs is None:
+            return False                       # room-making fell short: wait
         return True
 
     # ------------------------------------------------------------ preemption --
@@ -477,8 +611,34 @@ class Scheduler:
                                                    victim):
             return False                       # the park would not unblock
         others = [a.rid for a in active if a.rid != victim.rid]
+        # host pressure: the park (and the admission's spill behind it)
+        # may need more host frames than free + prefix-cache reclaim can
+        # supply — demote long-parked requests' pages to the disk tier
+        # instead of refusing the park (the dry-run above already counted
+        # this capacity and charged the NVMe write-back to the TPOT check)
+        raw_need, _ = self.kv.park_preview(victim.rid, others)
+        pv = self.kv.dedup_preview(req.prompt, total)
+        n_spill = max(self.kv.device.pages_for(total) - pv.n_hits
+                      + int(pv.need_reserve)
+                      - (self.kv.device.free_pages + raw_need), 0)
+        over = (raw_need + n_spill + len(pv.disk_hit_pages())
+                - self.kv.host.free_pages
+                - self.kv.reclaimable_host_pages())
+        if over > 0:
+            # oldest parked requests first; the victim's own spilled pages
+            # (cold the moment it parks) retire last. The preview's hit
+            # frames are pinned for the _try_admit_mem re-allocation below
+            self._free_host_via_disk(over, others, also_rids=[victim.rid],
+                                     keep=pv.host_hit_pages(),
+                                     keep_disk=pv.disk_hit_pages())
         moves = self.kv.park(victim.rid, others)
         if moves is None:
+            # the park fell through after room-making (e.g. disk reclaim
+            # came up short of the dry-run's estimate). If the victim's own
+            # spill was already retired, stage it straight back: an ACTIVE
+            # request must never be left holding disk-tier pages.
+            undone = self.kv.unspill_from_disk(victim.rid)
+            self.stats["disk_stagings"] += undone
             return False                       # host cannot absorb the park
         self.swap.note_demotions(len(moves))
         active.remove(victim)
@@ -495,29 +655,42 @@ class Scheduler:
         """Dry-run of the post-park admission, no mutation: device frames
         the park would free are credited, the victim's streaming debits
         vanish, and the park's own write-back joins the pending kv_out.
+        Host supply counts free frames, reclaimable prefix-cache frames
+        (``park_preview``'s netted need pins the preview/park parity the
+        raw count used to break) AND the disk tier's absorbable capacity —
+        whose prospective NVMe write-back is charged to the disk term.
         Mirrors the checks ``_try_admit_mem`` / ``_try_spill_admit`` will
         apply for real after the park."""
         kv = self.kv
         rest = [a for a in active if a.rid != victim.rid]
-        freed, need_host = kv.park_preview(victim.rid,
-                                           [a.rid for a in rest])
-        host_room = kv.host.free_pages + kv.reclaimable_host_pages()
-        if need_host > host_room:
-            return False                       # the park itself cannot land
+        rest_rids = [a.rid for a in rest]
+        freed, need_host = kv.park_preview(victim.rid, rest_rids)
         pv = kv.dedup_preview(req.prompt, total)
+        disk_room = self._demotable_to_disk(rest_rids,
+                                            include_rids=[victim.rid],
+                                            pinned=pv.host_hit_pages())
+        if need_host > kv.host.free_pages + disk_room:
+            return False                       # the park itself cannot land
+        supply = (kv.host.free_pages + kv.reclaimable_host_pages()
+                  + disk_room)
         n_fresh = (kv.device.pages_for(total) - pv.n_hits
                    + int(pv.need_reserve))
         n_host = max(n_fresh - (kv.device.free_pages + freed), 0)
-        if n_host > host_room - need_host:
+        n_revive = len(pv.disk_hit_pages())
+        if n_host + n_revive > supply - freed:
             return False                       # no room for the spill
         pb = kv.page_bytes
-        streamed = self.swap.streamed_host_pages([a.rid for a in rest])
-        kv_in = ((len(streamed | pv.host_hit_pages()) + n_host) * pb
-                 + self.swap.pending_in_bytes())
+        streamed = self.swap.streamed_host_pages(rest_rids)
+        kv_in = ((len(streamed | pv.host_hit_pages()) + n_host + n_revive)
+                 * pb + self.swap.pending_in_bytes())
         kv_out = self.swap.pending_out_bytes() + freed * pb
-        times = self.times_fn(len(rest) + 1, self.max_seq, "decode")
-        dt = iter_time_with_interval_kv(times, self._iv, kv_in, kv_out) \
-            + self._chunk_overhead_s(req)
+        # prospective NVMe traffic if the park + spill overflow into disk
+        disk_out = max(freed + n_host + n_revive - kv.host.free_pages
+                       - kv.reclaimable_host_pages(), 0)
+        dt = self._iter_dt(len(rest) + 1, kv_in, kv_out,
+                           self._chunk_overhead_s(req),
+                           extra_disk_in_pages=n_revive,
+                           extra_disk_out_pages=disk_out)
         slos = [a.tpot_slo_s for a in rest] + [req.tpot_slo_s]
         if dt > min(slos) * (1 + 1e-9):
             return False

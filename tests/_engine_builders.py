@@ -26,12 +26,16 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                       preemption: bool = False,
                       prefill_chunk_tokens: int = 0,
                       host_prefix_cache_pages: int = 0,
+                      disk_pages: int = 0, disk_bw_bytes_s: float = 3e9,
+                      disk_latency_s: float = 1e-7,
+                      disk_backing_path: str | None = None,
                       batches=(1, 2, 4, 8), seqs=(16, 32, 64)):
     """Reduced-qwen engine + analyzer. Size HBM either directly (``hbm_gb``)
     or as resident weights plus ``extra_device_pages`` KV pages (the
-    tiered-serving shape); ``host_pages`` sizes the pinned-host KV pool in
-    pages of the same geometry. ``preemption`` / ``prefill_chunk_tokens`` /
-    ``host_prefix_cache_pages`` switch on the scheduler policies."""
+    tiered-serving shape); ``host_pages`` / ``disk_pages`` size the
+    pinned-host and NVMe KV pools in pages of the same geometry.
+    ``preemption`` / ``prefill_chunk_tokens`` / ``host_prefix_cache_pages``
+    switch on the scheduler policies."""
     cfg = reduce_config(get_config("qwen2.5-3b"), d_model=d_model,
                         heads=heads, layers=layers, d_ff=d_ff, vocab=vocab)
     model = build_model(cfg)
@@ -58,5 +62,12 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                                      preemption=preemption,
                                      prefill_chunk_tokens=prefill_chunk_tokens,
                                      host_prefix_cache_pages=
-                                     host_prefix_cache_pages))
+                                     host_prefix_cache_pages,
+                                     disk_kv_bytes=disk_pages * page_bytes,
+                                     disk_bw_bytes_s=disk_bw_bytes_s,
+                                     # reduced models iterate in ~us; the
+                                     # real-NVMe 100us default latency would
+                                     # dwarf every TPOT at this scale
+                                     disk_latency_s=disk_latency_s,
+                                     disk_backing_path=disk_backing_path))
     return eng, an

@@ -24,8 +24,8 @@ except ImportError:
 import pytest
 
 from repro.serving.kv_cache import PageConfig
-from repro.serving.kv_offload import (DEVICE, HOST, PageRef,
-                                      TieredKVAllocator)
+from repro.serving.kv_offload import (CACHE_RID, DEVICE, DISK, HOST,
+                                      LinkSpec, PageRef, TieredKVAllocator)
 
 PAGE = 4   # tokens per page
 BPT = 4    # bytes per token
@@ -242,3 +242,127 @@ def test_refcounted_dedup_random_op_sequences(codes, dev_pages, host_pages):
     assert kv.device.used_pages == 0 and kv.host.used_pages == 0
     assert _total_refcounts(kv) == 0
     assert len(kv.index) == 0, "prefix index outlived its frames"
+
+
+# ---------------------------------------------------------------------------
+# Three-tier (device / host / disk) property test
+# ---------------------------------------------------------------------------
+
+
+def _total_refcounts_3t(kv) -> int:
+    return sum(sum(pool._rc.values()) for pool in kv.pools.values())
+
+
+def _cache_claims(kv) -> int:
+    """CACHE_RID's keep-alive claims across both below-device tiers."""
+    return len(kv._cache_lru) + len(kv._disk_cache)
+
+
+@given(codes=st.lists(st.integers(0, (1 << 30) - 1), min_size=0, max_size=60),
+       dev_pages=st.integers(0, 10), host_pages=st.integers(0, 10),
+       disk_pages=st.integers(0, 10))
+@settings(max_examples=80, deadline=None)
+def test_three_tier_random_op_sequences(codes, dev_pages, host_pages,
+                                        disk_pages):
+    """Drive the THREE-tier allocator (dedup + keep-alive cache on, so
+    host-pressure reclaim exercises the cache-to-disk retirement path) with
+    random alloc / demote / promote / park-to-disk / resume / resize / free
+    sequences. After EVERY operation:
+
+      * per-tier refcount sums == live references (block-table entries +
+        COW reserves + keep-alive cache claims on host AND disk),
+      * ``check_invariants`` (pool partitions, ref/pool agreement per tier,
+        reserve privacy, index <-> frame consistency, cache LRU <-> pool),
+      * every live request holds exactly ``pages_for(tokens)`` refs and no
+        capacity is conjured (pool invariants bound used <= total),
+      * disk pages only ever belong to requests the caller treats as
+        parked — an "active" request (even subset) never loses a page to
+        disk.
+    """
+    kv = TieredKVAllocator(dev_pages * PB, host_pages * PB,
+                           PageConfig(PAGE, bytes_per_token=BPT),
+                           scope="3t", enable_dedup=True,
+                           host_prefix_cache_pages=3,
+                           disk_bytes=disk_pages * PB,
+                           disk_link=LinkSpec(bw_bytes_s=1e9))
+    tokens: dict[int, int] = {}
+    next_rid = 0
+    for code in codes:
+        op, arg = code % 7, code // 7
+        alive = sorted(tokens)
+        # a deterministic "active" subset: parity of the rid + arg salt
+        active = [r for r in alive if (r + arg) % 3 != 0]
+        if op == 0:                                          # alloc w/ prompt
+            fam = arg % 3
+            plen = arg // 3 % (3 * PAGE) + 1
+            extra = arg // 9 % (2 * PAGE)
+            prompt = (np.arange(plen, dtype=np.int64) + 10_000 * fam)
+            refs = kv.alloc(next_rid, plen + extra,
+                            allow_host=bool(arg % 2), prompt=prompt)
+            if refs is not None:
+                assert len(refs) == kv.device.pages_for(plen + extra)
+                assert all(r.tier != DISK for r in refs), \
+                    "alloc mapped a disk page without revival"
+                tokens[next_rid] = plen + extra
+                next_rid += 1
+            else:
+                kv.free(next_rid)    # nothing claimed: must be a no-op
+        elif op == 1 and alive:                              # swap_out
+            rid = alive[arg % len(alive)]
+            kv.swap_out(rid, arg % 3 + 1, active_rids=active)
+        elif op == 2 and alive:                              # swap_in
+            rid = alive[arg % len(alive)]
+            kv.swap_in(rid, arg % 3 + 1)
+        elif op == 3 and alive:                              # park to disk
+            rid = alive[arg % len(alive)]
+            if rid not in active:
+                before = {r: set(kv.disk_pages_of(r)) for r in active}
+                moves = kv.demote_to_disk(rid, arg % 4 + 1, active)
+                for m in moves:
+                    assert m.src_tier == HOST and m.dst_tier == DISK
+                for r in active:
+                    assert set(kv.disk_pages_of(r)) == before[r], \
+                        "an active request lost a page to disk"
+        elif op == 4 and alive:                              # resume
+            rid = alive[arg % len(alive)]
+            out = kv.resume(rid)
+            if out is None:
+                assert kv.disk_pages_of(rid), \
+                    "resume refused without disk pages to stage"
+            else:
+                assert kv.disk_pages_of(rid) == [], \
+                    "resume left disk pages behind"
+        elif op == 5:                                        # resize
+            new_bytes = (arg % (dev_pages + 4)) * PB
+            if kv.can_resize_device(new_bytes):
+                kv.resize_device(new_bytes)
+            else:
+                with pytest.raises(RuntimeError):
+                    kv.resize_device(new_bytes)
+        elif op == 6 and alive:                              # free
+            rid = alive[arg % len(alive)]
+            kv.free(rid)
+            del tokens[rid]
+            assert kv.refs(rid) == []
+
+        # ---- invariants after every operation -----------------------------
+        kv.check_invariants()
+        live = (sum(len(refs) for refs in kv._refs.values())
+                + len(kv._reserve) + _cache_claims(kv))
+        assert _total_refcounts_3t(kv) == live, \
+            "refcount sum != live refs + reserves + cache claims"
+        for rid, tok in tokens.items():
+            refs = kv.refs(rid)
+            assert len(refs) == kv.device.pages_for(tok)
+            per_tier = sum(len(kv.tier_pages_of(rid, t))
+                           for t in (DEVICE, HOST, DISK))
+            assert per_tier == len(refs), "a ref claims several tiers"
+
+    for rid in list(tokens):
+        kv.free(rid)
+    kv.check_invariants()
+    # only keep-alive cache claims may outlive the requests
+    assert _total_refcounts_3t(kv) == _cache_claims(kv)
+    assert kv.device.used_pages == 0
+    assert kv.host.used_pages == len(kv._cache_lru)
+    assert kv.disk.used_pages == len(kv._disk_cache)

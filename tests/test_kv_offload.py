@@ -18,7 +18,8 @@ from repro.core.interval import (LayerTimes, NO_OFFLOAD,
 from repro.core.simulator import schedule_for_interval, simulate_iteration
 from repro.kernels import ops
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
-from repro.serving.kv_offload import (DEVICE, HOST, SwapScheduler,
+from repro.serving.kv_offload import (DEVICE, DISK, HOST, DiskKVPool,
+                                      LinkSpec, SwapScheduler,
                                       TieredKVAllocator)
 
 
@@ -289,6 +290,291 @@ def test_streamed_and_writeback_bytes_count_shared_pages_once():
     assert plan.kv_in_bytes == 2 * pb + plan.streamed_bytes
     assert plan.streamed_bytes == 0.0
     kv2.check_invariants()
+
+
+def test_swap_out_spills_unshared_before_shared_hot_frames():
+    """Regression (spill path of the park-target rule): ``swap_out`` used to
+    demote the OLDEST device frames even when an active sibling still
+    referenced them — moving a hot shared frame frees no lasting capacity
+    (the sibling must stream it back every iteration). With ``active_rids``
+    given, unshared frames spill first and the shared hot frame stays on
+    device until nothing else remains."""
+    pcfg = _pcfg()
+    kv = TieredKVAllocator(8 * 16, 8 * 16, pcfg, scope="m", enable_dedup=True)
+    shared_prompt = np.arange(2 * pcfg.page_size, dtype=np.int64)
+    kv.alloc(1, 2 * pcfg.page_size, prompt=shared_prompt)   # origin
+    long_prompt = np.concatenate(
+        [shared_prompt, np.arange(100, 100 + 2 * pcfg.page_size)])
+    kv.alloc(2, 4 * pcfg.page_size, prompt=long_prompt)     # shares pages 0-1
+    shared = {r.page for r in kv.refs(1)}
+    assert shared and shared == {r.page for r in kv.refs(2)[:2]}
+
+    # oldest-first would take refs[0] (shared, hot); the fix takes the first
+    # frame no active sibling references
+    moves = kv.swap_out(2, 1, active_rids=[1])
+    assert len(moves) == 1
+    assert moves[0].src_page not in shared, "shared hot frame spilled"
+    assert all(r.tier == DEVICE for r in kv.refs(1)), "sibling was disturbed"
+    kv.check_invariants()
+
+    # fall back only when nothing unshared remains: demanding 3 more frames
+    # spills the last private one first, then the shared ones move too
+    moves2 = kv.swap_out(2, 3, active_rids=[1])
+    assert len(moves2) == 3
+    assert moves2[0].src_page not in shared
+    assert {m.src_page for m in moves2[1:]} == shared
+    assert all(r.tier == HOST for r in kv.refs(1))          # moved once, both
+    kv.check_invariants()
+
+
+def test_park_preview_nets_out_reclaimable_cache():
+    """Regression (preview/park parity): ``park`` reclaims keep-alive
+    prefix-cache frames before giving up, but the preview used to report
+    the raw target count — a precheck against ``host.free_pages`` refused
+    parks the real call absorbs. The netted preview certifies a park that
+    succeeds ONLY through cache reclaim."""
+    kv = TieredKVAllocator(2 * 16, 2 * 16, _pcfg(), scope="pp",
+                           enable_dedup=True, host_prefix_cache_pages=4)
+    p = np.arange(16, dtype=np.int64)
+    kv.alloc(0, 16, prompt=p)                  # 2 host (cold) + 2 device
+    kv.free(0)                                 # host frames adopted as cache
+    assert kv.host.free_pages == 0
+    assert kv.reclaimable_host_pages() == 2
+    kv.alloc(1, 8)                             # 2 device pages
+    n_free, n_need = kv.park_preview(1)
+    assert n_free == 2
+    assert n_need == 0, "preview must credit reclaimable cache frames"
+    moves = kv.park(1)                         # succeeds only via reclaim
+    assert moves is not None and len(moves) == 2
+    assert len(kv.host_pages_of(1)) == 2
+    kv.check_invariants()
+
+
+def test_plan_iteration_reselects_cheapest_after_shared_promotion():
+    """Regression (stale promotion order): a shared-frame ``swap_in``
+    rewrites SIBLING host-page counts mid-loop, so the one-shot up-front
+    sort by "fewest host pages" goes stale. A(2 pages, one shared with C),
+    B(3), C(3): promoting A drops C to 2, so the remaining free frames
+    belong to C — the stale order would hand them to B."""
+    pcfg = _pcfg()
+    pb = pcfg.page_size * pcfg.bytes_per_token
+    kv = TieredKVAllocator(4 * pb, 16 * pb, pcfg, scope="m",
+                           enable_dedup=True)
+    kv.alloc(9, 4 * pcfg.page_size)            # fill the device pool
+    pa = np.arange(2 * pcfg.page_size, dtype=np.int64)
+    kv.alloc(1, 2 * pcfg.page_size, prompt=pa)                   # A: 2 host
+    kv.alloc(2, 3 * pcfg.page_size)                              # B: 3 host
+    pc = np.concatenate([pa[:pcfg.page_size],
+                         np.arange(900, 900 + 2 * pcfg.page_size)])
+    kv.alloc(3, 3 * pcfg.page_size, prompt=pc)   # C: 3 host, page 0 shared w/ A
+    assert kv.refs(3)[0] in kv.refs(1), "A and C must share page 0"
+    kv.free(9)                                 # 4 device frames free up
+    sched = SwapScheduler(kv)
+    plan = sched.plan_iteration([1, 2, 3])
+    # A promotes first (cheapest: 2). Its shared frame moves C to 2 host
+    # pages — so the remaining 2 free frames go to C, not B.
+    assert [m.rid for m in plan.promotions] == [1, 1, 3, 3]
+    assert kv.host_pages_of(1) == [] and kv.host_pages_of(3) == []
+    assert len(kv.host_pages_of(2)) == 3
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Disk (NVMe) tier: three-tier migration, staging, cache retirement
+# ---------------------------------------------------------------------------
+
+def _mk_3tier(dev=4, host=4, disk=8, **kw):
+    return TieredKVAllocator(dev * 16, host * 16, _pcfg(),
+                             disk_bytes=disk * 16,
+                             disk_link=LinkSpec(bw_bytes_s=1e9,
+                                                latency_s=1e-6), **kw)
+
+
+def test_disk_tier_park_demote_resume_round_trip_accounting():
+    kv = _mk_3tier()
+    kv.alloc(1, 16)                            # 4 device pages
+    assert kv.park(1) is not None              # -> 4 host pages
+    moves = kv.demote_to_disk(1, 99)
+    assert len(moves) == 4
+    assert all(m.src_tier == HOST and m.dst_tier == DISK for m in moves)
+    assert len(kv.disk_pages_of(1)) == 4
+    assert kv.host.used_pages == 0
+    assert kv.pending_disk_out_pages == 4      # NVMe writes, not PCIe
+    kv.check_invariants()
+    back = kv.resume(1)
+    assert back is not None
+    # staged disk->host (4 NVMe reads), then promoted host->device
+    assert kv.pending_disk_in_pages == 4
+    assert len(back) == 4
+    assert kv.disk_pages_of(1) == []
+    assert all(r.tier == DEVICE for r in kv.refs(1))
+    kv.check_invariants()
+    kv.free(1)
+    assert all(p.used_pages == 0 for p in kv.pools.values())
+
+
+def test_demote_to_disk_skips_frames_active_sibling_streams():
+    """An active request streams its host pages every iteration and the
+    engine never reads the disk pool: frames shared with an active sibling
+    must not retire to disk at all."""
+    kv = TieredKVAllocator(0, 8 * 16, _pcfg(), scope="m", enable_dedup=True,
+                           disk_bytes=8 * 16)
+    p = np.arange(8, dtype=np.int64)
+    kv.alloc(1, 8, prompt=p)                   # 2 host pages (parked)
+    kv.alloc(2, 8, prompt=p)                   # active sibling shares both
+    assert kv.demote_to_disk(1, 99, active_rids=[2]) == []
+    kv.alloc(3, 8)                             # 2 private host pages
+    moves = kv.demote_to_disk(3, 99, active_rids=[2])
+    assert len(moves) == 2
+    kv.check_invariants()
+
+
+def test_unspill_from_disk_reverses_a_demotion_in_place():
+    """The park-fell-through defensive path: every disk page returns to a
+    host frame (NVMe reads charged), leaving no disk residency behind —
+    the guarantee that an active request never keeps disk pages."""
+    kv = _mk_3tier(dev=0, host=4, disk=8)
+    kv.alloc(1, 16)                            # 4 host pages
+    assert len(kv.demote_to_disk(1, 99)) == 4
+    assert kv.host.used_pages == 0
+    kv.pending_disk_out_pages = 0
+    assert kv.unspill_from_disk(1) == 4
+    assert kv.disk_pages_of(1) == []
+    assert len(kv.host_pages_of(1)) == 4
+    assert kv.pending_disk_in_pages == 4       # the reads are not free
+    kv.check_invariants()
+
+
+def test_resume_returns_none_when_host_cannot_stage():
+    kv = _mk_3tier(dev=4, host=2, disk=8)
+    kv.alloc(1, 8)                             # 2 device
+    assert kv.park(1) is not None              # 2 host
+    assert len(kv.demote_to_disk(1, 99)) == 2  # 2 disk
+    kv.pending_disk_out_pages = 0
+    kv.alloc(2, 24)                            # 4 device + 2 host: host full
+    before = kv.refs(1)
+    assert kv.resume(1) is None                # nothing staged, nothing moved
+    assert kv.refs(1) == before
+    assert kv.pending_disk_in_pages == 0
+    kv.check_invariants()
+
+
+def test_prefix_cache_demotes_to_disk_and_revives_on_hit():
+    """Under host pressure, aged-out prefix-cache frames retire to the disk
+    tier instead of being evicted — and a later dedup hit on a disk-resident
+    entry revives it through a host frame (one NVMe read) and still counts
+    as a cache hit."""
+    kv = TieredKVAllocator(1 * 16, 4 * 16, _pcfg(), scope="dc",
+                           enable_dedup=True, host_prefix_cache_pages=4,
+                           disk_bytes=8 * 16,
+                           disk_link=LinkSpec(bw_bytes_s=1e9))
+    pa = (np.arange(12) * 7).astype(np.int64) % 97
+    kv.alloc(0, 16, prompt=pa)                 # 3 host (indexed) + 1 device
+    kv.free(0)
+    assert len(kv.cached_pages()) == 3
+    idx_before = len(kv.index)
+    # a fresh 3-host-page allocation forces reclaim of 2 cache frames:
+    # they must retire to disk, not die
+    kv.alloc(1, 16, prompt=(np.arange(12) + 500).astype(np.int64))
+    assert kv.reclaimable_disk_pages() == 2
+    assert len(kv.index) == idx_before + 3     # nothing evicted, 3 added
+    assert kv.pending_disk_out_pages == 2
+    kv.check_invariants()
+    kv.free(1)
+    # resubmit pa: pages 0-1 hit on disk (revived), page 2 hits on host
+    refs = kv.alloc(2, 16, prompt=pa)
+    assert refs is not None
+    assert kv.dedup_hit_pages(2) == [0, 1, 2]
+    assert kv.cache_hits >= 3
+    assert all(r.tier == HOST for r in refs[:3])
+    assert kv.pending_disk_in_pages == 2       # two revival reads
+    kv.check_invariants()
+
+
+def test_disk_pool_backing_and_copy_hook_round_trip_bitwise(tmp_path):
+    """Data-plane gate: page bytes survive host -> disk -> host bitwise,
+    through both a RAM-backed buffer and a file-backed (np.memmap) pool,
+    driven by the allocator's synchronous ``disk_copy`` hook exactly as the
+    engine wires it."""
+    for path in (None, str(tmp_path / "kv_disk.bin")):
+        kv = TieredKVAllocator(2 * 16, 2 * 16, _pcfg(), disk_bytes=4 * 16,
+                               disk_backing_path=path)
+        page_shape = (4, 3)
+        dev_buf = np.zeros((2, *page_shape), np.float32)
+        host_buf = kv.host.make_pool_buffer(page_shape, np.float32)
+        disk_buf = kv.disk.make_pool_buffer(page_shape, np.float32)
+        if path is not None:
+            assert isinstance(disk_buf, np.memmap)
+
+        def copy(src_tier, src_page, dst_tier, dst_page,
+                 host_buf=host_buf, disk_buf=disk_buf):
+            if src_tier == HOST and dst_tier == DISK:
+                disk_buf[dst_page] = host_buf[src_page]
+            else:
+                host_buf[dst_page] = disk_buf[src_page]
+
+        kv.disk_copy = copy
+        # resume's h2d legs run through promote_copy in planning order so
+        # host transit frames can be reused by later stagings (the engine
+        # differential test drives the actual frame-reuse chain)
+        kv.promote_copy = (
+            lambda src, dst, host_buf=host_buf, dev_buf=dev_buf:
+            dev_buf.__setitem__(dst, host_buf[src]))
+        kv.alloc(1, 8)                         # 2 device pages
+        rng = np.random.default_rng(0)
+        want = []
+        for i, r in enumerate(kv.refs(1)):
+            dev_buf[r.page] = rng.normal(size=page_shape).astype(np.float32)
+            want.append(dev_buf[r.page].copy())
+        moves = kv.park(1)
+        assert moves is not None
+        for m in moves:                        # park's d2h legs (engine job)
+            host_buf[m.dst_page] = dev_buf[m.src_page]
+        assert len(kv.demote_to_disk(1, 99)) == 2
+        host_buf[:] = -1.0                     # clobber the host pool
+        dev_buf[:] = -2.0                      # and the device pool
+        back = kv.resume(1)                    # stages + promotes via hooks
+        assert back is not None and len(back) == 2
+        assert all(r.tier == DEVICE for r in kv.refs(1))
+        for i, r in enumerate(kv.refs(1)):
+            np.testing.assert_array_equal(dev_buf[r.page], want[i])
+        kv.check_invariants()
+
+
+def test_disk_traffic_has_own_latency_term():
+    """NVMe traffic never rides the PCIe copy stream: small disk queues
+    hide under the iteration, large ones bound it (max of the two
+    channels), zero reduces exactly to the two-tier model, and unmodeled
+    disk traffic (no bandwidth) is an error, not a free ride."""
+    times = LayerTimes(2e-3, 5e-3, 8, 1 << 20, 0.0)
+    base = iter_time_with_interval_kv(times, NO_OFFLOAD)
+    assert iter_time_with_interval_kv(times, NO_OFFLOAD, disk_in_bytes=1e3,
+                                      disk_bw=1e9) == base
+    big = iter_time_with_interval_kv(times, NO_OFFLOAD, disk_in_bytes=5e8,
+                                     disk_out_bytes=5e8, disk_bw=1e9,
+                                     disk_latency_s=1e-3)
+    assert big == pytest.approx(1e-3 + 1.0)
+    with pytest.raises(ValueError):
+        iter_time_with_interval_kv(times, NO_OFFLOAD, disk_out_bytes=1.0)
+    for i in (1, 2, 7, NO_OFFLOAD):
+        assert iter_time_with_interval_kv(times, i, 1e5, 2e5) == \
+            iter_time_with_interval_kv(times, i, 1e5, 2e5, disk_bw=5e9)
+
+
+def test_disk_pool_zero_is_two_tier():
+    """Disk disabled: the three-tier allocator is the two-tier allocator —
+    no disk pool pages, no NVMe counters, reclaim evicts like before."""
+    kv = TieredKVAllocator(2 * 16, 2 * 16, _pcfg(), scope="z",
+                           enable_dedup=True, host_prefix_cache_pages=4)
+    assert kv.disk.total_pages == 0
+    p = np.arange(16, dtype=np.int64)
+    kv.alloc(0, 16, prompt=p)
+    kv.free(0)
+    kv.alloc(1, 16, prompt=np.arange(100, 116, dtype=np.int64))
+    assert kv.reclaimable_disk_pages() == 0
+    assert kv.pending_disk_out_pages == 0      # evicted, nothing retired
+    assert kv.demote_to_disk(1, 99) == []
+    kv.check_invariants()
 
 
 # ---------------------------------------------------------------------------

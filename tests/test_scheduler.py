@@ -10,8 +10,8 @@ import pytest
 
 from repro.core.interval import NO_OFFLOAD, LayerTimes
 from repro.serving.kv_cache import PageConfig
-from repro.serving.kv_offload import (DEVICE, HOST, SwapScheduler,
-                                      TieredKVAllocator)
+from repro.serving.kv_offload import (DEVICE, DISK, HOST, LinkSpec,
+                                      SwapScheduler, TieredKVAllocator)
 from repro.serving.request import Request, State
 from repro.serving.scheduler import (ActiveInfo, IterationOutcome, Scheduler,
                                      SchedulerConfig, SchedulerView)
@@ -36,12 +36,16 @@ class StubRecord:
 
 
 def mk_sched(device_pages=8, host_pages=0, *, preemption=False,
-             chunk_tokens=0, cache_pages=0, max_batch=4, max_seq=64,
+             chunk_tokens=0, cache_pages=0, disk_pages=0, disk_bw=1e9,
+             disk_latency=1e-8, max_batch=4, max_seq=64,
              max_interval=NO_OFFLOAD, record=None):
     kv = TieredKVAllocator(device_pages * PB, host_pages * PB,
                            PageConfig(PAGE, bytes_per_token=BPT),
                            scope="sched-test", enable_dedup=cache_pages > 0,
-                           host_prefix_cache_pages=cache_pages)
+                           host_prefix_cache_pages=cache_pages,
+                           disk_bytes=disk_pages * PB,
+                           disk_link=LinkSpec(bw_bytes_s=disk_bw,
+                                              latency_s=disk_latency))
     swap = SwapScheduler(kv)
     sched = Scheduler(kv, swap, max_batch, max_seq,
                       record or StubRecord(),
@@ -284,6 +288,205 @@ def test_shared_prefix_frames_stay_for_active_sibling_on_park():
     assert all(r.tier == DEVICE for r in kv.refs(0))
     kv.check_invariants()
     del a0, a1
+
+
+def test_park_succeeds_only_through_cache_reclaim():
+    """Regression (preview/park parity): the host pool is fully occupied —
+    half by pure prefix-cache frames — so a raw-count precheck would refuse
+    the park, yet ``park`` absorbs it by reclaiming the cache. The netted
+    ``park_preview`` certifies it and the planner goes through with it."""
+    sched, kv, swap = mk_sched(device_pages=2, host_pages=4, preemption=True,
+                               cache_pages=4)
+    warm = mk_req(50, 16, 16)
+    assert kv.alloc(50, 32, prompt=warm.prompt) is not None  # 2 dev + 2 host
+    kv.free(50)                                  # 2 host frames -> cache
+    assert kv.reclaimable_host_pages() == 2
+    victim = activate(sched, kv, mk_req(0, 16, 16), 0)  # 2 dev + 2 host
+    assert kv.host.free_pages == 0               # host pool looks full
+    n_free, n_need = kv.park_preview(0, [])
+    assert n_free == 2 and n_need == 0           # ...but the park fits
+    blocked = mk_req(1, 4, 4, tpot=4.1e-6)
+    sched.submit(blocked)
+    plan = sched.plan(view(free_slots=[1, 2, 3], active=[victim]))
+    assert [p.req.rid for p in plan.preemptions] == [0]
+    assert [adm.req.rid for adm in plan.admissions] == [1]
+    assert kv.reclaimable_host_pages() == 0      # the park consumed the cache
+    assert len(kv.host_pages_of(0)) == 4
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Disk tier: park under host pressure, staged resume
+# ---------------------------------------------------------------------------
+
+def test_park_under_host_pressure_demotes_long_parked_to_disk():
+    """Three-tier policy: the host pool is full of an OLDER parked request's
+    pages. Host-only, the new park is refused (the blocked request waits);
+    with a disk tier, the long-parked pages retire to NVMe — oldest park
+    first — and the park + admission go through."""
+    for disk_pages in (0, 8):
+        sched, kv, swap = mk_sched(device_pages=2, host_pages=4,
+                                   preemption=True, disk_pages=disk_pages)
+        old = mk_req(5, 8, 8)
+        assert kv.alloc(5, 16) is not None       # 2 device pages
+        assert kv.park(5, []) is not None        # -> 2 host pages
+        old.state = State.PREEMPTED
+        sched.preempted.append(old)
+        # the victim's TPOT affords its own 2-page stream (4.256 us) but not
+        # the parked request's 2-page return on top (4.512 us), so the old
+        # request stays parked instead of resuming into the plan
+        victim = activate(sched, kv, mk_req(0, 16, 16, tpot=4.4e-6), 0)
+        assert kv.host.free_pages == 0
+        blocked = mk_req(1, 4, 4, tpot=4.1e-6)
+        sched.submit(blocked)
+        plan = sched.plan(view(free_slots=[1, 2, 3], active=[victim]))
+        assert not plan.resumes                  # the old request stays out
+        if disk_pages == 0:
+            assert [r.rid for r in sched.preempted] == [5]
+            assert not plan.preemptions and not plan.admissions
+            assert [r.rid for r in sched.queue] == [1]   # waits
+            assert victim.req.state == State.DECODING
+        else:
+            assert [r.rid for r in sched.preempted] == [5, 0]
+            assert [p.req.rid for p in plan.preemptions] == [0]
+            assert [adm.req.rid for adm in plan.admissions] == [1]
+            # the OLDEST parked request's pages went to NVMe, once each
+            assert len(kv.disk_pages_of(5)) == 2
+            assert sched.stats["disk_demotions"] == 2
+            assert swap.pending_disk_out_bytes() == 2 * PB
+            assert len(kv.host_pages_of(0)) == 4         # park landed
+        kv.check_invariants()
+
+
+def test_first_park_retires_own_spill_to_disk_under_host_pressure():
+    """Preempt to host, overflow to disk: when nothing is parked yet and
+    the host pool is full of the VICTIM's own spilled pages, those pages
+    are cold the moment it parks — they retire to NVMe so the park can
+    land. Host-only, the park is refused and the blocked request waits."""
+    for disk_pages in (0, 8):
+        sched, kv, swap = mk_sched(device_pages=2, host_pages=2,
+                                   preemption=True, disk_pages=disk_pages)
+        victim = activate(sched, kv, mk_req(0, 16, 16), 0)  # 2 dev + 2 host
+        assert kv.host.free_pages == 0
+        blocked = mk_req(1, 4, 4, tpot=4.1e-6)
+        sched.submit(blocked)
+        plan = sched.plan(view(free_slots=[1, 2, 3], active=[victim]))
+        if disk_pages == 0:
+            assert not plan.preemptions and not plan.admissions
+            assert [r.rid for r in sched.queue] == [1]
+        else:
+            assert [p.req.rid for p in plan.preemptions] == [0]
+            assert [adm.req.rid for adm in plan.admissions] == [1]
+            assert len(kv.disk_pages_of(0)) == 2     # own spill retired
+            assert len(kv.host_pages_of(0)) == 2     # park landed there
+            assert sched.stats["disk_demotions"] == 2
+        kv.check_invariants()
+
+
+def test_spill_admission_demotion_spares_its_own_dedup_hits():
+    """Regression: making host room for a spill admission demotes parked
+    requests' pages to disk — but the admission's dedup-preview hits may BE
+    such pages. Moving them would leave the certified preview holding
+    dangling frame references (alloc would crash sharing a freed page), so
+    they are pinned while everything else retires."""
+    sched, kv, swap = mk_sched(device_pages=2, host_pages=4, preemption=True,
+                               disk_pages=8, cache_pages=1)
+    parked = mk_req(5, 16, 16)
+    assert kv.alloc(5, 32, prompt=parked.prompt) is not None  # 2 host + 2 dev
+    assert kv.park(5, []) is not None            # host now full (4 pages)
+    parked.state = State.PREEMPTED
+    sched.preempted.append(parked)
+    # an active request occupies the device frames the park freed
+    a = activate(sched, kv, mk_req(2, 8, 8), 0)
+    assert kv.host.free_pages == 0 and kv.device.free_pages == 0
+    # same prompt: hits the parked request's 2 host frames and needs 2
+    # fresh host pages -> the shortfall demotes the parked set, which must
+    # spare exactly the hit frames. Pre-fix, the demotion moved a hit
+    # frame (its index entry following to disk) and alloc then either
+    # shared a freed host page (ValueError) or silently cross-mapped a
+    # re-claimed fresh frame as both a hit and a fresh page.
+    joiner = mk_req(1, 16, 16)
+    joiner.prompt = parked.prompt.copy()
+    assert sched._try_admit_mem(joiner, 32, [a])
+    assert kv.dedup_hit_pages(1) == [0, 1]
+    # the hit positions still share the parked request's HOST frames —
+    # the demotion retired its other (non-hit) pages instead
+    assert kv.refs(1)[:2] == kv.refs(5)[:2]
+    assert all(r.tier == HOST for r in kv.refs(1)[:2])
+    assert all(kv.refcount(r) >= 2 for r in kv.refs(1)[:2])
+    assert [r.tier for r in kv.refs(5)[2:]] == [DISK, DISK]
+    kv.check_invariants()
+
+
+def test_free_host_via_disk_orders_oldest_or_youngest_first():
+    """Park/admission pressure retires the LONGEST-parked request's pages
+    (it resumes last anyway); a resume staging retires the YOUNGEST-parked
+    (demoting the next-to-resume would bounce its pages straight back)."""
+    for youngest, victim_rid in ((False, 10), (True, 11)):
+        sched, kv, swap = mk_sched(device_pages=4, host_pages=4,
+                                   preemption=True, disk_pages=8)
+        for rid in (10, 11):                     # 10 parks first (oldest)
+            r = mk_req(rid, 8, 8)
+            assert kv.alloc(rid, 16) is not None
+            assert kv.park(rid, []) is not None
+            r.state = State.PREEMPTED
+            sched.preempted.append(r)
+        freed = sched._free_host_via_disk(2, [], youngest_first=youngest)
+        assert freed == 2
+        assert len(kv.disk_pages_of(victim_rid)) == 2
+        other = 21 - victim_rid
+        assert kv.disk_pages_of(other) == []
+        kv.check_invariants()
+
+
+def test_resume_stages_disk_pages_through_host_to_device():
+    sched, kv, swap = mk_sched(device_pages=2, host_pages=2, preemption=True,
+                               disk_pages=8)
+    old = mk_req(5, 8, 8)
+    assert kv.alloc(5, 16) is not None
+    assert kv.park(5, []) is not None
+    assert len(kv.demote_to_disk(5, 99)) == 2
+    old.state = State.PREEMPTED
+    sched.preempted.append(old)
+    swap.plan_iteration([])                      # drain pending NVMe bytes
+    plan = sched.plan(view(free_slots=[0, 1, 2, 3], active=[]))
+    assert [r.req.rid for r in plan.resumes] == [5]
+    # staged disk -> host (NVMe reads) then promoted host -> device
+    assert kv.disk_pages_of(5) == []
+    assert all(r.tier == DEVICE for r in kv.refs(5))
+    assert len(plan.resumes[0].migrations) == 2
+    assert sched.stats["disk_stagings"] == 2
+    assert swap.pending_disk_in_bytes() == 2 * PB
+    assert swap.pending_in_bytes() == 2 * PB     # PCIe leg charged too
+    kv.check_invariants()
+
+
+def test_resume_waits_for_nvme_headroom_with_tight_sibling():
+    """The NVMe staging of a disk-parked request has its OWN latency term:
+    with a slow disk link, a resume whose PCIe traffic fits every TPOT is
+    still refused because the disk queue would outlast the bound — and the
+    identical scenario on a fast disk link resumes. That is the "disk
+    traffic must never ride the PCIe budget unmodeled" property at the
+    policy level."""
+    for disk_bw, resumes in ((1e6, False), (1e9, True)):
+        sched, kv, swap = mk_sched(device_pages=16, host_pages=16,
+                                   preemption=True, disk_pages=64,
+                                   disk_bw=disk_bw)
+        parked = mk_req(0, 32, 32)               # 8 pages
+        assert kv.alloc(0, 64) is not None       # all device
+        assert kv.park(0, []) is not None        # -> 8 host pages
+        assert len(kv.demote_to_disk(0, 99)) == 8
+        swap.plan_iteration([])                  # forget the demotion bytes
+        parked.state = State.PREEMPTED
+        sched.preempted.append(parked)
+        # sibling: PCIe worst case of the resume is 8 promoted pages
+        # (~1 us on the 1e9 B/s link) over the 4 us base — affordable at
+        # 100 us TPOT. The NVMe staging of the same 8 pages costs ~1 us at
+        # 1e9 B/s (resume fires) but ~1 ms at 1e6 B/s (resume must wait).
+        sib = activate(sched, kv, mk_req(1, 8, 8, tpot=1e-4), 0)
+        plan = sched.plan(view(free_slots=[1, 2, 3], active=[sib]))
+        assert bool(plan.resumes) == resumes, f"disk_bw={disk_bw}"
+        kv.check_invariants()
 
 
 # ---------------------------------------------------------------------------
