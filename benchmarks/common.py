@@ -113,6 +113,25 @@ def interval_str(i: int) -> str:
     return "inf" if i >= NO_OFFLOAD else str(i)
 
 
+def capture_trace(eng, perfetto_path: str | None = None) -> dict:
+    """Audit a finished engine's iteration trace and summarize it for a
+    benchmark report. Optionally exports the Perfetto timeline alongside.
+
+    Returns {audit_ok, audit_checks, violations, totals} — benches fold
+    audit_ok into a Claim so a conservation regression fails the figure
+    that exercised it, not just the unit suite.
+    """
+    report = eng.trace.audit()
+    if perfetto_path is not None:
+        eng.trace.write_perfetto(perfetto_path)
+    return {
+        "audit_ok": report.ok,
+        "audit_checks": report.checks,
+        "violations": report.violations[:10],
+        "totals": eng.trace.totals(),
+    }
+
+
 def throughput_tok_s(batch: int, iter_s: float) -> float:
     return batch / iter_s if iter_s > 0 else 0.0
 

@@ -36,6 +36,7 @@ from repro.models.model import build_model
 from repro.models.transformer import pattern_info
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Request
+from repro.serving.telemetry import summarize_latency
 
 PAGE = 8
 MAX_SEQ = 48
@@ -104,8 +105,7 @@ def _run(preemption: bool, n_shorts: int) -> dict:
     eng.kv.check_invariants()
     per = [r.metrics() for r in eng.finished]
     tokens = sum(m["tokens"] for m in per)
-    delays = [m["queue_delay_s"] for m in per
-              if m["queue_delay_s"] is not None]
+    delays = [m["queue_delay_s"] for m in per]
     return {
         "finished": len(eng.finished),
         "tokens": tokens,
@@ -115,8 +115,7 @@ def _run(preemption: bool, n_shorts: int) -> dict:
         "ttft_violations": sum(0 if m["ttft_ok"] else 1 for m in per),
         "preemptions": eng.scheduler.stats["preemptions"],
         "resumes": eng.scheduler.stats["resumes"],
-        "queue_delay_p99_s": float(np.quantile(delays, 0.99))
-        if delays else 0.0,
+        "queue_delay_p99_s": summarize_latency(delays)["p99_s"],
         "gen_tokens": {r.rid: list(r.generated) for r in eng.finished},
         "preempted_rids": sorted(r.rid for r in eng.finished
                                  if r.preempt_count > 0),

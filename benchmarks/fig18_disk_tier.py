@@ -25,7 +25,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import BenchResult, Claim
+from benchmarks.common import BenchResult, Claim, capture_trace
 from repro.configs import get_config
 from repro.configs.reduced import reduce_config
 from repro.core import costs
@@ -37,6 +37,7 @@ from repro.models.model import build_model
 from repro.models.transformer import pattern_info
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Request
+from repro.serving.telemetry import summarize_latency
 
 PAGE = 8
 MAX_SEQ = 48
@@ -93,7 +94,8 @@ def _trace(eng: ServingEngine, n_shorts: int):
     return s0, long_req, shorts
 
 
-def _run(disk: bool, n_shorts: int) -> dict:
+def _run(disk: bool, n_shorts: int,
+         perfetto_path: str | None = None) -> dict:
     eng = _mk_engine(f"fig18-{disk}-{n_shorts}", disk)
     s0, long_req, shorts = _trace(eng, n_shorts)
     eng.submit(s0)
@@ -109,9 +111,9 @@ def _run(disk: bool, n_shorts: int) -> dict:
     eng.kv.check_invariants()
     per = [r.metrics() for r in eng.finished]
     tokens = sum(m["tokens"] for m in per)
-    delays = [m["queue_delay_s"] for m in per
-              if m["queue_delay_s"] is not None]
+    delays = [m["queue_delay_s"] for m in per]
     return {
+        "trace": capture_trace(eng, perfetto_path=perfetto_path),
         "finished": len(eng.finished),
         "tokens": tokens,
         "wall_s": eng.clock_s,
@@ -122,8 +124,7 @@ def _run(disk: bool, n_shorts: int) -> dict:
         "disk_demotions": eng.scheduler.stats["disk_demotions"],
         "disk_stagings": eng.scheduler.stats["disk_stagings"],
         "disk_peak_pages": eng.disk_kv_peak_pages,
-        "queue_delay_p99_s": float(np.quantile(delays, 0.99))
-        if delays else 0.0,
+        "queue_delay_p99_s": summarize_latency(delays)["p99_s"],
         "gen_tokens": {r.rid: list(r.generated) for r in eng.finished},
     }
 
@@ -131,9 +132,19 @@ def _run(disk: bool, n_shorts: int) -> dict:
 def run() -> BenchResult:
     rows = []
     zero_viol = more_parked = tokens_exact = delay_down = True
+    audits_ok = True
+    audit_checks = 0
+    os.makedirs("reports", exist_ok=True)
     for n in BURST_SIZES:
         host = _run(disk=False, n_shorts=n)
-        disk = _run(disk=True, n_shorts=n)
+        # the largest disk-enabled burst doubles as the exported Perfetto
+        # timeline (ROADMAP observability acceptance artifact)
+        disk = _run(disk=True, n_shorts=n,
+                    perfetto_path="reports/TRACE_disk_tier_perfetto.json"
+                    if n == BURST_SIZES[-1] else None)
+        for side in (host, disk):
+            audits_ok &= side["trace"]["audit_ok"]
+            audit_checks += side["trace"]["audit_checks"]
         zero_viol &= (host["tpot_violations"] + disk["tpot_violations"]
                       + host["ttft_violations"] + disk["ttft_violations"]) == 0
         more_parked &= (disk["preemptions"] > host["preemptions"]
@@ -177,9 +188,13 @@ def run() -> BenchResult:
               "burst serves at full batch while the victim sits on NVMe",
               "p99 + wall strictly lower with disk at every burst size"
               if delay_down else "violated", ok=delay_down),
+        Claim("fig18 every run passes the trace-conservation audit",
+              "per-tier bytes charged == allocator moves; dt <= certified",
+              f"{audit_checks} checks clean across "
+              f"{2 * len(BURST_SIZES)} runs" if audits_ok
+              else "AUDIT VIOLATIONS", ok=audits_ok),
     ]
     res = BenchResult("fig18_disk_tier", rows, claims)
-    os.makedirs("reports", exist_ok=True)
     with open("reports/BENCH_disk_tier.json", "w") as f:
         json.dump(res.to_json(), f, indent=1)
     return res

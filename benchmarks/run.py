@@ -1,6 +1,8 @@
 """Benchmark driver: one module per paper table/figure + the roofline
 analysis. Prints each benchmark's rows (CSV) and paper-claim checks, and
-writes reports/bench_results.json.
+writes reports/bench_results.json plus one reports/BENCH_<name>.json per
+module (the fig/table ordinal stripped), so every figure's numbers land
+as a standalone artifact whether or not the module writes its own.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig9 ...]
 """
@@ -10,6 +12,7 @@ import argparse
 import importlib
 import json
 import os
+import re
 import time
 import traceback
 
@@ -42,6 +45,7 @@ def main(argv: list[str] | None = None) -> None:
     results = []
     n_claims = n_pass = 0
     t00 = time.time()
+    os.makedirs("reports", exist_ok=True)
     for name in selected:
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
@@ -56,11 +60,13 @@ def main(argv: list[str] | None = None) -> None:
         print(res.render())
         print(f"  ({dt:.1f}s)\n")
         results.append(res.to_json())
+        stem = re.sub(r"^(fig|table)\d+_", "", res.name)
+        with open(f"reports/BENCH_{stem}.json", "w") as f:
+            json.dump(res.to_json(), f, indent=1)
         for c in res.claims:
             n_claims += 1
             n_pass += int(c.ok)
 
-    os.makedirs("reports", exist_ok=True)
     with open("reports/bench_results.json", "w") as f:
         json.dump(results, f, indent=1)
     print(f"benchmarks: {len(results)} modules, {n_pass}/{n_claims} paper "

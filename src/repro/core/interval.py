@@ -131,6 +131,69 @@ def disk_transfer_seconds(disk_in_bytes: float, disk_out_bytes: float,
     return disk_latency_s + total / disk_bw
 
 
+@dataclasses.dataclass(frozen=True)
+class IterTimeBreakdown:
+    """One iteration's modeled latency, decomposed by what the clock was
+    charged for (the telemetry plane records these per iteration instead of
+    the folded ``total_s`` float).
+
+    Identities (the trace auditor machine-checks them):
+      ``total_s == max(pcie_s, disk_s)`` exactly, and
+      ``pcie_s == kv_in_s + compute_s + stall_s`` up to float reassociation.
+    """
+    total_s: float        # what iter_time_with_interval_kv returns
+    pcie_s: float         # PCIe copy-stream schedule incl. all compute
+    disk_s: float         # NVMe channel drain (own term, never rides PCIe)
+    compute_s: float      # num_layers * t_compute + t_rest (no-offload time)
+    kv_in_s: float        # h2d KV copy gating layer-0 compute
+    kv_out_s: float       # d2h write-back occupancy of the copy stream
+    stall_s: float        # compute stalled on queued weight prefetches
+
+
+def iter_time_breakdown_kv(times: LayerTimes, interval: int,
+                           kv_in_bytes: float = 0.0,
+                           kv_out_bytes: float = 0.0,
+                           link_bw: float | None = None,
+                           disk_in_bytes: float = 0.0,
+                           disk_out_bytes: float = 0.0,
+                           disk_bw: float = 0.0,
+                           disk_latency_s: float = 0.0) -> IterTimeBreakdown:
+    """``iter_time_with_interval_kv`` with the latency decomposed into its
+    compute / link-queue / disk-queue terms. ``total_s`` is bit-identical
+    to the folded form — the wrapper below delegates here, so the two can
+    never drift."""
+    t_disk = disk_transfer_seconds(disk_in_bytes, disk_out_bytes,
+                                   disk_bw, disk_latency_s)
+    t_kv_in = kv_transfer_seconds(times, kv_in_bytes, link_bw)
+    t_kv_out = kv_transfer_seconds(times, kv_out_bytes, link_bw)
+    compute = times.t_iter_no_offload_s
+    if interval >= times.num_layers + 1 or interval >= NO_OFFLOAD:
+        # no weight prefetches: the d2h write-back overlaps compute without
+        # queueing anything behind it (kv_out_s is occupancy, not delay)
+        pcie = t_kv_in + times.t_iter_no_offload_s
+        return IterTimeBreakdown(total_s=max(pcie, t_disk), pcie_s=pcie,
+                                 disk_s=t_disk, compute_s=compute,
+                                 kv_in_s=t_kv_in, kv_out_s=t_kv_out,
+                                 stall_s=pcie - t_kv_in - compute)
+    i, tc, tt = interval, times.t_compute_s, times.t_transfer_s
+    groups = times.num_layers // i
+    t = t_kv_in
+    copy_free = t_kv_in + t_kv_out
+    for g in range(groups):
+        group_start = t
+        xfer_start = max(group_start, copy_free)
+        xfer_done = xfer_start + tt
+        copy_free = xfer_done
+        t = group_start + (i - 1) * tc          # resident layers
+        t = max(t, xfer_done) + tc              # offloaded layer
+    t += (times.num_layers - groups * i) * tc   # remainder layers (resident)
+    pcie = t + times.t_rest_s
+    return IterTimeBreakdown(total_s=max(pcie, t_disk), pcie_s=pcie,
+                             disk_s=t_disk, compute_s=compute,
+                             kv_in_s=t_kv_in, kv_out_s=t_kv_out,
+                             stall_s=pcie - t_kv_in - compute)
+
+
 def iter_time_with_interval_kv(times: LayerTimes, interval: int,
                                kv_in_bytes: float = 0.0,
                                kv_out_bytes: float = 0.0,
@@ -163,26 +226,14 @@ def iter_time_with_interval_kv(times: LayerTimes, interval: int,
     ends when both channels drain, ``max(t_pcie, t_disk)`` — disk bytes get
     their own term instead of silently riding (or being hidden from) the
     PCIe budget the TPOT math certifies. With no disk traffic this reduces
-    exactly to the two-tier model."""
-    t_disk = disk_transfer_seconds(disk_in_bytes, disk_out_bytes,
-                                   disk_bw, disk_latency_s)
-    t_kv_in = kv_transfer_seconds(times, kv_in_bytes, link_bw)
-    t_kv_out = kv_transfer_seconds(times, kv_out_bytes, link_bw)
-    if interval >= times.num_layers + 1 or interval >= NO_OFFLOAD:
-        return max(t_kv_in + times.t_iter_no_offload_s, t_disk)
-    i, tc, tt = interval, times.t_compute_s, times.t_transfer_s
-    groups = times.num_layers // i
-    t = t_kv_in
-    copy_free = t_kv_in + t_kv_out
-    for g in range(groups):
-        group_start = t
-        xfer_start = max(group_start, copy_free)
-        xfer_done = xfer_start + tt
-        copy_free = xfer_done
-        t = group_start + (i - 1) * tc          # resident layers
-        t = max(t, xfer_done) + tc              # offloaded layer
-    t += (times.num_layers - groups * i) * tc   # remainder layers (resident)
-    return max(t + times.t_rest_s, t_disk)
+    exactly to the two-tier model.
+
+    ``iter_time_breakdown_kv`` exposes the same latency decomposed into
+    compute / link-queue / disk-queue terms (what the telemetry plane
+    records); this wrapper returns its ``total_s``."""
+    return iter_time_breakdown_kv(
+        times, interval, kv_in_bytes, kv_out_bytes, link_bw,
+        disk_in_bytes, disk_out_bytes, disk_bw, disk_latency_s).total_s
 
 
 def min_feasible_interval(times: LayerTimes, slo_s: float) -> int:

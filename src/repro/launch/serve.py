@@ -81,8 +81,21 @@ def main(argv=None) -> dict:
                          "prefill at admission)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="Poisson arrival rate in requests/s; crank it up "
+                         "to replay the stream as a burst and build queue "
+                         "pressure (modeled iterations run in microseconds)")
     ap.add_argument("--peer", action="store_true",
                     help="second engine on the same host link (coordinator)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the iteration trace as Chrome trace-event "
+                         "JSON (load in Perfetto / chrome://tracing); also "
+                         "runs the conservation auditor and exits nonzero "
+                         "on any invariant violation")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the full structured trace (repro-trace/v1 "
+                         "schema: per-iteration records, request events, "
+                         "counter footer, audit report) as JSON")
     args = ap.parse_args(argv)
     if args.disk_kv_gb > 0 and args.host_kv_gb <= 0:
         ap.error("--disk-kv-gb requires a host tier to stage through: "
@@ -110,7 +123,8 @@ def main(argv=None) -> dict:
     stream = request_stream(DataConfig(seed=0, mean_prompt_len=12,
                                        mean_output_len=8), args.requests,
                             ttft_slo_s=args.ttft_slo_ms / 1e3,
-                            tpot_slo_s=args.tpot_slo_ms / 1e3)
+                            tpot_slo_s=args.tpot_slo_ms / 1e3,
+                            rate_per_s=args.arrival_rate)
     common = rng.integers(0, cfg.vocab_size,
                           int(args.shared_prefix_frac
                               * (args.max_seq // 2))).astype(np.int32)
@@ -146,7 +160,18 @@ def main(argv=None) -> dict:
     # preemptions / resumes / chunked_prefill_iters / queue_delay_p99_s come
     # from engine.run (scheduler IterationOutcome stats) and are already in
     # the summary dict above
+    report = None
+    if args.trace_out or args.metrics_out:
+        report = eng.trace.audit()
+        summary["audit"] = {"ok": report.ok, "checks": report.checks,
+                            "violations": report.violations[:20]}
+        if args.trace_out:
+            eng.trace.write_perfetto(args.trace_out)
+        if args.metrics_out:
+            eng.trace.write_trace(args.metrics_out, audit=report)
     print(json.dumps(summary, indent=1))
+    if report is not None and not report.ok:
+        raise SystemExit(3)
     return out
 
 

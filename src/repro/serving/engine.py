@@ -53,7 +53,8 @@ from repro.core.coordinator import (InstanceState, coordinate,
                                     max_interval_for_memory)
 from repro.core.hardware import HardwareModel
 from repro.core.interval import (LayerTimes, NO_OFFLOAD, OffloadPlan,
-                                 iter_time_with_interval_kv)
+                                 iter_time_breakdown_kv,
+                                 iter_time_with_interval_kv, link_bandwidth)
 from repro.core.memory_manager import (OffloadRuntime, merge_stacked,
                                        split_model_params)
 from repro.core.record import PerformanceRecord
@@ -68,6 +69,8 @@ from repro.serving.scheduler import (ActiveInfo, IterationOutcome,
                                      IterationPlan, PlannedPreemption,
                                      PlannedResume, PrefillChunk, Scheduler,
                                      SchedulerConfig, SchedulerView)
+from repro.serving.telemetry import (IterationRecord, SlotGauge,
+                                     TraceRecorder, summarize_latency)
 
 
 @dataclasses.dataclass
@@ -224,6 +227,13 @@ class ServingEngine:
         self.prefill_log: list[tuple[Request, int, np.ndarray]] = []
         self.last_decode: dict | None = None
 
+        # iteration-level telemetry plane (serving.telemetry): always on —
+        # records are tiny and the differential suites audit every run
+        self.trace = TraceRecorder(name, ecfg.max_batch, self.kv.page_bytes)
+        self.trace._footer_fn = self._trace_footer
+        self.cow_in_bytes_total = 0.0
+        self.cow_out_bytes_total = 0.0
+
     # ------------------------------------------------------------------ plan --
     @property
     def allocator(self) -> PagedKVAllocator:
@@ -351,6 +361,9 @@ class ServingEngine:
         so its time rides the decode iteration."""
         plan = self.scheduler.plan(self._view())
         self.rejected.extend(plan.rejections)
+        for req in plan.rejections:
+            self.trace.event("reject", req.rid, self.clock_s,
+                             reason=req.reject_reason)
         # data-plane order MUST follow planning order: resumes were planned
         # before preemptions, so a park's host destination may be the very
         # slot a resume promotion vacated — the resume must read its host
@@ -359,6 +372,9 @@ class ServingEngine:
         self._apply_preemptions(plan.preemptions)
         for adm in plan.admissions:
             adm.req.admitted_s = self.clock_s
+            self.trace.event("admit", adm.req.rid, self.clock_s,
+                             slot=adm.slot, chunked=adm.chunked,
+                             certified_ttft_s=adm.certified_ttft_s)
             if adm.chunked:
                 adm.req.state = State.PREFILLING
                 adm.req.slot = adm.slot
@@ -387,6 +403,7 @@ class ServingEngine:
             req.state = State.PREEMPTED
             req.preempt_count += 1
             req.parked_at_s = self.clock_s
+            self.trace.event("park", req.rid, self.clock_s, slot=slot)
             req.next_token = int(self.tokens[slot])
             req.resume_pos = int(self.pos[slot])
             req.slot = -1
@@ -413,6 +430,7 @@ class ServingEngine:
             if req.parked_at_s is not None:
                 req.preempt_stall_s += self.clock_s - req.parked_at_s
                 req.parked_at_s = None
+            self.trace.event("resume", req.rid, self.clock_s, slot=slot)
             req.slot = slot
             self.slot_req[slot] = req
             self.tokens[slot] = req.next_token
@@ -454,6 +472,30 @@ class ServingEngine:
         self.pool = ops.copy_pages_from_host(
             self.host_pool, [src_host_page], self.pool, [dst_dev_frame])
 
+    def _trace_footer(self) -> dict:
+        """Counters snapshot the trace auditor cross-checks whole-trace
+        conservation against (allocator + swap-scheduler cumulative totals
+        minus what is still pending at export time)."""
+        return {
+            "page_bytes": self.kv.page_bytes,
+            "clock_s": self.clock_s,
+            "disk_in_pages_total": self.kv.disk_in_pages_total,
+            "disk_out_pages_total": self.kv.disk_out_pages_total,
+            "pending_disk_in_pages": self.kv.pending_disk_in_pages,
+            "pending_disk_out_pages": self.kv.pending_disk_out_pages,
+            "noted_in_pages_total": self.swap.in_pages_noted_total,
+            "noted_out_pages_total": self.swap.out_pages_noted_total,
+            "pending_in_pages": self.swap._pending_in_pages,
+            "pending_out_pages": self.swap._pending_out_pages,
+            "promoted_pages_total": self.swap.promoted_pages_total,
+            "cow_in_bytes_total": self.cow_in_bytes_total,
+            "cow_out_bytes_total": self.cow_out_bytes_total,
+            "n_finished": len(self.finished),
+            "n_rejected": len(self.rejected),
+            "n_active": sum(1 for r in self.slot_req if r is not None),
+            "n_parked": len(self.scheduler.preempted),
+        }
+
     def _modeled_ttft(self, req: Request, host_spill_bytes: float) -> float:
         """Prefill latency: the spilled KV prefix is written back (d2h)
         through the link the weight prefetches share."""
@@ -494,6 +536,8 @@ class ServingEngine:
         ttft = self._modeled_ttft(req, self.kv.spill_writeback_bytes_of(
             req.rid))
         req.ttft_s = ttft
+        self.trace.event("prefill", req.rid, self.clock_s, slot=slot,
+                         dur_s=ttft)
         self.clock_s += ttft
 
         logits_np = np.asarray(logits[0], np.float32)
@@ -508,6 +552,8 @@ class ServingEngine:
             self.finished.append(req)
             self.slot_req[slot] = None
             self.kv.free(req.rid)
+            self.trace.event("finish", req.rid, self.clock_s, slot=slot,
+                             at_prefill=True)
             return
         self.tokens[slot] = tok
         self.pos[slot] = req.prompt_len
@@ -598,10 +644,18 @@ class ServingEngine:
                 if i not in deduped and i < len(refs)
                 and refs[i].tier == HOST)
             if n_host_written:
+                # noted AFTER the scheduler stamped certified_dt: these
+                # bytes surface as kv_out in excess of the plan's certified
+                # total, which the trace auditor allows as serialization
+                # slack on top of the certified bound
                 self.swap.note_demotions(n_host_written)
             req.prefill_pos = ch.end
-            t += max(self._prefill_seconds(ch.end)
-                     - self._prefill_seconds(ch.start), 0.0)
+            inc = max(self._prefill_seconds(ch.end)
+                      - self._prefill_seconds(ch.start), 0.0)
+            t += inc
+            self.trace.event("chunk", req.rid, self.clock_s, slot=ch.slot,
+                             dur_s=inc, start=ch.start, end=ch.end,
+                             final=ch.final)
             if ch.final:
                 finals.append((ch, np.asarray(logits[0], np.float32)))
         return t, finals
@@ -629,6 +683,8 @@ class ServingEngine:
                 self.slot_req[ch.slot] = None
                 self.kv.free(req.rid)
                 done.append(req.rid)
+                self.trace.event("finish", req.rid, self.clock_s,
+                                 slot=ch.slot, at_prefill=True)
                 continue
             self.tokens[ch.slot] = tok
             self.pos[ch.slot] = req.prompt_len
@@ -742,6 +798,7 @@ class ServingEngine:
         outcome to the scheduler."""
         self.prefill_log = []
         self.last_decode = None
+        t_start = self.clock_s
         if peers is not None and link_bw is not None:
             insts = [self.instance_state()] + [p.instance_state()
                                                for p in peers]
@@ -780,24 +837,42 @@ class ServingEngine:
             if plan.chunks:
                 self.clock_s += chunk_s
                 done = self._finish_chunks(plan.chunks, finals, chunk_s)
+                dt_rec, finished = chunk_s, prefill_finished + done
                 self.scheduler.note_outcome(IterationOutcome(
-                    dt_s=chunk_s, finished_rids=prefill_finished + done,
+                    dt_s=chunk_s, finished_rids=finished,
                     tokens_emitted=prefill_tokens + len(finals),
                     chunks_run=len(plan.chunks),
                     preemptions=len(plan.preemptions),
                     resumes=len(plan.resumes)))
             else:
+                dt_rec, finished = 0.0, prefill_finished
                 self.scheduler.note_outcome(IterationOutcome(
                     dt_s=0.0, finished_rids=prefill_finished,
                     tokens_emitted=prefill_tokens,
                     preemptions=len(plan.preemptions),
                     resumes=len(plan.resumes)))
+            self.trace.add_iteration(IterationRecord(
+                index=len(self.trace.iterations), t_start_s=t_start,
+                t_end_s=self.clock_s, dt_s=dt_rec, interval=self.interval,
+                decode_batch=0, n_chunks=len(plan.chunks),
+                admitted=[a.req.rid for a in plan.admissions],
+                rejected=[r.rid for r in plan.rejections],
+                parked=[p.req.rid for p in plan.preemptions],
+                resumed=[r.req.rid for r in plan.resumes],
+                finished=finished, chunk_s=dt_rec,
+                certified_dt_s=plan.certified_dt_s,
+                occupancy=self.kv.occupancy(),
+                reserve_pages=len(self.kv._reserve)))
             return
         # KV tier activity of this iteration: promote host pages into freed
         # device frames, stream the rest in for attention, write back any
         # pending demotions (incl. preemption parks) and charge resume
         # promotions. Promotion is never a traffic spike: a promoted page's
         # one-time copy replaces its recurring streamed copy.
+        pend_in_b = self.swap.pending_in_bytes()
+        pend_out_b = self.swap.pending_out_bytes()
+        pdisk_in_pages = self.kv.pending_disk_in_pages
+        pdisk_out_pages = self.kv.pending_disk_out_pages
         sp = self.swap.plan_iteration(self._active_rids())
         if sp.promotions:
             assert self.host_pool is not None
@@ -816,6 +891,16 @@ class ServingEngine:
             sp.streamed_bytes = streamed_now
         sp.kv_in_bytes += cow_in
         sp.kv_out_bytes += cow_out
+        self.cow_in_bytes_total += cow_in
+        self.cow_out_bytes_total += cow_out
+        # bytes the scheduler could not have certified at plan time: any
+        # excess of actual PCIe traffic over the totals the certified-dt
+        # stamp was derived from. This uniformly covers COW copies (and the
+        # stream growth they cause), chunk host-spill write-backs, and pages
+        # a same-plan one-shot prefill spilled to host that now stream into
+        # this very decode.
+        uncert_in = max(sp.kv_in_bytes - plan.certified_kv_in_bytes, 0.0)
+        uncert_out = max(sp.kv_out_bytes - plan.certified_kv_out_bytes, 0.0)
         self._rt(self.interval)
         bt, cl, wf, wo, stream_src, stream_dst, writeback = \
             self._build_iteration_tables()
@@ -845,13 +930,18 @@ class ServingEngine:
         # adds to the latency every active request pays this step; NVMe
         # traffic (park-to-disk demotions, resume stagings, cache revivals)
         # gets the disk link's own term — it never rides the PCIe budget
-        dt = iter_time_with_interval_kv(
+        bd = iter_time_breakdown_kv(
             times, self.interval, sp.kv_in_bytes, sp.kv_out_bytes,
             disk_in_bytes=sp.disk_in_bytes,
             disk_out_bytes=sp.disk_out_bytes,
             disk_bw=self.kv.disk_link.bw_bytes_s,
-            disk_latency_s=self.kv.disk_link.latency_s) + chunk_s
+            disk_latency_s=self.kv.disk_link.latency_s)
+        dt = bd.total_s + chunk_s
         self.clock_s += dt
+        decode_reqs = [(slot, self.slot_req[slot])
+                       for slot in range(self.ecfg.max_batch)
+                       if self.active[slot]
+                       and self.slot_req[slot] is not None]
 
         finished_rids: list[int] = list(prefill_finished)
         tokens_out = prefill_tokens
@@ -874,12 +964,45 @@ class ServingEngine:
                 self.slot_req[slot] = None
                 self.kv.free(req.rid)
                 finished_rids.append(req.rid)
+                self.trace.event("finish", req.rid, self.clock_s, slot=slot)
         finished_rids += self._finish_chunks(plan.chunks, finals, dt)
         tokens_out += len(finals)
         self.scheduler.note_outcome(IterationOutcome(
             dt_s=dt, finished_rids=finished_rids, tokens_emitted=tokens_out,
             chunks_run=len(plan.chunks), preemptions=len(plan.preemptions),
             resumes=len(plan.resumes)))
+        self.trace.add_iteration(IterationRecord(
+            index=len(self.trace.iterations), t_start_s=t_start,
+            t_end_s=self.clock_s, dt_s=dt, interval=self.interval,
+            decode_batch=len(decode_reqs), n_chunks=len(plan.chunks),
+            admitted=[a.req.rid for a in plan.admissions],
+            rejected=[r.rid for r in plan.rejections],
+            parked=[p.req.rid for p in plan.preemptions],
+            resumed=[r.req.rid for r in plan.resumes],
+            finished=finished_rids,
+            kv_in_bytes=sp.kv_in_bytes, kv_out_bytes=sp.kv_out_bytes,
+            streamed_bytes=sp.streamed_bytes,
+            promoted_bytes=len(sp.promotions) * self.kv.page_bytes,
+            pending_in_bytes=pend_in_b, pending_out_bytes=pend_out_b,
+            cow_in_bytes=cow_in, cow_out_bytes=cow_out,
+            uncertified_in_bytes=uncert_in,
+            uncertified_out_bytes=uncert_out,
+            certified_kv_in_bytes=plan.certified_kv_in_bytes,
+            certified_kv_out_bytes=plan.certified_kv_out_bytes,
+            disk_in_bytes=sp.disk_in_bytes,
+            disk_out_bytes=sp.disk_out_bytes,
+            disk_in_pages=pdisk_in_pages, disk_out_pages=pdisk_out_pages,
+            compute_s=bd.compute_s, kv_in_s=bd.kv_in_s,
+            kv_out_s=bd.kv_out_s, stall_s=bd.stall_s, pcie_s=bd.pcie_s,
+            disk_s=bd.disk_s, chunk_s=chunk_s, model_dt_s=bd.total_s,
+            link_bw_bytes_s=link_bandwidth(times),
+            certified_dt_s=plan.certified_dt_s,
+            occupancy=self.kv.occupancy(),
+            reserve_pages=len(self.kv._reserve),
+            gauges=[SlotGauge(rid=req.rid, slot=slot,
+                              tpot_slo_s=req.tpot_slo_s,
+                              headroom_s=req.tpot_slo_s - dt)
+                    for slot, req in decode_reqs]))
 
     def run(self, requests: list[Request], max_iters: int = 10_000,
             peers=None, link_bw=None) -> dict:
@@ -892,8 +1015,7 @@ class ServingEngine:
             it += 1
         done = [r.metrics() for r in self.finished]
         total_tokens = sum(m["tokens"] for m in done)
-        delays = [m["queue_delay_s"] for m in done
-                  if m["queue_delay_s"] is not None]
+        delays = [m["queue_delay_s"] for m in done]
         st = self.scheduler.stats
         stalls = [m["preempt_stall_s"] for m in done]
         return {
@@ -910,7 +1032,9 @@ class ServingEngine:
             "disk_stagings": st["disk_stagings"],
             "preempt_stall_max_s": max(stalls) if stalls else 0.0,
             "chunked_prefill_iters": st["chunked_prefill_iters"],
-            "queue_delay_p99_s": float(np.quantile(delays, 0.99))
-            if delays else 0.0,
+            "queue_delay_p99_s": summarize_latency(delays)["p99_s"],
+            "queue_delay": summarize_latency(delays),
+            "ttft": summarize_latency([m["ttft_s"] for m in done]),
+            "link_bytes": self.trace.totals(),
             "per_request": done,
         }

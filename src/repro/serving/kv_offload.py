@@ -395,6 +395,19 @@ class TieredKVAllocator:
     def host_bytes_of(self, rid: int) -> int:
         return len(self.host_pages_of(rid)) * self.page_bytes
 
+    def occupancy(self) -> dict:
+        """Per-tier frame occupancy snapshot for the telemetry plane:
+        used/total pages per pool plus the cache frames parked in each
+        (cache frames are counted inside used_pages — they hold live
+        refcounts under CACHE_RID)."""
+        occ = {tier: {"used_pages": pool.used_pages,
+                      "total_pages": pool.total_pages,
+                      "cache_pages": 0}
+               for tier, pool in self.pools.items()}
+        occ[HOST]["cache_pages"] = len(self._cache_lru)
+        occ[DISK]["cache_pages"] = len(self._disk_cache)
+        return occ
+
     def spill_writeback_bytes_of(self, rid: int) -> int:
         """Host bytes prefill must actually write back for ``rid``: freshly
         claimed host frames only — dedup'd host pages are already resident,
@@ -1231,16 +1244,24 @@ class SwapScheduler:
         self.kv = kv
         self._pending_out_pages = 0
         self._pending_in_pages = 0
+        # cumulative counters for the trace auditor: every page ever noted
+        # or promoted, so "bytes charged to the clock" can be cross-checked
+        # against "bytes the allocator actually moved" over a whole trace
+        self.in_pages_noted_total = 0
+        self.out_pages_noted_total = 0
+        self.promoted_pages_total = 0
 
     def note_demotions(self, n_pages: int) -> None:
         """Register demotions performed by resize/extend/park since last
         plan (callers pass unique frame moves — one per ``Migration``)."""
         self._pending_out_pages += n_pages
+        self.out_pages_noted_total += n_pages
 
     def note_promotions(self, n_pages: int) -> None:
         """Register promotions already performed by the data plane (resume)
         whose copy bytes must be charged to the next iteration's link."""
         self._pending_in_pages += n_pages
+        self.in_pages_noted_total += n_pages
 
     def pending_out_bytes(self) -> float:
         """Write-back traffic already queued for the next iteration."""
@@ -1294,6 +1315,7 @@ class SwapScheduler:
                 break
             plan.promotions.extend(moves)
             plan.kv_in_bytes += len(moves) * self.kv.page_bytes
+            self.promoted_pages_total += len(moves)
         plan.streamed_bytes = self.streamed_bytes(active_rids)
         plan.kv_in_bytes += plan.streamed_bytes
         return plan

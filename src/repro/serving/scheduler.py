@@ -116,6 +116,11 @@ class PlannedAdmission:
     # runs prefill compute + scatter. chunked=True defers the compute to
     # PrefillChunk entries instead of a one-shot prefill.
     chunked: bool = False
+    # TTFT the admission check certified (ttft_model under the spill
+    # write-back claimed at alloc time); None for chunked admissions, whose
+    # TTFT accrues across the iterations their chunks ride. The trace
+    # auditor checks observed TTFT against this bound.
+    certified_ttft_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -163,6 +168,20 @@ class IterationPlan:
     chunks: list[PrefillChunk] = dataclasses.field(default_factory=list)
     rejections: list[Request] = dataclasses.field(default_factory=list)
     decode_slots: list[int] = dataclasses.field(default_factory=list)
+    # Upper bound on this iteration's decode latency, computed at plan time
+    # from the traffic the plan left pending (streamed + promotion debt in,
+    # write-back debt out, NVMe pendings, chunk piggyback seconds). The
+    # executor's dt can only come in at or under this, modulo bytes that
+    # provably arrive after planning (COW copies, chunk host-spill
+    # write-backs, pages a same-plan one-shot prefill spilled to host) —
+    # the trace auditor enforces exactly that bound. None when the plan
+    # has no decode slots.
+    certified_dt_s: float | None = None
+    # The PCIe byte totals certified_dt_s was derived from. The executor
+    # charges any excess of its actual traffic over these as uncertified
+    # slack, so the auditor can hold dt to certified + excess/link_bw.
+    certified_kv_in_bytes: float = 0.0
+    certified_kv_out_bytes: float = 0.0
 
 
 @dataclasses.dataclass
@@ -223,6 +242,7 @@ class Scheduler:
                       "resumes": 0, "chunked_prefill_iters": 0,
                       "disk_demotions": 0, "disk_stagings": 0}
         self._iv = NO_OFFLOAD                  # interval of the current plan
+        self.last_dt_s = 0.0                   # last nonzero observed dt
 
     # ------------------------------------------------------------- queue I/O --
     def submit(self, req: Request) -> None:
@@ -245,6 +265,19 @@ class Scheduler:
         # non-chunked admissions were appended to `active` as they were
         # planned (they decode this same iteration, like the fused engine)
         plan.decode_slots = sorted(a.slot for a in active)
+        if active:
+            # certify the decode latency this plan implies: promotions +
+            # residual streaming together are exactly one pass over the
+            # active requests' host pages however the swap scheduler splits
+            # it, so streamed-now + pending promotion debt upper-bounds the
+            # executor's kv_in (post-plan frees only shrink it)
+            rids = [a.rid for a in active]
+            plan.certified_kv_in_bytes = (self.swap.streamed_bytes(rids)
+                                          + self.swap.pending_in_bytes())
+            plan.certified_kv_out_bytes = self.swap.pending_out_bytes()
+            plan.certified_dt_s = self._iter_dt(
+                len(active), plan.certified_kv_in_bytes,
+                plan.certified_kv_out_bytes, self._chunk_overhead_s())
         return plan
 
     def note_outcome(self, outcome: IterationOutcome) -> None:
@@ -253,6 +286,8 @@ class Scheduler:
         self.stats["preemptions"] += outcome.preemptions
         self.stats["resumes"] += outcome.resumes
         self.stats["chunked_prefill_iters"] += int(outcome.chunks_run > 0)
+        if outcome.dt_s > 0:
+            self.last_dt_s = outcome.dt_s
 
     # ------------------------------------------------------------- disk tier --
     def _iter_dt(self, n_active: int, kv_in: float, kv_out: float,
@@ -437,6 +472,12 @@ class Scheduler:
             chunked = (self.chunk_tokens > 0
                        and req.prompt_len > 0)
             adm = PlannedAdmission(req, slot, chunked=chunked)
+            if not chunked:
+                # stamp the TTFT this admission was certified under — the
+                # same ttft_model call, over the spill write-back the alloc
+                # just claimed, that the executor charges at prefill time
+                adm.certified_ttft_s = self.ttft_model(
+                    req, self.kv.spill_writeback_bytes_of(req.rid))
             plan.admissions.append(adm)
             if chunked:
                 self._prefilling.append(req)
@@ -552,13 +593,17 @@ class Scheduler:
     def _select_victim(self, active: list[ActiveInfo]) -> ActiveInfo | None:
         """Victim policy: largest recurring streaming burden first (parking
         it relieves the link every subsequent iteration), then most
-        remaining decode work (least sunk progress is stalled), then the
-        latest-arrived (highest rid) — FIFO-respecting."""
+        remaining decode work (least sunk progress is stalled), then most
+        TPOT headroom (deadline-aware: the request whose budget the last
+        observed iteration dented least absorbs the park stall safest),
+        then the latest-arrived (highest rid) — FIFO-respecting."""
         cands = self._victim_pool(active)
         if not cands:
             return None
         return max(cands, key=lambda a: (len(self.kv.host_pages_of(a.rid)),
-                                         a.remaining, a.rid))
+                                         a.remaining,
+                                         a.tpot_slo_s - self.last_dt_s,
+                                         a.rid))
 
     def _preempt_could_help(self, req: Request, total: int,
                             active: list[ActiveInfo]) -> bool:

@@ -19,6 +19,7 @@ import pytest
 
 from repro.core.interval import iter_time_with_interval_kv
 from repro.serving.request import Request
+from repro.serving.telemetry import summarize_latency
 
 from _engine_builders import mk_reduced_engine
 from harness import DualEngine
@@ -82,6 +83,8 @@ def _run_burst(preemption: bool):
     assert it < 300, "trace did not drain"
     eng.kv.check_invariants()
     assert eng.kv.device.used_pages == 0 and eng.kv.host.used_pages == 0
+    report = eng.trace.audit()               # conservation on every burst
+    assert report.ok, report.violations
     return eng
 
 
@@ -123,9 +126,8 @@ def test_preempted_request_tokens_bitwise_identical_and_slo_safe():
 
     # the burst's queueing delay collapses: shorts no longer wait for L
     def p99(eng):
-        d = [r.queue_delay_s for r in eng.finished
-             if r.queue_delay_s is not None]
-        return float(np.quantile(d, 0.99))
+        return summarize_latency(
+            [r.queue_delay_s for r in eng.finished])["p99_s"]
     assert p99(pre) < p99(base)
 
 

@@ -215,6 +215,26 @@ def test_victim_selection_prefers_streaming_then_remaining():
     assert sched._select_victim([c]) is None
 
 
+def test_victim_selection_deadline_headroom_tie_break():
+    """With equal streaming burden and equal remaining work, the request
+    with the most TPOT slack against the last observed iteration is parked
+    first — it absorbs the park stall with the least SLO risk — and the
+    slack comparison dominates the rid (FIFO) tie-break."""
+    sched, kv, _ = mk_sched(device_pages=12, host_pages=8)
+    # all device-resident (0 host pages), identical 8-token remainders
+    a = activate(sched, kv, mk_req(0, 8, 8, tpot=2e-6), 0)
+    b = activate(sched, kv, mk_req(1, 8, 8, tpot=9e-6), 1)
+    c = activate(sched, kv, mk_req(2, 8, 8, tpot=5e-6), 2)
+    sched.note_outcome(IterationOutcome(dt_s=1e-6))
+    assert sched.last_dt_s == 1e-6
+    # b has the most slack (9us budget vs 1us iterations) despite being
+    # neither the newest nor the oldest
+    assert sched._select_victim([a, b, c]).rid == 1
+    # equal slack falls back to latest-arrived (highest rid)
+    d = activate(sched, kv, mk_req(3, 8, 8, tpot=9e-6), 3)
+    assert sched._select_victim([b, d]).rid == 3
+
+
 def test_preemption_parks_victim_and_admits_blocked_request():
     # victim: 4 pages, 2 device + 2 host (a streaming-heavy request); its
     # recurring 2-page stream is what blocks the tight-TPOT admission
