@@ -310,6 +310,61 @@ class OffloadRuntime:
         logits = T.lm_logits(cfg, params_split, x)[:, 0]
         return logits, pool
 
+    # ----- paged chunk prefill --------------------------------------------------
+    def paged_prefill_chunk(self, params_split: Params, tokens: jax.Array,
+                            start: jax.Array, pool: jax.Array,
+                            block_table: jax.Array, context_len: jax.Array,
+                            write_frames: jax.Array,
+                            write_offsets: jax.Array):
+        """One incremental prefill chunk through the physical KV page pool.
+
+        ``tokens``: [C] — the chunk at absolute positions ``start..start+C-1``
+        of one request. Same weight-placement scan as ``paged_decode_step``,
+        but each unit writes the chunk's K/V at (write_frames, write_offsets)
+        [C] and attends the chunk's queries over the request's resident
+        context through ``block_table`` [nb] / ``context_len`` — no prefix
+        recompute. Returns (last-position logits [1, V], pool).
+        """
+        cfg, model = self.model.cfg, self.model
+        vkv = model.virtual_kv
+        pat = len(cfg.pattern)
+        interp = jax.default_backend() != "tpu"
+        c = tokens.shape[0]
+        posm = (start + jnp.arange(c, dtype=jnp.int32))[None]   # [1, C]
+
+        def apply_unit(x, pslices, unit_idx, pool):
+            for j, blk in enumerate(cfg.pattern):
+                x, pool = T.apply_block_prefill_paged(
+                    cfg, blk, pslices[j], x, posm, pool,
+                    unit_idx * pat + j, block_table, context_len,
+                    write_frames, write_offsets, vkv, interp)
+            return x, pool
+
+        x = T.embed_tokens(cfg, params_split, tokens[None])     # [1, C, D]
+        blk = params_split["blocks"]
+        g, iv = self.plan.num_groups, self.plan.interval
+        if g > 0:
+            def group_body(carry, xs):
+                x, pool = carry
+                gi, res_p, off_p = xs
+                off_dev = _prefetch(off_p, self.device_shardings)
+                for j in range(iv - 1):
+                    pj = jax.tree.map(lambda t: t[j], res_p)
+                    x, pool = apply_unit(x, pj, gi * iv + j, pool)
+                x, pool = apply_unit(x, off_dev, gi * iv + (iv - 1), pool)
+                return (x, pool), None
+
+            (x, pool), _ = jax.lax.scan(
+                group_body, (x, pool),
+                (jnp.arange(g), blk["resident"], blk["offloaded"]))
+        n_tail = jax.tree.leaves(blk["tail"])[0].shape[0]
+        for t in range(n_tail):   # unrolled: static layer index per unit
+            pt = jax.tree.map(lambda a: a[t], blk["tail"])
+            x, pool = apply_unit(x, pt, g * iv + t, pool)
+        x = L.apply_norm(cfg, params_split["final_norm"], x)
+        logits = T.lm_logits(cfg, params_split, x[:, -1:])[:, 0]
+        return logits, pool
+
     # ----- prefill --------------------------------------------------------------
     def prefill(self, params_split: Params, inputs: dict, cache_len: int,
                 attn_impl: str = "chunked"):

@@ -79,6 +79,19 @@ def main(argv=None) -> dict:
                          "page-aligned chunks of this many tokens, "
                          "piggybacked on decode iterations (0 = one-shot "
                          "prefill at admission)")
+    ap.add_argument("--async-data-plane", action="store_true",
+                    help="double-buffered copy-stage engine: stage "
+                         "iteration i+1's physical page copies (park legs, "
+                         "disk retirements, resume promotions, resume "
+                         "prefetch) while iteration i decodes, draining at "
+                         "iteration boundaries (default: synchronous "
+                         "copies inside the issuing iteration)")
+    ap.add_argument("--incremental-prefill", action="store_true",
+                    help="chunked prefills attend only the new chunk's "
+                         "queries against resident paged KV instead of "
+                         "recomputing the whole prefix per chunk (requires "
+                         "--prefill-chunk-tokens; incompatible with "
+                         "--prefix-dedup)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--arrival-rate", type=float, default=4.0,
@@ -100,6 +113,10 @@ def main(argv=None) -> dict:
     if args.disk_kv_gb > 0 and args.host_kv_gb <= 0:
         ap.error("--disk-kv-gb requires a host tier to stage through: "
                  "set --host-kv-gb > 0")
+    if args.incremental_prefill and args.prefix_dedup:
+        ap.error("--incremental-prefill is incompatible with "
+                 "--prefix-dedup (shared prompt frames would need COW "
+                 "inside the chunk kernel)")
 
     cfg = reduce_config(get_config(args.arch))
     hw = PRESETS[args.hw]
@@ -112,7 +129,9 @@ def main(argv=None) -> dict:
                         page_size=args.page_size,
                         prefix_dedup=args.prefix_dedup,
                         preemption=args.preemption,
-                        prefill_chunk_tokens=args.prefill_chunk_tokens)
+                        prefill_chunk_tokens=args.prefill_chunk_tokens,
+                        async_data_plane=args.async_data_plane,
+                        incremental_prefill=args.incremental_prefill)
     slos = [0.002 * k for k in range(1, 120)]
     eng = build_engine("e0", cfg, hw, ecfg, slos)
     peers = []
@@ -157,6 +176,8 @@ def main(argv=None) -> dict:
     summary["cow_events"] = eng.cow_events
     summary["scheduler"] = {"preemption": args.preemption,
                             "prefill_chunk_tokens": args.prefill_chunk_tokens}
+    summary["data_plane"] = {"async": args.async_data_plane,
+                             "incremental_prefill": args.incremental_prefill}
     # preemptions / resumes / chunked_prefill_iters / queue_delay_p99_s come
     # from engine.run (scheduler IterationOutcome stats) and are already in
     # the summary dict above

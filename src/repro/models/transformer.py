@@ -360,6 +360,53 @@ def apply_block_decode_paged(cfg: ModelConfig, blk: BlockSpec, p: Params,
     return x, pool
 
 
+def apply_block_prefill_paged(cfg: ModelConfig, blk: BlockSpec, p: Params,
+                              x: jax.Array, positions: jax.Array,
+                              pool: jax.Array, layer: jax.Array,
+                              block_table: jax.Array,
+                              context_len: jax.Array,
+                              write_frames: jax.Array,
+                              write_offsets: jax.Array, virtual_kv: int,
+                              interpret: bool):
+    """One prefill *chunk* through the paged KV pool (incremental prefill).
+
+    ``x``: [1, C, D] — the chunk's tokens at absolute ``positions`` [1, C];
+    the chunk's K/V land at (write_frames[t], write_offsets[t]) per token,
+    then the chunk's queries attend over the request's whole resident
+    context (``block_table``/``context_len``) with the Pallas chunk kernel —
+    no prefix recompute. Returns (x, pool).
+    """
+    if blk.mixer != "attention":
+        raise NotImplementedError(
+            "paged chunk prefill supports attention mixers only; "
+            f"recurrent-state mixer {blk.mixer!r} needs a state slab")
+    if cfg.sliding_window > 0:
+        raise NotImplementedError(
+            "paged chunk prefill has no sliding-window mask")
+    from repro.kernels.prefill_attention import paged_chunk_attention_pallas
+
+    h = L.apply_norm(cfg, p["norm1"], x)
+    q, k1, v1 = L.qkv_project(cfg, p["attn"], h, positions, virtual_kv)
+    pool = pool.at[write_frames, write_offsets, layer, 0].set(
+        k1[0].astype(pool.dtype))
+    pool = pool.at[write_frames, write_offsets, layer, 1].set(
+        v1[0].astype(pool.dtype))
+    kv_l = jax.lax.dynamic_index_in_dim(pool, layer, axis=2, keepdims=False)
+    o = paged_chunk_attention_pallas(
+        q[0], kv_l[:, :, 0], kv_l[:, :, 1], block_table, positions[0, 0],
+        context_len, interpret=interpret)
+    x = x + L.attn_out(cfg, p["attn"], o[None])
+
+    if cfg.d_ff > 0:
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if blk.mlp == "moe":
+            y, _ = L.apply_moe(cfg, p["mlp"], h)
+        else:
+            y = L.apply_mlp(cfg, p["mlp"], h)
+        x = x + y
+    return x, pool
+
+
 # ---------------------------------------------------------------------------
 # Stack application (scan over R periods)
 # ---------------------------------------------------------------------------

@@ -61,6 +61,7 @@ from repro.core.record import PerformanceRecord
 from repro.kernels import ops
 from repro.models.model import Model
 from repro.models.transformer import pattern_info
+from repro.serving.data_plane import CopyStageEngine
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
 from repro.serving.kv_offload import (DEVICE, DISK, HOST, LinkSpec,
                                       SwapScheduler, TieredKVAllocator)
@@ -112,6 +113,20 @@ class EngineConfig:
     # Optional file path for the disk pool's backing store (np.memmap);
     # None keeps a RAM buffer standing in for NVMe.
     disk_backing_path: str | None = None
+    # Async data plane (serving.data_plane): queue the allocator's copy
+    # hooks in planning order and drain them at the next iteration
+    # boundary — batched gather/scatter runs, host->disk retirements on a
+    # background worker overlapping decode, and a staged prefetch of the
+    # oldest parked request's disk pages ahead of its predicted resume.
+    # Off = every hook copy executes synchronously at plan time (the PR 5
+    # behavior, bitwise identical token streams either way).
+    async_data_plane: bool = False
+    # Incremental chunked prefill: each chunk attends only its own queries
+    # against the resident paged KV (Pallas chunk kernel) instead of
+    # recomputing the whole prefix per chunk. Opt-in: chunk logits now see
+    # the pool's bf16-rounded prefix KV, so numerics differ from the
+    # whole-prefix recompute path at rounding level.
+    incremental_prefill: bool = False
 
 
 class ServingEngine:
@@ -199,28 +214,46 @@ class ServingEngine:
         self.host_pool = (self.kv.host.make_pool_buffer(self.page_shape,
                                                         jnp.bfloat16)
                           if self.kv.host.total_pages > 0 else None)
-        # disk-tier data plane: every host<->disk accounting move fires the
-        # synchronous copy hook below, so the bytes are saved while the
-        # vacated frame is still intact (numpy<->numpy: the device pool is
-        # never touched — disk pages stage through host)
+        # disk-tier data plane: every host<->disk accounting move fires a
+        # copy hook into the copy-stage engine, which executes it at once
+        # (sync mode) or queues it in planning order for the next
+        # iteration-boundary drain (async mode)
         self.disk_pool = (self.kv.disk.make_pool_buffer(self.page_shape,
                                                         jnp.bfloat16)
                           if self.kv.disk.total_pages > 0 else None)
+        self.data_plane: CopyStageEngine | None = None
         if self.disk_pool is not None:
             assert self.host_pool is not None, \
                 "a disk KV tier requires a host tier to stage through"
+            self.data_plane = CopyStageEngine(
+                host_pool=self.host_pool, disk_pool=self.disk_pool,
+                get_pool=lambda: self.pool,
+                set_pool=self._set_pool,
+                async_mode=ecfg.async_data_plane)
             self.kv.disk_copy = self._disk_page_copy
             # resume staging chains disk pages through host transit frames:
             # its h2d promotion legs must read those frames in planning
             # order, before the next staging overwrites them; park's d2h
             # legs must likewise land before a same-pass demotion retires
-            # the parked frames to NVMe
+            # the parked frames to NVMe. The copy-stage engine preserves
+            # exactly that order (FIFO queue, duplicate-dst batch flushes).
             self.kv.promote_copy = self._promote_page_copy
             self.kv.park_copy = self._park_page_copy
+            # GPUDirect-style disk->device staging that skips the host
+            # bounce buffer whenever a device frame is free
+            self.kv.direct_copy = self._direct_page_copy
+        self.prefetch_pages_total = 0
+
+        if ecfg.incremental_prefill and ecfg.prefix_dedup:
+            raise NotImplementedError(
+                "incremental prefill under prefix dedup needs skip-write/"
+                "COW handling for deduped chunk pages (ROADMAP)")
+        self.prefill_tokens_computed = 0   # quadratic-vs-linear evidence
 
         self._runtime: dict[int, OffloadRuntime] = {}
         self._jit_decode: dict[int, Any] = {}
         self._jit_prefill: dict[int, Any] = {}
+        self._jit_chunk: dict[int, Any] = {}
         self._params_split: dict[int, Any] = {}
 
         # per-step observability for the differential harness
@@ -264,8 +297,13 @@ class ServingEngine:
         # physical pool mirrors the accounting moves: demoted frames are
         # copied out while still intact, then surviving frames permute.
         res = self.kv.resize_device(max(int(weight_free_new), 0))
+        if self.data_plane is not None:
+            # any retire-to-disk ops the resize staged must read their host
+            # frames before the demotion copies below can reuse them
+            self.data_plane.drain()
         if res.demotions:
             assert self.host_pool is not None
+            self._guard_host_writes([m.dst_page for m in res.demotions])
             ops.copy_pages_to_host(self.pool,
                                    [m.src_page for m in res.demotions],
                                    self.host_pool,
@@ -360,6 +398,12 @@ class ServingEngine:
         prefill for non-chunked ones). Chunk compute is applied by ``step``
         so its time rides the decode iteration."""
         plan = self.scheduler.plan(self._view())
+        if self.data_plane is not None:
+            # iteration boundary for the copy-stage engine: complete last
+            # iteration's background retirements, then execute every op the
+            # plan just staged — BEFORE any same-plan prefill scatters into
+            # frames those ops still read (transit-frame reuse)
+            self.data_plane.drain()
         self.rejected.extend(plan.rejections)
         for req in plan.rejections:
             self.trace.event("reject", req.rid, self.clock_s,
@@ -437,48 +481,99 @@ class ServingEngine:
             self.pos[slot] = req.resume_pos
             self.active[slot] = True
 
+    def _set_pool(self, pool) -> None:
+        """Device-pool setter for the copy-stage engine (the pool is
+        functional JAX state, reassigned per scatter)."""
+        self.pool = pool
+
+    def _guard_host_writes(self, frames) -> None:
+        """Engine-side host-pool writes must wait out any in-flight
+        background disk retirement still reading those frames."""
+        if self.data_plane is not None:
+            self.data_plane.guard_host_writes(frames)
+
+    def _issue_prefetch(self) -> None:
+        """Async mode: stage the oldest parked request's disk pages into
+        FREE host frames ahead of its scheduler-predicted resume (parked
+        requests re-enter oldest-first, so the queue head is the next
+        resume candidate). The ops queue now and drain at the next
+        iteration boundary; the NVMe reads ride the next iteration's disk
+        term through the allocator's pending counters — by the time the
+        resume is planned, its staging is already host-resident and its
+        shortfall shrinks accordingly."""
+        if (self.data_plane is None or not self.ecfg.async_data_plane
+                or not self.scheduler.preempted):
+            return
+        req = self.scheduler.preempted[0]
+        free = self.kv.host.free_pages
+        if free <= 0:
+            return
+        self.prefetch_pages_total += self.kv.prefetch_from_disk(req.rid,
+                                                                free)
+
     def _disk_page_copy(self, src_tier: str, src_page: int,
                         dst_tier: str, dst_page: int) -> None:
-        """Synchronous NVMe data plane (TieredKVAllocator.disk_copy hook):
-        fired by the allocator the moment a host<->disk accounting move
-        lands, before the vacated frame can be reused by the same planning
-        pass. Byte traffic is charged to the disk link's own latency term
-        via the allocator's pending disk counters — never to PCIe."""
-        assert self.disk_pool is not None and self.host_pool is not None
+        """NVMe data plane (TieredKVAllocator.disk_copy hook): fired by the
+        allocator the moment a host<->disk accounting move lands. Staged
+        through the copy-stage engine — executed at once in sync mode,
+        queued in planning order otherwise. Byte traffic is charged to the
+        disk link's own latency term via the allocator's pending disk
+        counters — never to PCIe."""
+        assert self.data_plane is not None
         if src_tier == HOST and dst_tier == DISK:
-            self.disk_pool[dst_page] = self.host_pool[src_page]
+            self.data_plane.stage("h2disk", src_page, dst_page)
         elif src_tier == DISK and dst_tier == HOST:
-            self.host_pool[dst_page] = self.disk_pool[src_page]
+            self.data_plane.stage("disk2h", src_page, dst_page)
         else:
             raise ValueError(f"disk copy between {src_tier} and {dst_tier}")
 
+    def _direct_page_copy(self, src_tier: str, src_page: int,
+                          dst_tier: str, dst_page: int) -> None:
+        """Direct disk<->device staging (TieredKVAllocator.direct_copy
+        hook): the page bypasses the host bounce buffer entirely, so no
+        host-transit bytes are moved — or billed to the PCIe link."""
+        assert self.data_plane is not None
+        if src_tier == DISK and dst_tier == DEVICE:
+            self.data_plane.stage("disk2d", src_page, dst_page)
+        elif src_tier == DEVICE and dst_tier == DISK:
+            self.data_plane.stage("d2disk", src_page, dst_page)
+        else:
+            raise ValueError(
+                f"direct copy between {src_tier} and {dst_tier}")
+
     def _park_page_copy(self, src_dev_frame: int,
                         dst_host_page: int) -> None:
-        """Synchronous d2h leg of a park (TieredKVAllocator.park_copy
-        hook, wired with the disk tier): executed in planning order so a
-        demotion planned later in the SAME pass reads the parked bytes,
-        not the host frame's previous content. ``_apply_preemptions``
-        skips its apply-time batch copy when this hook is wired."""
-        ops.copy_pages_to_host(self.pool, [src_dev_frame],
-                               self.host_pool, [dst_host_page])
+        """d2h leg of a park (TieredKVAllocator.park_copy hook, wired with
+        the disk tier): staged in planning order so a demotion planned
+        later in the SAME pass reads the parked bytes, not the host
+        frame's previous content. ``_apply_preemptions`` skips its
+        apply-time batch copy when this hook is wired."""
+        self.data_plane.stage("d2h", src_dev_frame, dst_host_page)
 
     def _promote_page_copy(self, src_host_page: int,
                            dst_dev_frame: int) -> None:
-        """Synchronous h2d leg of a disk-staged resume
-        (TieredKVAllocator.promote_copy hook): executed in planning order
-        so a host transit frame is read before the next NVMe staging
-        reuses it. ``_apply_resumes`` skips its apply-time batch copy when
-        this hook is wired — the bytes already moved."""
-        self.pool = ops.copy_pages_from_host(
-            self.host_pool, [src_host_page], self.pool, [dst_dev_frame])
+        """h2d leg of a disk-staged resume (TieredKVAllocator.promote_copy
+        hook): staged in planning order so a host transit frame is read
+        before the next NVMe staging reuses it. ``_apply_resumes`` skips
+        its apply-time batch copy when this hook is wired — the bytes
+        already moved (or sit queued ahead of the reuse)."""
+        self.data_plane.stage("h2d", src_host_page, dst_dev_frame)
 
     def _trace_footer(self) -> dict:
         """Counters snapshot the trace auditor cross-checks whole-trace
         conservation against (allocator + swap-scheduler cumulative totals
         minus what is still pending at export time)."""
+        plane = self.data_plane
         return {
             "page_bytes": self.kv.page_bytes,
             "clock_s": self.clock_s,
+            "staged_issued_pages_total":
+                plane.issued_pages_total if plane else 0,
+            "staged_completed_pages_total":
+                plane.completed_pages_total if plane else 0,
+            "staged_inflight_pages": plane.inflight_pages() if plane else 0,
+            "disk_direct_pages_total": self.kv.disk_direct_pages_total,
+            "prefetch_pages_total": self.prefetch_pages_total,
             "disk_in_pages_total": self.kv.disk_in_pages_total,
             "disk_out_pages_total": self.kv.disk_out_pages_total,
             "pending_disk_in_pages": self.kv.pending_disk_in_pages,
@@ -529,6 +624,7 @@ class ServingEngine:
         # caches carry no padding into the page scatter.
         logits, caches1, _ = self._jitted_prefill(req.prompt, req.prompt_len)
         req.prefill_pos = req.prompt_len
+        self.prefill_tokens_computed += req.prompt_len
         self._scatter_prefill_kv(req, caches1)
         # modeled prefill latency = TTFT (same formula admission checked):
         # only freshly spilled pages cost write-back — dedup'd host pages
@@ -586,6 +682,10 @@ class ServingEngine:
                                     dtype=jnp.bfloat16)
         refs = self.kv.refs(req.rid)
         deduped = set(self.kv.dedup_hit_pages(req.rid))
+        self._guard_host_writes(
+            [refs[i].page for i in range(start_page, min(vals.shape[0],
+                                                         len(refs)))
+             if i not in deduped and refs[i].tier == HOST])
         dev_frames, dev_vals = [], []
         for i in range(start_page, vals.shape[0]):
             if i in deduped:
@@ -615,24 +715,93 @@ class ServingEngine:
             return 0.0
         return self.times_fn(1, tokens, "prefill").t_iter_no_offload_s
 
+    def _run_chunk_incremental(self, ch: PrefillChunk) -> np.ndarray | None:
+        """Incremental chunk compute: the chunk's C tokens run through the
+        paged chunk-prefill kernel, attending the request's RESIDENT paged
+        KV (earlier chunks' pages stay in the pool; host-tier pages stream
+        through the slab and dirty write pages stream back) — O(C * prefix)
+        work instead of the recompute path's O(end). Returns the chunk's
+        last-position logits, or None to fall back to the recompute path
+        (unsupported page placement or slab overflow)."""
+        req = ch.req
+        page = self.ecfg.page_size
+        refs = self.kv.refs(req.rid)
+        n_pages = -(-ch.end // page)
+        if n_pages > len(refs) or n_pages > self.nb:
+            return None
+        bt = np.full((self.nb,), self.null_frame, np.int32)
+        stream_src: list[int] = []
+        stream_dst: list[int] = []
+        writeback: list[tuple[int, int]] = []   # (host slot, slab frame)
+        slab_next = self.slab_base
+        for i in range(n_pages):
+            r = refs[i]
+            if r.tier == DEVICE:
+                bt[i] = r.page
+            elif r.tier == HOST:
+                if slab_next >= self.null_frame:
+                    return None           # slab overflow: recompute instead
+                stream_src.append(r.page)
+                stream_dst.append(slab_next)
+                bt[i] = slab_next
+                if i >= ch.start // page:   # chunk writes into this page
+                    writeback.append((r.page, slab_next))
+                slab_next += 1
+            else:
+                return None               # disk-resident page: recompute
+        if stream_src:
+            self.pool = ops.copy_pages_from_host(
+                self.host_pool, stream_src, self.pool, stream_dst)
+        c = ch.end - ch.start
+        toks = np.arange(ch.start, ch.end)
+        wf = bt[toks // page]
+        wo = (toks % page).astype(np.int32)
+        if self.interval not in self._jit_chunk:
+            rt = self._rt(self.interval)
+            self._jit_chunk[self.interval] = jax.jit(
+                rt.paged_prefill_chunk, donate_argnums=(3,))
+        logits, self.pool = self._jit_chunk[self.interval](
+            self._params_split[self.interval],
+            jnp.asarray(req.prompt[ch.start:ch.end], jnp.int32),
+            jnp.int32(ch.start), self.pool, jnp.asarray(bt),
+            jnp.int32(ch.end), jnp.asarray(wf), jnp.asarray(wo))
+        if writeback:
+            self._guard_host_writes([hp for hp, _ in writeback])
+            got = np.asarray(ops.gather_kv_pages(
+                self.pool, jnp.asarray([f for _, f in writeback],
+                                       jnp.int32)))
+            for (hp, _), val in zip(writeback, got):
+                self.host_pool[hp] = val
+        self.prefill_tokens_computed += c
+        return np.asarray(logits[0], np.float32)
+
     def _run_chunks(self, chunks: list[PrefillChunk]
                     ) -> tuple[float, list[tuple[PrefillChunk, np.ndarray]]]:
-        """Compute + scatter this iteration's prefill chunks. The real
-        compute recomputes the prefix (prefill over ``prompt[:end]`` —
-        causal attention makes the chunk's KV bit-identical to a one-shot
-        prefill, which is what keeps chunking numerically invisible); the
-        *modeled* chunk cost is the incremental stack time
-        T(end) - T(start), charged on top of the decode iteration it rides.
+        """Compute + scatter this iteration's prefill chunks. By default
+        the real compute recomputes the prefix (prefill over
+        ``prompt[:end]`` — causal attention makes the chunk's KV
+        bit-identical to a one-shot prefill, which is what keeps chunking
+        numerically invisible) — quadratic real work across the schedule.
+        With ``incremental_prefill`` the chunk kernel attends only the new
+        queries against resident paged KV, making real compute match the
+        *modeled* chunk cost: the incremental stack time T(end) - T(start),
+        charged on top of the decode iteration it rides.
         Returns (modeled chunk seconds, final-chunk logits)."""
         t = 0.0
         finals: list[tuple[PrefillChunk, np.ndarray]] = []
         for ch in chunks:
             req = ch.req
-            logits, caches1, _ = self._jitted_prefill(req.prompt[:ch.end],
-                                                      ch.end)
             page = self.ecfg.page_size
-            self._scatter_prefill_kv(req, caches1, n_tokens=ch.end,
-                                     start_page=ch.start // page)
+            logits_np = None
+            if self.ecfg.incremental_prefill:
+                logits_np = self._run_chunk_incremental(ch)
+            if logits_np is None:
+                logits, caches1, _ = self._jitted_prefill(
+                    req.prompt[:ch.end], ch.end)
+                self._scatter_prefill_kv(req, caches1, n_tokens=ch.end,
+                                         start_page=ch.start // page)
+                self.prefill_tokens_computed += ch.end
+                logits_np = np.asarray(logits[0], np.float32)
             # a chunk that lands on spilled (fresh host-tier) pages writes
             # them over the same link as everything else: charge the d2h
             # bytes like the one-shot path does via _modeled_ttft. Dedup'd
@@ -657,7 +826,7 @@ class ServingEngine:
                              dur_s=inc, start=ch.start, end=ch.end,
                              final=ch.final)
             if ch.final:
-                finals.append((ch, np.asarray(logits[0], np.float32)))
+                finals.append((ch, logits_np))
         return t, finals
 
     def _finish_chunks(self, chunks: list[PrefillChunk],
@@ -767,6 +936,8 @@ class ServingEngine:
         if not moves:
             return 0.0, 0.0
         self.cow_events += len(moves)
+        self._guard_host_writes([m.dst.page for m in moves
+                                 if m.dst.tier == HOST])
         cow_in = cow_out = 0.0
         dd_src: list[int] = []
         dd_dst: list[int] = []
@@ -851,6 +1022,10 @@ class ServingEngine:
                     tokens_emitted=prefill_tokens,
                     preemptions=len(plan.preemptions),
                     resumes=len(plan.resumes)))
+            self._issue_prefetch()
+            st_issued, st_completed = (
+                self.data_plane.take_iteration_counters()
+                if self.data_plane else (0, 0))
             self.trace.add_iteration(IterationRecord(
                 index=len(self.trace.iterations), t_start_s=t_start,
                 t_end_s=self.clock_s, dt_s=dt_rec, interval=self.interval,
@@ -861,6 +1036,8 @@ class ServingEngine:
                 resumed=[r.req.rid for r in plan.resumes],
                 finished=finished, chunk_s=dt_rec,
                 certified_dt_s=plan.certified_dt_s,
+                staged_issued_pages=st_issued,
+                staged_completed_pages=st_completed,
                 occupancy=self.kv.occupancy(),
                 reserve_pages=len(self.kv._reserve)))
             return
@@ -917,6 +1094,7 @@ class ServingEngine:
             jnp.asarray(wf), jnp.asarray(wo))
         logits = np.asarray(logits, np.float32)
         if writeback:
+            self._guard_host_writes([hs for hs, _ in writeback])
             got = np.asarray(ops.gather_kv_pages(
                 self.pool, jnp.asarray([f for _, f in writeback], jnp.int32)))
             for (host_slot, _), val in zip(writeback, got):
@@ -971,6 +1149,9 @@ class ServingEngine:
             dt_s=dt, finished_rids=finished_rids, tokens_emitted=tokens_out,
             chunks_run=len(plan.chunks), preemptions=len(plan.preemptions),
             resumes=len(plan.resumes)))
+        self._issue_prefetch()
+        st_issued, st_completed = (self.data_plane.take_iteration_counters()
+                                   if self.data_plane else (0, 0))
         self.trace.add_iteration(IterationRecord(
             index=len(self.trace.iterations), t_start_s=t_start,
             t_end_s=self.clock_s, dt_s=dt, interval=self.interval,
@@ -997,6 +1178,8 @@ class ServingEngine:
             disk_s=bd.disk_s, chunk_s=chunk_s, model_dt_s=bd.total_s,
             link_bw_bytes_s=link_bandwidth(times),
             certified_dt_s=plan.certified_dt_s,
+            staged_issued_pages=st_issued,
+            staged_completed_pages=st_completed,
             occupancy=self.kv.occupancy(),
             reserve_pages=len(self.kv._reserve),
             gauges=[SlotGauge(rid=req.rid, slot=slot,
@@ -1013,6 +1196,10 @@ class ServingEngine:
                 and it < max_iters:
             self.step(peers=peers, link_bw=link_bw)
             it += 1
+        if self.data_plane is not None:
+            # run boundary: every staged op must have physically landed
+            # before anyone reads the pools or exports the trace footer
+            self.data_plane.sync()
         done = [r.metrics() for r in self.finished]
         total_tokens = sum(m["tokens"] for m in done)
         delays = [m["queue_delay_s"] for m in done]
@@ -1030,6 +1217,9 @@ class ServingEngine:
             "resumes": st["resumes"],
             "disk_demotions": st["disk_demotions"],
             "disk_stagings": st["disk_stagings"],
+            "prefetch_pages": self.prefetch_pages_total,
+            "disk_direct_pages": self.kv.disk_direct_pages_total,
+            "prefill_tokens_computed": self.prefill_tokens_computed,
             "preempt_stall_max_s": max(stalls) if stalls else 0.0,
             "chunked_prefill_iters": st["chunked_prefill_iters"],
             "queue_delay_p99_s": summarize_latency(delays)["p99_s"],

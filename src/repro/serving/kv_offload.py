@@ -323,31 +323,44 @@ class TieredKVAllocator:
         self.pools: dict[str, PagedKVAllocator] = {
             DEVICE: self.device, HOST: self.host, DISK: self.disk}
         self.disk_link = disk_link
-        # synchronous data-plane hook for host<->disk moves: called as
+        # data-plane hook for host<->disk moves: called as
         # disk_copy(src_tier, src_page, dst_tier, dst_page) the moment the
         # accounting move lands, while the vacated frame's bytes are still
-        # intact (the engine wires this to its host/disk pool buffers; pure
-        # accounting users leave it None)
+        # intact. The engine wires this into its copy-stage engine
+        # (serving/data_plane.py), which either executes the op immediately
+        # (sync mode) or queues it in planning order and drains at the next
+        # iteration boundary — either way execution order is a linear
+        # extension of planning order, which is what the hazard notes below
+        # rely on. Pure accounting users leave it None.
         self.disk_copy = None
-        # synchronous hook for ``resume``'s host->device promotion legs,
-        # called as promote_copy(src_host_page, dst_device_frame). Required
-        # whenever disk_copy is wired: resume staging chains several disk
-        # pages through one host transit frame, so a deferred (apply-time)
-        # promotion copy would read a frame the NEXT staging already
-        # overwrote — the promotion must read its bytes in planning order.
+        # hook for ``resume``'s host->device promotion legs, called as
+        # promote_copy(src_host_page, dst_device_frame). Required whenever
+        # disk_copy is wired: resume staging chains several disk pages
+        # through one host transit frame, so an apply-time promotion copy
+        # would read a frame the NEXT staging already overwrote — the
+        # promotion must read its bytes in planning order.
         self.promote_copy = None
-        # synchronous hook for ``park``'s device->host legs, called as
+        # hook for ``park``'s device->host legs, called as
         # park_copy(src_device_frame, dst_host_frame). Also required with a
         # disk tier: a park and a demotion of the parked pages can land in
         # ONE planning pass, so a deferred park copy would let the NVMe
         # hook read a host frame whose bytes had not arrived yet.
         self.park_copy = None
+        # hook for the direct disk->device staging path that bypasses the
+        # host bounce buffer when a device frame is free, called as
+        # direct_copy(src_tier, src_page, dst_tier, dst_page). When wired,
+        # ``resume`` stages pass-through pages straight onto the device:
+        # the NVMe read is still charged, but the host-transit PCIe
+        # promotion charge disappears (the scheduler only notes HOST-src
+        # promotions). Leave None to force every page through the host.
+        self.direct_copy = None
         # NVMe traffic performed since the swap scheduler last planned:
         # charged to the disk link's own latency term, never to PCIe
         self.pending_disk_in_pages = 0    # disk -> host staging reads
         self.pending_disk_out_pages = 0   # host -> disk demotion writes
         self.disk_in_pages_total = 0
         self.disk_out_pages_total = 0
+        self.disk_direct_pages_total = 0  # of disk_in: direct disk->device
         self._refs: dict[int, list[PageRef]] = {}
         self.scope = scope
         self.enable_dedup = enable_dedup
@@ -1013,6 +1026,27 @@ class TieredKVAllocator:
         NVMe reads (``disk_pages_of`` alone misses the reserve)."""
         return len(self._disk_refs_of(rid))
 
+    def prefetch_from_disk(self, rid: int, max_pages: int) -> int:
+        """Stage up to ``max_pages`` of a PARKED request's disk pages into
+        FREE host frames ahead of its predicted resume. Opportunistic:
+        never reclaims cache frames or evicts anything — it only soaks up
+        idle host capacity so the eventual ``resume`` finds the pages
+        already host-resident. Charged as NVMe reads through the pending
+        disk counters like any staging. Returns the pages staged."""
+        n = 0
+        for ref in self._disk_refs_of(rid):
+            if n >= max_pages or self.host.free_pages == 0:
+                break
+            src = ref.page
+            hp = self._transfer_frame(ref, self.host, HOST)
+            if hp is None:
+                break
+            self._fire_disk_copy(DISK, src, HOST, hp)
+            self.pending_disk_in_pages += 1
+            self.disk_in_pages_total += 1
+            n += 1
+        return n
+
     def resume_staging_shortfall(self, rid: int) -> int:
         """Host frames ``resume`` is short of for staging ``rid``'s disk
         pages back, even after its own host pages promote device-ward and
@@ -1030,6 +1064,10 @@ class TieredKVAllocator:
         host_after = (self.host.free_pages + promote
                       + self.reclaimable_host_pages())
         stay = max(n_disk - dev_after, 0)   # pages the device cannot take
+        if self.direct_copy is not None:
+            # pass-through pages go disk->device directly — no transit
+            # frame; only the pages that must stay host-resident need one
+            return max(stay - host_after, 0)
         return max(max(stay, 1) - host_after, 0)
 
     def resume(self, rid: int) -> list[Migration] | None:
@@ -1058,9 +1096,21 @@ class TieredKVAllocator:
 
         moves = promote(len(self.host_pages_of(rid)))
         for ref in self._disk_refs_of(rid):
+            src = ref.page
+            if self.direct_copy is not None and self.device.free_pages > 0:
+                # direct path: the page lands on the device without a host
+                # bounce — the NVMe read is charged, the PCIe promotion is
+                # not (the saved host-transit bytes leave the link charge)
+                dframe = self._transfer_frame(ref, self.device, DEVICE)
+                assert dframe is not None
+                self.direct_copy(DISK, src, DEVICE, dframe)
+                self.pending_disk_in_pages += 1
+                self.disk_in_pages_total += 1
+                self.disk_direct_pages_total += 1
+                moves.append(Migration(rid, DISK, src, dframe, DEVICE))
+                continue
             if self.host.free_pages == 0:
                 self._reclaim_host(1)
-            src = ref.page
             hp = self._transfer_frame(ref, self.host, HOST)
             assert hp is not None          # shortfall checked up front
             self._fire_disk_copy(DISK, src, HOST, hp)

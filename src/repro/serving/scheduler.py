@@ -398,7 +398,11 @@ class Scheduler:
                 continue                     # host cannot stage: stay parked
             if n_disk:
                 self.stats["disk_stagings"] += n_disk
-            self.swap.note_promotions(len(moves))
+            # only HOST-sourced promotions ride the PCIe link; direct
+            # disk->device stagings charge the NVMe term alone (their
+            # host-transit bytes were never moved, so never billed)
+            self.swap.note_promotions(
+                sum(1 for m in moves if m.src_tier == HOST))
             slot = free_slots.pop(0)
             self.preempted.remove(req)
             plan.resumes.append(PlannedResume(req, slot, moves))
@@ -459,6 +463,29 @@ class Scheduler:
                 self.queue.remove(req)
                 plan.rejections.append(req)
                 continue
+            chunked = (self.chunk_tokens > 0
+                       and req.prompt_len > 0)
+            chunked_bound = None
+            if chunked:
+                # TTFT feasibility must model the CHUNK SCHEDULE, not a
+                # one-shot prefill: the prompt rides ceil(plen/chunk)
+                # consecutive iterations and TTFT accrues their latencies.
+                # A structurally infeasible request (even an idle system
+                # cannot meet its SLO) is rejected outright, like the
+                # interval check above; a request whose bound only breaks
+                # under today's transient traffic waits instead.
+                if (self._chunked_ttft_floor(req)
+                        > req.ttft_slo_s * (1 + 1e-9)):
+                    req.state = State.REJECTED
+                    req.reject_reason = ("chunked TTFT floor exceeds SLO: "
+                                         f"{req.prompt_len} tokens / "
+                                         f"{self.chunk_tokens}-token chunks")
+                    self.queue.remove(req)
+                    plan.rejections.append(req)
+                    continue
+                chunked_bound = self._chunked_ttft_bound(req, active)
+                if chunked_bound > req.ttft_slo_s * (1 + 1e-9):
+                    continue          # transient traffic: retry next iter
             if not self._try_admit_mem(req, total, active):
                 if not (self.cfg.preemption
                         and self._try_preempt_for(req, total, active,
@@ -469,8 +496,6 @@ class Scheduler:
                     continue
             slot = free_slots.pop(0)
             self.queue.remove(req)
-            chunked = (self.chunk_tokens > 0
-                       and req.prompt_len > 0)
             adm = PlannedAdmission(req, slot, chunked=chunked)
             if not chunked:
                 # stamp the TTFT this admission was certified under — the
@@ -478,6 +503,11 @@ class Scheduler:
                 # just claimed, that the executor charges at prefill time
                 adm.certified_ttft_s = self.ttft_model(
                     req, self.kv.spill_writeback_bytes_of(req.rid))
+            else:
+                # the per-chunk piggyback schedule this admission was
+                # certified under (the executor accrues real chunk dts
+                # into ttft_accum_s against this bound)
+                adm.certified_ttft_s = chunked_bound
             plan.admissions.append(adm)
             if chunked:
                 self._prefilling.append(req)
@@ -763,6 +793,47 @@ class Scheduler:
         if extra_req is not None:
             t += t_of(min(self.chunk_tokens, extra_req.prompt_len))
         return t
+
+    def _chunked_ttft_floor(self, req: Request) -> float:
+        """Structural lower bound on a chunked prefill's TTFT: its chunks
+        ride ``ceil(prompt_len / chunk_tokens)`` consecutive iterations, so
+        even an otherwise idle system pays at least the baseline decode
+        latency plus the chunk's own stack time per chunk. No schedule can
+        beat this — a request whose floor exceeds its TTFT SLO is rejected
+        outright (paper §4.2: pass back to the upper scheduler)."""
+        base = iter_time_with_interval_kv(
+            self.times_fn(1, self.max_seq, "decode"), self._iv)
+        t_of = self.prefill_seconds
+        total, start = 0.0, 0
+        while start < req.prompt_len:
+            end = min(start + self.chunk_tokens, req.prompt_len)
+            total += base + max(t_of(end) - t_of(start), 0.0)
+            start = end
+        return total
+
+    def _chunked_ttft_bound(self, req: Request,
+                            active: list[ActiveInfo]) -> float:
+        """Certified TTFT for a chunked admission: the modeled latencies of
+        the iterations its chunks ride (TTFT accrues per chunk, exactly as
+        the executor charges it). The first chunk's iteration carries the
+        KV/NVMe traffic already pending at plan time plus every in-flight
+        prefill's chunk overhead; later chunks ride iterations with that
+        transient traffic drained — the same "later iterations are strictly
+        cheaper" worst-case shape ``_resume_feasible`` certifies under."""
+        t_of = self.prefill_seconds
+        n = len(active) + 1
+        kv_in_now = (self.swap.streamed_bytes([a.rid for a in active])
+                     + self.swap.pending_in_bytes())
+        base = iter_time_with_interval_kv(
+            self.times_fn(n, self.max_seq, "decode"), self._iv)
+        total = self._iter_dt(n, kv_in_now, self.swap.pending_out_bytes(),
+                              self._chunk_overhead_s(req))
+        start = min(self.chunk_tokens, req.prompt_len)
+        while start < req.prompt_len:
+            end = min(start + self.chunk_tokens, req.prompt_len)
+            total += base + max(t_of(end) - t_of(start), 0.0)
+            start = end
+        return total
 
     def _plan_chunks(self, plan: IterationPlan) -> None:
         """One page-aligned chunk per in-flight chunked prefill per

@@ -130,6 +130,12 @@ class IterationRecord:
     disk_out_bytes: float = 0.0
     disk_in_pages: int = 0
     disk_out_pages: int = 0
+    # physical copy-stage engine activity sampled at the end of the step:
+    # pages handed to the data plane vs. pages whose copies actually ran.
+    # In sync mode the two are equal every iteration; in async mode issued
+    # can lead completed by the in-flight window (audited by I10)
+    staged_issued_pages: int = 0
+    staged_completed_pages: int = 0
     # modeled dt decomposition (iter_time_breakdown_kv)
     compute_s: float = 0.0
     kv_in_s: float = 0.0
@@ -333,6 +339,13 @@ class AuditReport:
           the clock are exactly the bytes the allocator moved, per tier.
       I9  request conservation: every admit is matched by a finish or is
           still in flight at export; parks == resumes + still-parked.
+      I10 copy-stage conservation: every page handed to the data plane is
+          charged exactly once — summed per-iteration issued pages equal
+          the plane's issue counter, the plane's issue counter equals its
+          completion counter plus what is still in flight, and at every
+          iteration prefix completions never exceed issues (an
+          async-reordered trace where a completion is recorded before its
+          issue fails here).
     """
     ok: bool
     violations: list[str]
@@ -523,6 +536,41 @@ def audit_trace(trace: dict) -> AuditReport:
         check(n_park == n_resume + footer["n_parked"],
               f"{n_park} parks != {n_resume} resumes + {footer['n_parked']} "
               f"still parked")
+
+        # I10: copy-stage conservation (only present once the engine runs a
+        # data plane). The final sync() in run() completes trailing pages
+        # AFTER the last iteration sampled its counters, so completed sums
+        # are bounded by — not equal to — the footer total; issued sums are
+        # exact because issues only happen inside steps.
+        if "staged_issued_pages_total" in footer:
+            sum_issued = sum(r.get("staged_issued_pages", 0) for r in its)
+            sum_completed = sum(r.get("staged_completed_pages", 0)
+                                for r in its)
+            check(sum_issued == footer["staged_issued_pages_total"],
+                  f"trace staged issues {sum_issued} != plane issue counter "
+                  f"{footer['staged_issued_pages_total']}")
+            check(footer["staged_issued_pages_total"]
+                  == footer["staged_completed_pages_total"]
+                  + footer["staged_inflight_pages"],
+                  f"plane issued {footer['staged_issued_pages_total']} != "
+                  f"completed {footer['staged_completed_pages_total']} + "
+                  f"in flight {footer['staged_inflight_pages']}")
+            check(sum_completed <= footer["staged_completed_pages_total"],
+                  f"trace staged completions {sum_completed} exceed plane "
+                  f"completion counter "
+                  f"{footer['staged_completed_pages_total']}")
+            run_issued = run_completed = 0
+            for r in its:
+                run_issued += r.get("staged_issued_pages", 0)
+                run_completed += r.get("staged_completed_pages", 0)
+                check(run_completed <= run_issued,
+                      f"iter {r['index']}: {run_completed} staged pages "
+                      f"completed before only {run_issued} were issued "
+                      f"(completion recorded ahead of its issue)")
+            direct = footer.get("disk_direct_pages_total", 0)
+            check(0 <= direct <= footer["disk_in_pages_total"],
+                  f"direct disk reads {direct} exceed total disk reads "
+                  f"{footer['disk_in_pages_total']}")
 
     return AuditReport(ok=not violations, violations=violations,
                        checks=checks, totals=totals)

@@ -1,0 +1,231 @@
+"""Async data plane + incremental prefill differential traces (nightly).
+
+The async copy-stage engine moves the physical page copies off the modeled
+critical path — but the tokens, the modeled clock, and the conservation
+audit must be UNCHANGED: both engines run the same plans over the same
+accounting plane, so any divergence is a hazard bug (a copy observed the
+wrong bytes) rather than a policy difference. Two traces:
+
+  * **Disk pressure**: the fig18 shape — parks overflow to NVMe, resumes
+    stage disk -> host -> device, and the async run additionally prefetches
+    parked pages ahead of their predicted resume. Bitwise tokens, exactly
+    equal modeled clocks, clean audits (including the I10 copy-stage
+    conservation check, which only the async run exercises non-trivially).
+  * **Preempt/resume without disk traffic**: parks and resume promotions
+    ride the plane's queue alone — the reorder window is largest here
+    because nothing forces an early drain.
+
+Plus the incremental-prefill gate: with the chunk kernel on, the engine
+locksteps the frozen dense reference (final-chunk logits + every decode
+row) while the REAL prefill compute drops from quadratic to linear in the
+chunk schedule.
+"""
+import numpy as np
+import pytest
+
+from repro.core.interval import iter_time_with_interval_kv
+from repro.serving.request import Request
+from repro.serving.telemetry import audit_trace
+
+from _engine_builders import mk_reduced_engine
+from harness import DualEngine
+
+pytestmark = pytest.mark.slow
+
+
+def _req(rng, rid, plen, new, tpot):
+    return Request(rid=rid, prompt=rng.integers(0, 100, plen
+                                                ).astype(np.int32),
+                   max_new_tokens=new, ttft_slo_s=10.0, tpot_slo_s=tpot)
+
+
+def _tpot_short(eng):
+    pb = eng.kv.page_bytes
+    dt_1 = iter_time_with_interval_kv(eng.times_fn(4, 48, "decode"),
+                                      eng.interval, 1 * pb)
+    dt_2 = iter_time_with_interval_kv(eng.times_fn(1, 48, "decode"),
+                                      eng.interval, 2 * pb)
+    assert dt_1 < dt_2
+    return (dt_1 + dt_2) / 2
+
+
+def _drain(eng, max_iters=400):
+    it = 0
+    while (eng.scheduler.has_work() or eng._active_batch() > 0) \
+            and it < max_iters:
+        eng.step()
+        it += 1
+    assert it < max_iters, "trace did not drain"
+    eng.kv.check_invariants()
+    report = eng.trace.audit()
+    assert report.ok, report.violations
+    return eng
+
+
+def _run_disk_pressure(async_plane: bool):
+    """The fig18 pressure trace from test_disk_tier, async on/off."""
+    eng, _ = mk_reduced_engine(name=f"adp{async_plane}", max_batch=4,
+                               max_seq=48, page_size=8,
+                               extra_device_pages=4, host_pages=2,
+                               preemption=True, disk_pages=16,
+                               async_data_plane=async_plane,
+                               batches=(1, 2, 4), seqs=(16, 32, 64))
+    tpot = _tpot_short(eng)
+    rng = np.random.default_rng(11)
+    s0 = _req(rng, 9, 4, 12, 1e-3)
+    l1 = _req(rng, 0, 16, 16, 1e-3)
+    shorts = [_req(rng, i, 4, 4, tpot) for i in range(1, 5)]
+    eng.submit(s0)
+    eng.submit(l1)
+    eng.step()
+    eng.step()
+    for s in shorts:
+        eng.submit(s)
+    return _drain(eng)
+
+
+def _run_preempt_burst(async_plane: bool):
+    """The preemption burst with a disk tier attached but ample host: every
+    park/resume rides the plane's d2h/h2d queue, no NVMe traffic."""
+    eng, _ = mk_reduced_engine(name=f"apb{async_plane}", max_batch=4,
+                               max_seq=48, page_size=8,
+                               extra_device_pages=4, host_pages=64,
+                               preemption=True, disk_pages=16,
+                               async_data_plane=async_plane,
+                               batches=(1, 2, 4), seqs=(16, 32, 64))
+    tpot = _tpot_short(eng)
+    rng = np.random.default_rng(3)
+    s0 = _req(rng, 0, 4, 12, 1e-3)
+    long_req = _req(rng, 1, 16, 16, 1e-3)
+    shorts = [_req(rng, i, 4, 4, tpot) for i in range(2, 8)]
+    eng.submit(s0)
+    eng.submit(long_req)
+    eng.step()
+    eng.step()
+    for s in shorts:
+        eng.submit(s)
+    return _drain(eng)
+
+
+def _assert_equivalent(sync_eng, async_eng, expect_disk: bool,
+                       exact_clock: bool = True):
+    # bitwise greedy tokens per request
+    tok_s = {r.rid: list(r.generated) for r in sync_eng.finished}
+    tok_a = {r.rid: list(r.generated) for r in async_eng.finished}
+    assert tok_s.keys() == tok_a.keys()
+    for rid in tok_s:
+        assert tok_s[rid] == tok_a[rid], f"token divergence rid={rid}"
+    if exact_clock:
+        # EXACTLY the same modeled clock: without prefetch the async plane
+        # moves physical copies, never modeled charges
+        assert async_eng.clock_s == sync_eng.clock_s
+    else:
+        # prefetch shifts NVMe charges to earlier iterations (honest
+        # accounting, different timing) — the clocks stay within a hair
+        # and every request still meets its SLOs in both runs
+        assert abs(async_eng.clock_s - sync_eng.clock_s) \
+            <= 0.02 * sync_eng.clock_s
+        for eng in (sync_eng, async_eng):
+            for r in eng.finished:
+                m = r.metrics()
+                assert m["tpot_ok"] and m["ttft_ok"], f"SLO miss rid={r.rid}"
+    # the async run actually queued work and finished it all
+    foot_a = async_eng.trace.footer()
+    assert foot_a["staged_issued_pages_total"] > 0
+    assert foot_a["staged_inflight_pages"] == 0
+    assert foot_a["staged_issued_pages_total"] \
+        == foot_a["staged_completed_pages_total"]
+    # sync mode completes every op in the iteration that issued it
+    for r in sync_eng.trace.iterations:
+        assert r.staged_issued_pages == r.staged_completed_pages
+    if expect_disk:
+        assert sync_eng.kv.disk_out_pages_total > 0
+
+
+def test_async_disk_pressure_bitwise_and_clock_identical():
+    sync_eng = _run_disk_pressure(async_plane=False)
+    async_eng = _run_disk_pressure(async_plane=True)
+    _assert_equivalent(sync_eng, async_eng, expect_disk=True,
+                       exact_clock=False)
+    # at least one iteration's copies were still in flight at its end —
+    # the plane really deferred work past the boundary that issued it
+    deferred = any(r.staged_issued_pages != r.staged_completed_pages
+                   for r in async_eng.trace.iterations)
+    assert deferred, "async run never overlapped a copy"
+    # the staged prefetch engaged, and it creates no extra NVMe traffic:
+    # every disk page is still read exactly once per round trip
+    assert async_eng.prefetch_pages_total >= 1
+    assert sync_eng.prefetch_pages_total == 0
+    assert async_eng.kv.disk_in_pages_total == sync_eng.kv.disk_in_pages_total
+    assert async_eng.kv.disk_out_pages_total \
+        == sync_eng.kv.disk_out_pages_total
+
+
+def test_async_preempt_burst_bitwise_and_clock_identical():
+    sync_eng = _run_preempt_burst(async_plane=False)
+    async_eng = _run_preempt_burst(async_plane=True)
+    assert async_eng.scheduler.stats["preemptions"] >= 1
+    _assert_equivalent(sync_eng, async_eng, expect_disk=False)
+
+
+def test_async_trace_roundtrip_audits_offline():
+    """The exported async trace (dict -> json -> dict) passes audit_trace
+    offline, staged counters included — the CI smoke's exact path."""
+    import json
+    eng = _run_disk_pressure(async_plane=True)
+    rt = json.loads(json.dumps(eng.trace.to_dict()))
+    report = audit_trace(rt)
+    assert report.ok, report.violations
+    assert rt["footer"]["staged_issued_pages_total"] > 0
+
+
+def test_incremental_prefill_locksteps_and_is_linear():
+    """Incremental chunk kernel vs the frozen dense reference, and the
+    end of quadratic recompute: total prefill tokens computed must equal
+    the summed prompt lengths exactly (the recompute path pays the full
+    prefix again on every chunk)."""
+    eng, _ = mk_reduced_engine(name="incr", max_batch=2, max_seq=32,
+                               page_size=8, extra_device_pages=16,
+                               host_pages=0, prefill_chunk_tokens=8,
+                               incremental_prefill=True,
+                               batches=(1, 2, 4), seqs=(16, 32, 64))
+    dual = DualEngine(eng)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, 100, 6 + 7 * (i % 3)
+                                        ).astype(np.int32),
+                    max_new_tokens=8, ttft_slo_s=10.0, tpot_slo_s=10.0)
+            for i in range(6)]
+    for r in reqs:
+        eng.submit(r)
+    dual.run_until_drained(max_iters=400)
+    assert len(eng.finished) == 6
+    for r in eng.finished:
+        assert len(r.generated) == 8
+        assert r.prefill_pos == r.prompt_len
+    assert dual.prefill_compares == 6
+    assert dual.decode_compares >= 6 * 7
+    # linear, not quadratic: every prompt token computed exactly once
+    assert eng.prefill_tokens_computed == sum(len(r.prompt) for r in reqs)
+    eng.kv.check_invariants()
+
+
+def test_recompute_prefill_is_quadratic_baseline():
+    """Pin the bug the incremental kernel fixes: the recompute path's real
+    compute strictly exceeds the summed prompt lengths whenever a prompt
+    spans several chunks."""
+    eng, _ = mk_reduced_engine(name="quad", max_batch=2, max_seq=32,
+                               page_size=8, extra_device_pages=16,
+                               host_pages=0, prefill_chunk_tokens=8,
+                               batches=(1, 2, 4), seqs=(16, 32, 64))
+    rng = np.random.default_rng(0)
+    req = Request(rid=0, prompt=rng.integers(0, 100, 24).astype(np.int32),
+                  max_new_tokens=4, ttft_slo_s=10.0, tpot_slo_s=10.0)
+    eng.submit(req)
+    it = 0
+    while (eng.scheduler.has_work() or eng._active_batch() > 0) and it < 50:
+        eng.step()
+        it += 1
+    assert len(eng.finished) == 1
+    # chunks at 8/16/24: recompute pays 8 + 16 + 24 = 48 > 24
+    assert eng.prefill_tokens_computed == 48

@@ -1,0 +1,306 @@
+"""Copy-stage engine hazards and the direct disk<->device path.
+
+Every scenario runs the SAME allocator op sequence against a synchronous
+twin and an async twin (drains only at pass boundaries, like the serving
+engine) and asserts the physical pools are bitwise identical afterwards —
+the async data plane must be observationally equivalent to the PR 5
+synchronous hooks, just off the critical path.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.serving.data_plane import CopyStageEngine
+from repro.serving.kv_cache import PageConfig
+from repro.serving.kv_offload import (DEVICE, DISK, HOST, LinkSpec,
+                                      TieredKVAllocator)
+
+_PAGE = 4          # tokens per page
+_BPT = 4           # bytes per token -> page_bytes = 16
+_W = 8             # payload floats per physical page frame
+
+
+class _Twin:
+    """One allocator + physical pools + copy-stage plane, hooks wired the
+    way serving/engine.py wires them."""
+
+    def __init__(self, *, dev_pages, host_pages, disk_pages,
+                 async_mode, direct=False, background=True):
+        pcfg = PageConfig(page_size=_PAGE, bytes_per_token=_BPT)
+        pb = _PAGE * _BPT
+        self.kv = TieredKVAllocator(dev_pages * pb, host_pages * pb, pcfg,
+                                    disk_bytes=disk_pages * pb,
+                                    disk_link=LinkSpec(bw_bytes_s=1e9,
+                                                       latency_s=0.0))
+        self._pool = [jnp.zeros((dev_pages, _W), jnp.float32)]
+        self.host_pool = np.zeros((host_pages, _W), np.float32)
+        self.disk_pool = np.zeros((disk_pages, _W), np.float32)
+        self.plane = CopyStageEngine(host_pool=self.host_pool,
+                                     disk_pool=self.disk_pool,
+                                     get_pool=lambda: self._pool[0],
+                                     set_pool=self._set_pool,
+                                     async_mode=async_mode,
+                                     background=background)
+        self.kv.park_copy = lambda s, d: self.plane.stage("d2h", s, d)
+        self.kv.promote_copy = lambda s, d: self.plane.stage("h2d", s, d)
+        self.kv.disk_copy = self._disk_copy
+        if direct:
+            self.kv.direct_copy = self._direct_copy
+
+    def _set_pool(self, pool):
+        self._pool[0] = pool
+
+    def _disk_copy(self, st, sp, dt, dp):
+        self.plane.stage("h2disk" if dt == DISK else "disk2h", sp, dp)
+
+    def _direct_copy(self, st, sp, dt, dp):
+        self.plane.stage("disk2d" if dt == DEVICE else "d2disk", sp, dp)
+
+    def fill_device(self, rid, base):
+        for i, f in enumerate(self.kv.device_pages_of(rid)):
+            self._pool[0] = self._pool[0].at[f].set(
+                float(base + i) * np.ones(_W, np.float32))
+
+    def pools(self):
+        self.plane.sync()
+        return (np.asarray(self._pool[0]), self.host_pool.copy(),
+                self.disk_pool.copy())
+
+
+def _assert_twins_equal(sync, asyn):
+    for name, a, b in zip(("device", "host", "disk"),
+                          sync.pools(), asyn.pools()):
+        np.testing.assert_array_equal(a, b, err_msg=f"{name} pool diverged")
+
+
+def _park_to_disk(tw, rid, tokens, base):
+    """alloc on device, fill with recognizable bytes, park, retire the
+    whole parked set to disk."""
+    assert tw.kv.alloc(rid, tokens) is not None
+    tw.fill_device(rid, base)
+    assert tw.kv.park(rid) is not None
+    tw.kv.demote_to_disk(rid, len(tw.kv.host_pages_of(rid)))
+
+
+# ---------------------------------------------------------------------------
+# hazard scenarios (satellite: async hazard unit tests)
+# ---------------------------------------------------------------------------
+
+def test_resume_chains_through_one_transit_frame_waw():
+    """Resume staging reuses ONE host transit frame for a chain of disk
+    pages: disk2h -> h2d -> disk2h (same frame). The queued promotion must
+    read the frame before the next staging overwrites it (WAW/RAR on the
+    reusable transit frame)."""
+    twins = []
+    for mode in (False, True):
+        tw = _Twin(dev_pages=4, host_pages=4, disk_pages=8, async_mode=mode)
+        _park_to_disk(tw, 1, 16, base=10)          # 4 disk pages
+        if mode:
+            # the engine drains plan-staged ops BEFORE any prefill scatter
+            # writes device frames; rid 2's fill below emulates that scatter
+            tw.plane.drain()
+        # rid 2 occupies 3 host frames so resume(1) has exactly one transit
+        assert tw.kv.alloc(2, 12) is not None
+        tw.fill_device(2, base=50)
+        assert tw.kv.park(2) is not None
+        if mode:
+            tw.plane.drain()                       # iteration boundary
+        assert tw.kv.host.free_pages == 1
+        moves = tw.kv.resume(1)
+        assert moves is not None
+        twins.append(tw)
+    _assert_twins_equal(*twins)
+    # the resumed request's device frames hold its original bytes
+    tw = twins[1]
+    dev = tw.pools()[0]
+    got = sorted(float(dev[f][0]) for f in tw.kv.device_pages_of(1))
+    assert got == [10.0, 11.0, 12.0, 13.0]
+
+
+def test_park_overlaps_same_pass_demotion():
+    """A park's d2h legs and a demotion's h2disk retirement of those same
+    frames land in ONE planning pass — plus a second park that reuses the
+    freed host frames in the same pass. FIFO drain must read the frames
+    to disk before the second park overwrites them."""
+    twins = []
+    for mode in (False, True):
+        tw = _Twin(dev_pages=4, host_pages=2, disk_pages=8, async_mode=mode)
+        assert tw.kv.alloc(1, 8) is not None       # 2 device pages
+        tw.fill_device(1, base=20)
+        assert tw.kv.alloc(2, 8) is not None
+        tw.fill_device(2, base=70)
+        # one pass, no drain in between: park(1) writes host frames, the
+        # demotion reads them to disk and frees them, park(2) rewrites them
+        assert tw.kv.park(1) is not None
+        tw.kv.demote_to_disk(1, 2)
+        assert tw.kv.park(2) is not None
+        twins.append(tw)
+    _assert_twins_equal(*twins)
+    tw = twins[1]
+    _, host, disk = tw.pools()
+    assert sorted(float(disk[r.page][0])
+                  for r in tw.kv._disk_refs_of(1)) == [20.0, 21.0]
+    assert sorted(float(host[p][0])
+                  for p in tw.kv.host_pages_of(2)) == [70.0, 71.0]
+
+
+def test_prefetch_races_its_own_resume():
+    """A staged prefetch's disk2h writes and the resume's h2d promotions of
+    the SAME host frames queue back to back — the promotion must observe
+    the prefetched bytes (RAW across the prefetch/resume boundary)."""
+    twins = []
+    for mode in (False, True):
+        tw = _Twin(dev_pages=4, host_pages=4, disk_pages=8, async_mode=mode)
+        _park_to_disk(tw, 1, 16, base=30)
+        # prefetch and resume in one pass, no drain between: the resume's
+        # promotions read host frames the queued prefetch has not yet
+        # physically written
+        assert tw.kv.prefetch_from_disk(1, tw.kv.host.free_pages) == 4
+        moves = tw.kv.resume(1)
+        assert moves is not None
+        twins.append(tw)
+    _assert_twins_equal(*twins)
+    tw = twins[1]
+    dev = tw.pools()[0]
+    got = sorted(float(dev[f][0]) for f in tw.kv.device_pages_of(1))
+    assert got == [30.0, 31.0, 32.0, 33.0]
+
+
+def test_background_retirement_vs_host_write_guard():
+    """An engine-side host-pool write (decode writeback / prefill spill)
+    must wait for an in-flight background retirement that still reads the
+    frame: guard_host_writes serializes them, so the disk page keeps the
+    pre-overwrite bytes."""
+    host = np.zeros((4, _W), np.float32)
+    disk = np.zeros((4, _W), np.float32)
+    box = [jnp.zeros((2, _W), jnp.float32)]
+    plane = CopyStageEngine(host_pool=host, disk_pool=disk,
+                            get_pool=lambda: box[0],
+                            set_pool=lambda p: box.__setitem__(0, p),
+                            async_mode=True)
+    host[1] = 7.0
+    plane.stage("h2disk", 1, 2)
+    plane.drain()                       # submits to the background worker
+    plane.guard_host_writes([1])        # engine about to overwrite frame 1
+    host[1] = 99.0
+    plane.sync()
+    assert float(disk[2][0]) == 7.0     # retirement read the old bytes
+
+
+def test_duplicate_dst_flushes_batch():
+    """Two queued ops writing the same dst frame never share a batched
+    scatter (XLA duplicate-index order is unspecified): last write wins,
+    exactly as in sync mode."""
+    pools = []
+    for mode in (False, True):
+        host = np.arange(4 * _W, dtype=np.float32).reshape(4, _W)
+        disk = np.zeros((4, _W), np.float32)
+        box = [jnp.zeros((2, _W), jnp.float32)]
+        plane = CopyStageEngine(host_pool=host, disk_pool=disk,
+                                get_pool=lambda: box[0],
+                                set_pool=lambda p: box.__setitem__(0, p),
+                                async_mode=mode, background=False)
+        plane.stage("h2disk", 0, 3)
+        plane.stage("h2disk", 1, 3)     # WAW on disk frame 3
+        plane.stage("h2d", 2, 0)
+        plane.stage("h2d", 3, 0)        # WAW on device frame 0
+        plane.sync()
+        pools.append((np.asarray(box[0]), disk.copy()))
+    np.testing.assert_array_equal(pools[0][0], pools[1][0])
+    np.testing.assert_array_equal(pools[0][1], pools[1][1])
+    np.testing.assert_array_equal(pools[1][1][3], host[1])
+    np.testing.assert_array_equal(pools[1][0][0], host[3])
+
+
+def test_iteration_counters_conserve():
+    """issued == completed + inflight at every point; per-iteration deltas
+    sum to the totals (the engine-side contract behind audit check I10)."""
+    host = np.ones((4, _W), np.float32)
+    disk = np.zeros((4, _W), np.float32)
+    box = [jnp.zeros((2, _W), jnp.float32)]
+    plane = CopyStageEngine(host_pool=host, disk_pool=disk,
+                            get_pool=lambda: box[0],
+                            set_pool=lambda p: box.__setitem__(0, p),
+                            async_mode=True, background=False)
+    plane.stage("h2disk", 0, 0)
+    plane.stage("h2disk", 1, 1)
+    assert plane.inflight_pages() == 2
+    assert plane.take_iteration_counters() == (2, 0)
+    plane.drain()
+    assert plane.inflight_pages() == 0
+    assert plane.take_iteration_counters() == (0, 2)
+    assert plane.issued_pages_total == plane.completed_pages_total == 2
+
+
+# ---------------------------------------------------------------------------
+# direct disk<->device path (satellite: host bounce bypass + byte accounting)
+# ---------------------------------------------------------------------------
+
+def test_direct_resume_bypasses_host_and_pcie_charge():
+    """With direct_copy wired, resume stages disk pages straight onto free
+    device frames: the NVMe read is still charged, the host-transit PCIe
+    promotion charge disappears, and the bytes land bit-identically to the
+    host-bounce path."""
+    bounce = _Twin(dev_pages=4, host_pages=4, disk_pages=8, async_mode=False)
+    direct = _Twin(dev_pages=4, host_pages=4, disk_pages=8, async_mode=False,
+                   direct=True)
+    for tw in (bounce, direct):
+        _park_to_disk(tw, 1, 16, base=40)
+        tw.moves = tw.kv.resume(1)
+        assert tw.moves is not None
+    # byte accounting: both charge 4 NVMe reads ...
+    for tw in (bounce, direct):
+        assert tw.kv.disk_in_pages_total == 4
+        assert tw.kv.pending_disk_in_pages == 4
+    # ... but only the bounce path puts promotion bytes on the PCIe link
+    # (the scheduler charges HOST-src migrations via note_promotions)
+    assert sum(1 for m in bounce.moves if m.src_tier == HOST) == 4
+    assert sum(1 for m in direct.moves if m.src_tier == HOST) == 0
+    assert sum(1 for m in direct.moves if m.src_tier == DISK) == 4
+    assert direct.kv.disk_direct_pages_total == 4
+    assert bounce.kv.disk_direct_pages_total == 0
+    # the direct path never touched a host frame
+    assert direct.kv.host.used_pages == 0
+    # bitwise identical device-resident KV either way
+    dev_b, dev_d = bounce.pools()[0], direct.pools()[0]
+    got_b = sorted(tuple(dev_b[f]) for f in bounce.kv.device_pages_of(1))
+    got_d = sorted(tuple(dev_d[f]) for f in direct.kv.device_pages_of(1))
+    assert got_b == got_d
+
+
+def test_direct_path_shortfall_drops_transit_frame():
+    """resume_staging_shortfall: the host-bounce path always needs one
+    transit frame; the direct path needs none when the device can absorb
+    the whole disk set."""
+    for direct, want in ((False, 1), (True, 0)):
+        tw = _Twin(dev_pages=4, host_pages=4, disk_pages=8,
+                   async_mode=False, direct=direct)
+        _park_to_disk(tw, 1, 16, base=40)
+        # consume every host frame so staging has no transit room
+        assert tw.kv.alloc(2, 12) is not None
+        tw.fill_device(2, base=60)
+        assert tw.kv.park(2) is not None
+        assert tw.kv.alloc(3, 4) is not None
+        assert tw.kv.park(3) is not None
+        assert tw.kv.host.free_pages == 0
+        assert tw.kv.resume_staging_shortfall(1) == want
+
+
+def test_prefetch_only_uses_free_host_frames():
+    """Prefetch is opportunistic: it stops at host capacity, never evicts,
+    and charges the pending NVMe counters like any staging."""
+    tw = _Twin(dev_pages=4, host_pages=4, disk_pages=8, async_mode=True)
+    _park_to_disk(tw, 1, 16, base=10)
+    tw.plane.drain()
+    assert tw.kv.alloc(2, 8) is not None
+    tw.fill_device(2, base=90)
+    assert tw.kv.park(2) is not None            # 2 host frames taken
+    before = tw.kv.pending_disk_in_pages
+    n = tw.kv.prefetch_from_disk(1, 99)
+    assert n == 2                               # only the free frames
+    assert tw.kv.host.free_pages == 0
+    assert tw.kv.pending_disk_in_pages == before + 2
+    assert len(tw.kv._disk_refs_of(1)) == 2     # half still on disk
+    tw.plane.sync()
+    host = tw.pools()[1]
+    got = sorted(float(host[p][0]) for p in tw.kv.host_pages_of(1))
+    assert got == [10.0, 11.0]

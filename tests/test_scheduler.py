@@ -195,6 +195,58 @@ def test_single_chunk_prompt_still_routes_through_chunks():
         == [(0, 8, True)]
 
 
+def test_chunked_admission_models_chunk_schedule_not_one_shot():
+    """Regression: the one-shot TTFT model (here the stub: 0 s) certifies a
+    request whose REAL chunked TTFT — ceil(plen/chunk) iterations of accrued
+    latency — violates its SLO. Admission must bound the chunk schedule:
+    reject when even an idle system cannot meet the SLO, and stamp the
+    chunked bound (not the one-shot figure) when it can."""
+    sched, _, _ = mk_sched(device_pages=16, chunk_tokens=8, max_seq=64)
+    probe = mk_req(0, prompt_len=32, new=8)          # 4 chunks
+    floor = sched._chunked_ttft_floor(probe)
+    assert floor > 0.0
+    # the pre-PR bound would have admitted: one-shot model says 0 s
+    tight = mk_req(1, prompt_len=32, new=8, ttft=floor / 2)
+    assert sched.ttft_model(tight, 0.0) <= tight.ttft_slo_s
+    sched.submit(tight)
+    plan = sched.plan(view())
+    assert not plan.admissions
+    assert [r.rid for r in plan.rejections] == [1]
+    assert "chunked TTFT floor" in tight.reject_reason
+
+    # a feasible SLO admits — certified under the chunk schedule, which can
+    # never undercut the structural floor
+    ok = mk_req(2, prompt_len=32, new=8, ttft=floor * 10)
+    sched.submit(ok)
+    plan = sched.plan(view())
+    assert [a.req.rid for a in plan.admissions] == [2]
+    assert plan.admissions[0].chunked
+    assert plan.admissions[0].certified_ttft_s >= floor
+
+
+def test_chunked_admission_waits_out_transient_traffic():
+    """An SLO above the structural floor but below the bound under today's
+    pending NVMe backlog is a WAIT, not a reject: the request stays queued
+    and admits once the transient traffic drains."""
+    sched, kv, _ = mk_sched(device_pages=16, chunk_tokens=8, max_seq=64,
+                            disk_pages=16, disk_bw=1e6)   # slow NVMe
+    probe = mk_req(0, prompt_len=16, new=8)
+    floor = sched._chunked_ttft_floor(probe)
+    # a synthetic NVMe backlog the first chunk's iteration would eat
+    kv.pending_disk_in_pages = 1000
+    kv.disk_in_pages_total += 1000
+    req = mk_req(1, prompt_len=16, new=8, ttft=floor * 1.5)
+    assert sched._chunked_ttft_bound(req, []) > req.ttft_slo_s
+    sched.submit(req)
+    plan = sched.plan(view())
+    assert not plan.admissions and not plan.rejections
+    assert [r.rid for r in sched.queue] == [1]       # still queued
+    # backlog drains -> same request admits on a later plan
+    kv.pending_disk_in_pages = 0
+    plan = sched.plan(view())
+    assert [a.req.rid for a in plan.admissions] == [1]
+
+
 # ---------------------------------------------------------------------------
 # Victim selection + preempt-to-host planning
 # ---------------------------------------------------------------------------

@@ -74,6 +74,7 @@ def mk_recorder() -> TraceRecorder:
         pending_out_bytes=pend_out,
         certified_kv_in_bytes=kv_in, certified_kv_out_bytes=kv_out,
         disk_in_bytes=1 * PB, disk_in_pages=1,
+        staged_issued_pages=4, staged_completed_pages=3,
         compute_s=compute, kv_in_s=kv_in_s, kv_out_s=kv_out / BW,
         pcie_s=pcie, disk_s=disk_s, model_dt_s=dt,
         link_bw_bytes_s=BW, certified_dt_s=dt * 1.25,
@@ -83,7 +84,8 @@ def mk_recorder() -> TraceRecorder:
     rec.event("finish", 0, t_end, slot=0)
     rec.add_iteration(IterationRecord(
         index=1, t_start_s=t_end, t_end_s=t_end, dt_s=0.0, interval=10**9,
-        decode_batch=0, occupancy=_occupancy(0, 0, 0)))
+        decode_batch=0, staged_completed_pages=1,   # drained at boundary
+        occupancy=_occupancy(0, 0, 0)))
 
     rec._footer_fn = lambda: {
         "page_bytes": PB, "clock_s": t_end,
@@ -92,6 +94,8 @@ def mk_recorder() -> TraceRecorder:
         "noted_in_pages_total": 2, "pending_in_pages": 0,
         "noted_out_pages_total": 1, "pending_out_pages": 0,
         "promoted_pages_total": 1,
+        "staged_issued_pages_total": 4, "staged_completed_pages_total": 4,
+        "staged_inflight_pages": 0, "disk_direct_pages_total": 0,
         "cow_in_bytes_total": 0.0, "cow_out_bytes_total": 0.0,
         "n_finished": 1, "n_rejected": 0, "n_active": 0, "n_parked": 0}
     return rec
@@ -177,6 +181,43 @@ def test_audit_detects_footer_drain_mismatch():
         tr["footer"]["disk_in_pages_total"] = 2
     viol = _corrupt(over)
     assert any("disk_in" in v for v in viol)
+
+
+def test_audit_detects_double_charged_staged_page():
+    def over(tr):                     # a page counted complete twice
+        tr["iterations"][0]["staged_completed_pages"] += 2
+    viol = _corrupt(over)
+    assert any("exceed plane" in v for v in viol)
+
+
+def test_audit_detects_never_charged_staged_page():
+    # variant A: the plane's completion counter loses a page that is not
+    # in flight either -> issued != completed + inflight
+    def lost(tr):
+        tr["footer"]["staged_completed_pages_total"] -= 1
+    viol = _corrupt(lost)
+    assert any("in flight" in v for v in viol)
+
+    # variant B: an iteration forgets pages it handed to the plane
+    def forgot(tr):
+        tr["iterations"][0]["staged_issued_pages"] = 0
+    viol = _corrupt(forgot)
+    assert any("issue counter" in v for v in viol)
+
+
+def test_audit_detects_async_reordered_completion():
+    def reorder(tr):                  # completion recorded before its issue
+        tr["iterations"][0]["staged_issued_pages"] = 0
+        tr["iterations"][1]["staged_issued_pages"] = 4
+    viol = _corrupt(reorder)
+    assert any("ahead of its issue" in v for v in viol)
+
+
+def test_audit_detects_direct_pages_over_disk_total():
+    def over(tr):                     # more direct reads than NVMe reads
+        tr["footer"]["disk_direct_pages_total"] = 5
+    viol = _corrupt(over)
+    assert any("direct disk reads" in v for v in viol)
 
 
 # ----------------------------------------------------------- Perfetto export --
