@@ -1,0 +1,269 @@
+"""Fig. 19 (extension): sustained-load serving with online interval
+autotuning vs every fixed interval in the offline range.
+
+The traffic harness replaces burst replay: a diurnal arrival process with
+multi-round chat sessions and mixed TTFT/TPOT SLO classes (``repro.data.
+workload``), honored on the modeled clock by ``ServingEngine.run`` — a
+request is invisible to the scheduler until ``arrival_s``, and queueing
+delay is measured from arrival. On top of it, the §5 online stage
+(``serving.autotune.IntervalTuner``) re-picks the offloading interval every
+iteration inside the offline ``[min, max]`` bracket.
+
+Scenario sizing (reduced model, modeled A10 clock): the offline range is
+exactly {1, 2}. Interval 1 hosts the whole layer stack but its weight
+transfers (~2.5ms/iter) overrun the 2ms interactive TPOT class — a fixed
+interval 1 admits those requests anyway (nothing re-checks the running
+interval's weight traffic on the clean admission path) and violates.
+Interval 2 meets every class but keeps half the stack resident — less host
+memory than the load actually requires. The tuner holds 2 while any
+interactive request is live or queued, lifts host-ward through the quiet
+diurnal troughs, and retreats (paying the demotion write-back) before the
+next interactive admission.
+
+Claims checked:
+  * arrivals honored — nothing is admitted before it arrives;
+  * zero SLO violations at the autotuned interval, while fixed interval 1
+    violates the interactive class;
+  * autotuned throughput >= every fixed interval in the range;
+  * the autotuned engine time-averages MORE hosted weight bytes than the
+    best SLO-clean fixed interval (the paper's objective — the throughput
+    tie with fixed-2 is not a wash, it is bought while hosting more);
+  * greedy tokens bitwise identical to the best fixed interval, and every
+    run passes the trace-conservation audit.
+
+Emits ``reports/BENCH_sustained_load.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import BenchResult, Claim, capture_trace
+from repro.configs import get_config
+from repro.configs.reduced import reduce_config
+from repro.core import costs
+from repro.core.analyzer import PerformanceAnalyzer
+from repro.core.hardware import A10
+from repro.core.interval import OffloadPlan
+from repro.data.workload import SLOClass, WorkloadConfig, generate_workload
+from repro.models.model import build_model
+from repro.models.transformer import pattern_info
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.request import Request
+from repro.serving.telemetry import summarize_latency
+
+# Geometry: d256/24-layer reduced model -> ~1.9MB units, ~2.46ms interval-1
+# and ~1.23ms interval-2 iterations on the modeled A10 link; HBM fits the
+# interval-2 resident set + 24 KV pages (interval 3 does not fit at all,
+# so the offline range is {1, 2}); the host tier absorbs spills and the
+# tuner's retreat demotions.
+D_MODEL, HEADS, LAYERS, D_FF, VOCAB = 256, 4, 24, 1024, 128
+MAX_BATCH, MAX_SEQ, PAGE = 4, 64, 16
+DEVICE_EXTRA_PAGES, HOST_PAGES = 24, 24
+SIZING_INTERVAL = 2                      # HBM anchored at this resident set
+FIXED_INTERVALS = [1, 2]                 # the offline range, swept
+SEED, N_REQUESTS = 11, 120
+# interactive TPOT sits on the performance record's 2ms grid floor — the
+# tightest SLO the offline stage can certify at this reduced scale
+SLO_CLASSES = (SLOClass("interactive", 0.5, 0.002, weight=0.45),
+               SLOClass("standard", 1.0, 0.006, weight=0.35),
+               SLOClass("batch", 4.0, 0.02, weight=0.20))
+
+
+def mk_engine(name: str, autotune: bool = False) -> ServingEngine:
+    cfg = reduce_config(get_config("qwen2.5-3b"), d_model=D_MODEL,
+                        heads=HEADS, layers=LAYERS, d_ff=D_FF, vocab=VOCAB)
+    model = build_model(cfg)
+    an = PerformanceAnalyzer(cfg, A10, measure="model")
+    kv_tok = max(costs.kv_cache_bytes(cfg, 1, 1, model.virtual_kv), 1)
+    _, units = pattern_info(cfg)
+    pb = PAGE * kv_tok
+    hbm = OffloadPlan(units, SIZING_INTERVAL).device_bytes(
+        costs.unit_weight_bytes(cfg)) + DEVICE_EXTRA_PAGES * pb
+    slos = [0.002 * k for k in range(1, 30)]
+    rec_p = an.generate_record(slos, [1, 2, 4, 8], [16, 32, 64], "prefill")
+    rec_d = an.generate_record(slos, [1, 2, 4, 8], [16, 32, 64], "decode")
+    return ServingEngine(name, model, A10, rec_p, rec_d, an.layer_times,
+                         EngineConfig(max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                                      page_size=PAGE, hbm_budget_bytes=hbm,
+                                      host_kv_bytes=HOST_PAGES * pb,
+                                      autotune=autotune))
+
+
+def workload(n: int = N_REQUESTS, seed: int = SEED) -> list[Request]:
+    # sized so the SLO-clean configurations keep up with the diurnal peaks
+    # (transient queueing only) while fixed interval 1 falls behind
+    wcfg = WorkloadConfig(
+        seed=seed, process="diurnal", rate_per_s=80.0,
+        diurnal_amplitude=0.6, diurnal_period_s=0.5,
+        mean_rounds=2.0, mean_think_s=0.02,
+        system_prompt_len=16, median_turn_len=16, turn_len_sigma=0.0,
+        max_prompt_len=48, mean_output_len=10.0, max_output_len=16,
+        vocab_size=VOCAB, slo_classes=SLO_CLASSES)
+    return generate_workload(wcfg, n)
+
+
+def clone_requests(reqs: list[Request]) -> list[Request]:
+    """Fresh Request objects for each engine run (runs mutate state)."""
+    return [Request(rid=r.rid, prompt=r.prompt.copy(),
+                    max_new_tokens=r.max_new_tokens,
+                    ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
+                    arrival_s=r.arrival_s) for r in reqs]
+
+
+def hosted_bytes_time_avg(eng: ServingEngine) -> float:
+    """Time-averaged weight bytes the engine kept on the host — the
+    quantity the paper maximizes subject to the SLOs."""
+    num = den = 0.0
+    for r in eng.trace.iterations:
+        hb = OffloadPlan(eng.num_units, r.interval).host_bytes(
+            eng.unit_bytes)
+        num += hb * r.dt_s
+        den += r.dt_s
+    return num / max(den, 1e-12)
+
+
+def run_engine(reqs: list[Request], name: str,
+               fixed_interval: int | None) -> dict:
+    eng = mk_engine(name, autotune=fixed_interval is None)
+    if fixed_interval is not None:
+        assert eng.set_interval(fixed_interval)
+    summary = eng.run(clone_requests(reqs), max_iters=200_000)
+    per = [r.metrics() for r in eng.finished]
+    tokens = sum(m["tokens"] for m in per)
+    delays = [m["queue_delay_s"] or 0.0 for m in per]
+    ttft_e2e = [m["ttft_e2e_s"] for m in per if m["ttft_e2e_s"] is not None]
+    tpots = [t for r in eng.finished for t in r.tpot_s]
+    return {
+        "name": name,
+        "trace": capture_trace(eng),
+        "finished": len(eng.finished),
+        "rejected": summary["rejected"],
+        "tokens": tokens,
+        "wall_s": eng.clock_s,
+        "throughput_tok_s": tokens / eng.clock_s,
+        "tpot_violations": sum(0 if m["tpot_ok"] else 1 for m in per),
+        "ttft_violations": sum(0 if m["ttft_ok"] else 1 for m in per),
+        "queue_delay_p99_s": summarize_latency(delays)["p99_s"],
+        "ttft_e2e": summarize_latency(ttft_e2e),
+        "tpot": summarize_latency(tpots),
+        "hosted_bytes_avg": hosted_bytes_time_avg(eng),
+        "interval_switches": eng.interval_switches,
+        "interval_refusals": eng.interval_refusals,
+        "tuner": ({"lifts": eng.tuner.lifts, "retreats": eng.tuner.retreats,
+                   "refusals": eng.tuner.refusals}
+                  if eng.tuner is not None else None),
+        "first_arrival_s": summary["first_arrival_s"],
+        "first_admit_s": summary["first_admit_s"],
+        "idle_wait_s": summary["idle_wait_s"],
+        "gen_tokens": {r.rid: list(r.generated) for r in eng.finished},
+    }
+
+
+def run() -> BenchResult:
+    reqs = workload()
+    auto = run_engine(reqs, "autotuned", None)
+    fixed = [run_engine(reqs, f"fixed-{i}", i) for i in FIXED_INTERVALS]
+    rows = []
+    for side in [auto] + fixed:
+        rows.append({
+            "engine": side["name"],
+            "finished": side["finished"],
+            "throughput_tok_s": side["throughput_tok_s"],
+            "wall_s": side["wall_s"],
+            "tpot_violations": side["tpot_violations"],
+            "ttft_violations": side["ttft_violations"],
+            "ttft_e2e_p50_s": side["ttft_e2e"]["p50_s"],
+            "ttft_e2e_p99_s": side["ttft_e2e"]["p99_s"],
+            "tpot_p50_s": side["tpot"]["p50_s"],
+            "tpot_p99_s": side["tpot"]["p99_s"],
+            "q_delay_p99_s": side["queue_delay_p99_s"],
+            "hosted_weight_MB_avg": side["hosted_bytes_avg"] / 1e6,
+            "interval_switches": side["interval_switches"],
+        })
+
+    honored = (auto["first_admit_s"] is not None
+               and auto["first_arrival_s"] > 0
+               and auto["first_admit_s"] >= auto["first_arrival_s"]
+               and auto["idle_wait_s"] > 0)
+    auto_viol = auto["tpot_violations"] + auto["ttft_violations"]
+    fixed_viol = {f["name"]: f["tpot_violations"] + f["ttft_violations"]
+                  for f in fixed}
+    some_fixed_violates = any(v > 0 for v in fixed_viol.values())
+    # float-robust >=: the SLO-clean fixed interval is the autotuned
+    # engine's own steady-state choice, so exact ties are expected
+    tput_ge = all(auto["throughput_tok_s"]
+                  >= f["throughput_tok_s"] * (1 - 1e-9) for f in fixed)
+    tput_beats_violators = all(
+        auto["throughput_tok_s"] > f["throughput_tok_s"]
+        for f in fixed if fixed_viol[f["name"]] > 0)
+    clean_fixed = [f for f in fixed if fixed_viol[f["name"]] == 0]
+    hosts_more = all(auto["hosted_bytes_avg"] > f["hosted_bytes_avg"]
+                     for f in clean_fixed)
+    best = max(fixed, key=lambda f: f["throughput_tok_s"])
+    tokens_exact = auto["gen_tokens"] == best["gen_tokens"]
+    all_finished = all(s["finished"] == len(reqs) and s["rejected"] == 0
+                       for s in [auto] + fixed)
+    audits_ok = all(s["trace"]["audit_ok"] for s in [auto] + fixed)
+    audit_checks = sum(s["trace"]["audit_checks"] for s in [auto] + fixed)
+    tuner_moved = (auto["tuner"]["lifts"] > 0
+                   and auto["tuner"]["retreats"] > 0
+                   and auto["interval_switches"] >= 2)
+
+    claims = [
+        Claim("fig19 arrival process honored on the modeled clock",
+              "requests invisible to the scheduler before arrival_s",
+              f"first admit {auto['first_admit_s']:.4f}s >= first arrival "
+              f"{auto['first_arrival_s']:.4f}s, idle-wait "
+              f"{auto['idle_wait_s']:.3f}s" if honored else "admitted early",
+              ok=honored),
+        Claim("fig19 zero SLO violations only at the autotuned interval",
+              "online stage retreats before the violation a fixed "
+              "interval walks into",
+              f"autotuned 0; fixed {fixed_viol}" if auto_viol == 0
+              and some_fixed_violates else
+              f"autotuned {auto_viol}, fixed {fixed_viol}",
+              ok=auto_viol == 0 and some_fixed_violates),
+        Claim("fig19 autotuned throughput >= every fixed interval in range",
+              "adapting inside the offline bracket never costs throughput",
+              ", ".join(f"{s['name']}={s['throughput_tok_s']:.0f}tok/s"
+                        for s in [auto] + fixed),
+              ok=tput_ge and tput_beats_violators),
+        Claim("fig19 autotuned hosts more weight bytes than the SLO-clean "
+              "fixed choice",
+              "paper objective: maximize host memory subject to SLOs",
+              ", ".join(f"{s['name']}={s['hosted_bytes_avg']/1e6:.1f}MB"
+                        for s in [auto] + fixed)
+              + (f"; tuner lifted {auto['tuner']['lifts']}x / retreated "
+                 f"{auto['tuner']['retreats']}x" if tuner_moved else
+                 "; tuner never moved"),
+              ok=hosts_more and tuner_moved),
+        Claim("fig19 greedy tokens bitwise identical to best fixed interval",
+              "the interval changes timing, never the numbers",
+              "identical per-request token streams"
+              if tokens_exact else "DIVERGED", ok=tokens_exact),
+        Claim("fig19 all requests finish and every audit is clean",
+              "sustained load drains with conservation checks intact",
+              f"{len(reqs)} requests x {1 + len(fixed)} engines, "
+              f"{audit_checks} audit checks" if all_finished and audits_ok
+              else "incomplete or audit violations",
+              ok=all_finished and audits_ok),
+    ]
+    res = BenchResult(
+        "fig19_sustained_load", rows, claims,
+        notes=[f"workload: {N_REQUESTS} requests, diurnal rate 80/s "
+               f"amp 0.6 period 0.5s, classes "
+               + "/".join(f"{c.name}@{c.tpot_slo_s*1e3:g}ms"
+                          for c in SLO_CLASSES),
+               "offline range {1,2}: interval 3's resident set does not "
+               "fit the HBM budget, NO_OFFLOAD never fits"])
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/BENCH_sustained_load.json", "w") as f:
+        json.dump(res.to_json(), f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -30,6 +30,7 @@ MODULES = [
     "fig16_prefix_dedup",
     "fig17_preemption",
     "fig18_disk_tier",
+    "fig19_sustained_load",
     "roofline",
 ]
 

@@ -43,11 +43,16 @@ class InstanceState:
         vals = [i for i in range(max(1, self.min_interval), top + 1)]
         if self.max_interval >= NO_OFFLOAD:
             vals.append(NO_OFFLOAD)
-        return vals or [NO_OFFLOAD]
+        # An empty range means no interval satisfies both the SLO bound
+        # (min_interval) and the memory bound (max_interval). There is no
+        # fallback: NO_OFFLOAD is only valid when the fully-resident weights
+        # actually fit (max_interval >= NO_OFFLOAD, appended above).
+        return vals
 
     def admissible(self) -> bool:
-        """Paper Fig. 8 lines 34-35: SLO is meetable at all."""
-        return self.idle or self.min_interval <= self.max_interval
+        """Paper Fig. 8 lines 34-35: SLO is meetable at all — some interval
+        satisfies both the record's floor and the memory ceiling."""
+        return self.idle or bool(self.valid_intervals())
 
     def link_rate(self, interval: int) -> float:
         if self.idle:

@@ -20,6 +20,7 @@ from repro.configs.reduced import reduce_config
 from repro.core.analyzer import PerformanceAnalyzer
 from repro.core.hardware import PRESETS
 from repro.data.pipeline import DataConfig, request_stream
+from repro.data.workload import SLOClass, WorkloadConfig, generate_workload
 from repro.models.model import build_model
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Request
@@ -95,9 +96,33 @@ def main(argv=None) -> dict:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--arrival-rate", type=float, default=4.0,
-                    help="Poisson arrival rate in requests/s; crank it up "
-                         "to replay the stream as a burst and build queue "
-                         "pressure (modeled iterations run in microseconds)")
+                    help="mean arrival rate in requests/s on the modeled "
+                         "clock. Arrivals are HONORED: a request stays "
+                         "invisible to the scheduler until the clock "
+                         "reaches its arrival_s (see --submit-all)")
+    ap.add_argument("--arrival-process", choices=["poisson", "diurnal"],
+                    default="poisson",
+                    help="arrival process shape; 'diurnal' modulates the "
+                         "rate sinusoidally (nonhomogeneous Poisson)")
+    ap.add_argument("--workload", choices=["stream", "chat"],
+                    default="stream",
+                    help="request source: 'stream' = i.i.d. Poisson "
+                         "request_stream; 'chat' = multi-round session "
+                         "generator (data.workload: growing shared context "
+                         "feeding prefix dedup, mixed SLO classes, "
+                         "long-tail prompts)")
+    ap.add_argument("--diurnal-period-s", type=float, default=60.0,
+                    help="period of the diurnal rate modulation")
+    ap.add_argument("--submit-all", action="store_true",
+                    help="compat path: replay the whole trace as a burst at "
+                         "clock 0 instead of honoring arrival_s")
+    ap.add_argument("--autotune", action="store_true",
+                    help="online interval autotuning (the paper's §5 online "
+                         "stage): re-pick the offloading interval every "
+                         "iteration inside the offline record's feasible "
+                         "range from runtime gauges, lifting host-ward "
+                         "when TPOT headroom allows and retreating before "
+                         "a predicted violation")
     ap.add_argument("--peer", action="store_true",
                     help="second engine on the same host link (coordinator)")
     ap.add_argument("--trace-out", default=None,
@@ -117,6 +142,10 @@ def main(argv=None) -> dict:
         ap.error("--incremental-prefill is incompatible with "
                  "--prefix-dedup (shared prompt frames would need COW "
                  "inside the chunk kernel)")
+    if args.autotune and args.peer:
+        ap.error("--autotune and --peer are mutually exclusive: when a "
+                 "link is shared, the per-bus coordinator owns the "
+                 "interval")
 
     cfg = reduce_config(get_config(args.arch))
     hw = PRESETS[args.hw]
@@ -131,36 +160,59 @@ def main(argv=None) -> dict:
                         preemption=args.preemption,
                         prefill_chunk_tokens=args.prefill_chunk_tokens,
                         async_data_plane=args.async_data_plane,
-                        incremental_prefill=args.incremental_prefill)
+                        incremental_prefill=args.incremental_prefill,
+                        autotune=args.autotune)
     slos = [0.002 * k for k in range(1, 120)]
     eng = build_engine("e0", cfg, hw, ecfg, slos)
     peers = []
     if args.peer:
         peers.append(build_engine("e1", cfg, hw, ecfg, slos))
 
-    rng = np.random.default_rng(0)
-    stream = request_stream(DataConfig(seed=0, mean_prompt_len=12,
-                                       mean_output_len=8), args.requests,
-                            ttft_slo_s=args.ttft_slo_ms / 1e3,
-                            tpot_slo_s=args.tpot_slo_ms / 1e3,
-                            rate_per_s=args.arrival_rate)
-    common = rng.integers(0, cfg.vocab_size,
-                          int(args.shared_prefix_frac
-                              * (args.max_seq // 2))).astype(np.int32)
+    ttft_slo = args.ttft_slo_ms / 1e3
+    tpot_slo = args.tpot_slo_ms / 1e3
+    if args.workload == "chat":
+        wcfg = WorkloadConfig(
+            seed=0, process=args.arrival_process,
+            rate_per_s=args.arrival_rate,
+            diurnal_period_s=args.diurnal_period_s,
+            # think time between a session's rounds paces with the load so
+            # multi-round sessions interleave instead of serializing the run
+            mean_think_s=4.0 / args.arrival_rate,
+            system_prompt_len=max(int(args.shared_prefix_frac
+                                      * (args.max_seq // 2)), 8),
+            median_turn_len=8, max_prompt_len=args.max_seq // 2,
+            mean_output_len=6.0, max_output_len=args.max_seq // 4,
+            vocab_size=cfg.vocab_size,
+            slo_classes=(
+                SLOClass("interactive", ttft_slo, tpot_slo, 0.5),
+                SLOClass("standard", 2.5 * ttft_slo, 2.5 * tpot_slo, 0.35),
+                SLOClass("batch", 10 * ttft_slo, 10 * tpot_slo, 0.15)))
+        reqs = generate_workload(wcfg, args.requests)
+    else:
+        rng = np.random.default_rng(0)
+        stream = request_stream(DataConfig(seed=0, mean_prompt_len=12,
+                                           mean_output_len=8), args.requests,
+                                ttft_slo_s=ttft_slo, tpot_slo_s=tpot_slo,
+                                rate_per_s=args.arrival_rate)
+        common = rng.integers(0, cfg.vocab_size,
+                              int(args.shared_prefix_frac
+                                  * (args.max_seq // 2))).astype(np.int32)
 
-    def _prompt(plen: int) -> np.ndarray:
-        rest = rng.integers(0, cfg.vocab_size,
-                            max(plen - len(common), 0)).astype(np.int32)
-        return np.concatenate([common[:plen], rest])
+        def _prompt(plen: int) -> np.ndarray:
+            rest = rng.integers(0, cfg.vocab_size,
+                                max(plen - len(common), 0)).astype(np.int32)
+            return np.concatenate([common[:plen], rest])
 
-    reqs = [Request(rid=r.rid,
-                    prompt=_prompt(min(r.prompt_len, args.max_seq // 2)),
-                    max_new_tokens=min(r.max_new_tokens, args.max_seq // 4),
-                    ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
-                    arrival_s=r.arrival_s) for r in stream]
+        reqs = [Request(rid=r.rid,
+                        prompt=_prompt(min(r.prompt_len, args.max_seq // 2)),
+                        max_new_tokens=min(r.max_new_tokens,
+                                           args.max_seq // 4),
+                        ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
+                        arrival_s=r.arrival_s) for r in stream]
 
     out = eng.run(reqs, peers=peers or None,
-                  link_bw=hw.host_link_bw if peers else None)
+                  link_bw=hw.host_link_bw if peers else None,
+                  submit_all=args.submit_all)
     summary = {k: v for k, v in out.items() if k != "per_request"}
     summary["final_interval"] = (None if eng.interval >= 10**9
                                  else eng.interval)
@@ -178,6 +230,11 @@ def main(argv=None) -> dict:
                             "prefill_chunk_tokens": args.prefill_chunk_tokens}
     summary["data_plane"] = {"async": args.async_data_plane,
                              "incremental_prefill": args.incremental_prefill}
+    summary["arrival"] = {"process": args.arrival_process,
+                          "rate_per_s": args.arrival_rate,
+                          "honored": not args.submit_all,
+                          "workload": args.workload}
+    summary["autotune_enabled"] = args.autotune
     # preemptions / resumes / chunked_prefill_iters / queue_delay_p99_s come
     # from engine.run (scheduler IterationOutcome stats) and are already in
     # the summary dict above

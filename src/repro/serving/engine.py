@@ -61,6 +61,7 @@ from repro.core.record import PerformanceRecord
 from repro.kernels import ops
 from repro.models.model import Model
 from repro.models.transformer import pattern_info
+from repro.serving.autotune import IntervalTuner, TunerGauges
 from repro.serving.data_plane import CopyStageEngine
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
 from repro.serving.kv_offload import (DEVICE, DISK, HOST, LinkSpec,
@@ -127,6 +128,12 @@ class EngineConfig:
     # the pool's bf16-rounded prefix KV, so numerics differ from the
     # whole-prefix recompute path at rounding level.
     incremental_prefill: bool = False
+    # Online interval autotuning (serving.autotune): re-pick the offloading
+    # interval every iteration inside the offline record's feasible range
+    # from runtime gauges (pending link traffic, tightest live TPOT budget,
+    # queue depth) — the paper's §5 online stage. Mutually exclusive with
+    # the peer coordinator, which owns the interval when a link is shared.
+    autotune: bool = False
 
 
 class ServingEngine:
@@ -267,6 +274,17 @@ class ServingEngine:
         self.cow_in_bytes_total = 0.0
         self.cow_out_bytes_total = 0.0
 
+        # online interval autotuner (§5 online stage) + interval telemetry
+        self.tuner: IntervalTuner | None = \
+            IntervalTuner() if ecfg.autotune else None
+        self.interval_refusals = 0     # set_interval refused a resize
+        self.interval_switches = 0     # applied interval changes
+        # modeled time run() spent idle waiting for the next arrival; the
+        # pending amount is stamped on the next iteration record so the
+        # trace auditor can still tile the clock
+        self.idle_wait_s = 0.0
+        self.idle_wait_total_s = 0.0
+
     # ------------------------------------------------------------------ plan --
     @property
     def allocator(self) -> PagedKVAllocator:
@@ -276,21 +294,33 @@ class ServingEngine:
     def _plan(self, interval: int) -> OffloadPlan:
         return OffloadPlan(self.num_units, interval)
 
-    def set_interval(self, interval: int) -> None:
+    def set_interval(self, interval: int) -> bool:
         """Apply a (possibly new) offloading interval before the next
-        iteration (coordinator output). Re-splits params lazily; the KV pool
-        is re-accounted and the physical frames follow the remap."""
+        iteration (coordinator/tuner output). Re-splits params lazily; the
+        KV pool is re-accounted and the physical frames follow the remap.
+
+        Returns True when the interval is in effect afterwards (applied, or
+        already current), False when the executor REFUSED the resize:
+        growing the resident set would orphan live KV pages the host pool
+        cannot absorb. Callers owning interval policy (coordinator re-plan,
+        tuner) must treat False as "re-plan without this interval" — the
+        engine still runs at the old interval and ``instance_state`` keeps
+        reporting it."""
         if interval == self.interval:
-            return
+            return True
         weight_free_new = (self.ecfg.hbm_budget_bytes
                            - self._plan(interval).device_bytes(self.unit_bytes))
         if not self.kv.can_resize_device(max(int(weight_free_new), 0)):
-            # Growing the resident set would orphan live KV pages (host pool
-            # cannot absorb the overflow): keep the current interval. The
-            # coordinator path never gets here — max_interval_for_memory
-            # already excludes such intervals.
-            return
+            # memory-bound refusal: ``max_interval_for_memory`` bounds the
+            # resident weights against HBM minus *used* KV, but absorbing
+            # the displaced KV needs host free pages too — under host
+            # pressure that can fail, and the caller must re-plan
+            self.interval_refusals += 1
+            if self.tuner is not None:
+                self.tuner.note_refusal(interval)
+            return False
         self.interval = interval
+        self.interval_switches += 1
         # re-account KV budget: resident bytes changed. A shrinking device
         # pool demotes KV pages host-ward; the write-back bytes are charged
         # to the next iteration's link budget by the swap scheduler. The
@@ -315,6 +345,7 @@ class ServingEngine:
                 self.pool, jnp.asarray([o for o, _ in moves], jnp.int32))
             self.pool = ops.scatter_kv_pages(
                 self.pool, jnp.asarray([n for _, n in moves], jnp.int32), got)
+        return True
 
     def _rt(self, interval: int) -> OffloadRuntime:
         if interval not in self._runtime:
@@ -343,14 +374,33 @@ class ServingEngine:
             self.ecfg.hbm_budget_bytes
             - self.allocator.used_pages * self.allocator.page_bytes)
 
-    def instance_state(self, idle: bool | None = None) -> InstanceState:
+    def _min_interval_now(self) -> int:
+        """SLO floor on the interval under the CURRENT population: the max
+        of the record lookups for the head-of-queue waiting request (at the
+        batch its admission would create) and every active slot's TPOT SLO.
+        A coordinator/tuner rebalance below this would break a live request,
+        not just the next admission."""
+        batch = self._active_batch()
         waiting = self.queue[0] if self.queue else None
+        floors = []
         if waiting is not None:
             seq = waiting.prompt_len + waiting.max_new_tokens
-            min_i = self.rec["decode"].lookup(waiting.tpot_slo_s,
-                                              self._active_batch() + 1, seq)
-        else:
-            min_i = self.interval if self.interval < NO_OFFLOAD else 1
+            floors.append(self.rec["decode"].lookup(waiting.tpot_slo_s,
+                                                    batch + 1, seq))
+        for req in self.slot_req:
+            if req is None:
+                continue
+            seq = req.prompt_len + req.max_new_tokens
+            floors.append(self.rec["decode"].lookup(req.tpot_slo_s,
+                                                    max(batch, 1), seq))
+        if not floors:
+            # empty engine: hold the current position (idle instances don't
+            # constrain the coordinator anyway)
+            return self.interval if self.interval < NO_OFFLOAD else 1
+        return max(floors)
+
+    def instance_state(self, idle: bool | None = None) -> InstanceState:
+        min_i = self._min_interval_now()
         times = self.times_fn(max(self._active_batch(), 1),
                               self.ecfg.max_seq, "decode")
         max_i = self._max_interval_now()
@@ -375,6 +425,81 @@ class ServingEngine:
             idle=idle if idle is not None else self._active_batch() == 0
             and not self.scheduler.has_work(),
             kv_bytes_per_iter=kv_stream + kv_out)
+
+    # ------------------------------------------------------------ autotune --
+    def _resize_out_bytes(self, interval: int) -> float:
+        """Demotion write-back bytes a switch to ``interval`` would charge
+        to the next iteration's link budget (KV pages displaced from the
+        shrinking device pool, host-ward)."""
+        if interval == self.interval:
+            return 0.0
+        weight_free = max(int(self.ecfg.hbm_budget_bytes
+                              - self._plan(interval)
+                              .device_bytes(self.unit_bytes)), 0)
+        new_pages = weight_free // self.kv.page_bytes
+        return float(max(self.kv.device.used_pages - new_pages, 0)
+                     * self.kv.page_bytes)
+
+    def _batch_capacity(self, interval: int) -> int:
+        """Decode slots the KV capacity at ``interval`` could sustain for
+        the current population: device pool plus host spill headroom,
+        divided by the footprint of a typical live/waiting request. The
+        tuner's backlog mode trades this against the interval's iteration
+        time."""
+        weight_free = max(int(self.ecfg.hbm_budget_bytes
+                              - self._plan(interval)
+                              .device_bytes(self.unit_bytes)), 0)
+        pool_pages = weight_free // self.kv.page_bytes
+        pool_pages += self.kv.host.total_pages
+        reqs = ([r for r in self.slot_req if r is not None]
+                + self.queue + self.scheduler.preempted)
+        if not reqs:
+            return self.ecfg.max_batch
+        per_req = [-(-(r.prompt_len + r.max_new_tokens)
+                     // self.ecfg.page_size) for r in reqs]
+        pages_each = max(sum(per_req) / len(per_req), 1.0)
+        return int(max(1, min(self.ecfg.max_batch, pool_pages // pages_each)))
+
+    def _tuner_gauges(self) -> TunerGauges:
+        """Snapshot the runtime state the online tuner decides from — the
+        same quantities the telemetry plane records per iteration."""
+        batch = self._active_batch()
+        # tightest budget over live slots AND every waiter: the scheduler's
+        # admission pass scans the whole queue (plus parked requests), so
+        # the tuner must pre-position for whichever of them it certifies
+        # next, not just the population already decoding
+        tpots = [r.tpot_slo_s for r in self.slot_req if r is not None]
+        tpots += [r.tpot_slo_s for r in self.queue]
+        tpots += [r.tpot_slo_s for r in self.scheduler.preempted]
+        return TunerGauges(
+            batch=batch,
+            queue_depth=len(self.queue) + len(self.scheduler.preempted),
+            min_interval=self._min_interval_now(),
+            max_interval=self._max_interval_now(),
+            num_units=self.num_units,
+            times=self.times_fn(max(batch, 1), self.ecfg.max_seq, "decode"),
+            kv_in_bytes=(self.swap.streamed_bytes(self._active_rids())
+                         + self.swap.pending_in_bytes()),
+            kv_out_bytes=self.swap.pending_out_bytes(),
+            tpot_budget_s=min(tpots) if tpots else float("inf"),
+            resize_out_bytes=self._resize_out_bytes,
+            batch_capacity=self._batch_capacity,
+            disk_in_bytes=self.swap.pending_disk_in_bytes(),
+            disk_out_bytes=self.swap.pending_disk_out_bytes(),
+            disk_bw=self.kv.disk_link.bw_bytes_s,
+            disk_latency_s=self.kv.disk_link.latency_s)
+
+    def _autotune_interval(self) -> None:
+        """§5 online stage: let the tuner re-pick the interval for this
+        iteration; on an executor refusal, ban the interval and re-plan
+        (bounded — the candidate set only shrinks)."""
+        gauges = self._tuner_gauges()
+        banned: set[int] = set()
+        for _ in range(self.num_units + 2):
+            target = self.tuner.propose(gauges, self.interval, banned=banned)
+            if target == self.interval or self.set_interval(target):
+                return
+            banned.add(target)
 
     def submit(self, req: Request) -> None:
         req.submitted_s = self.clock_s
@@ -585,6 +710,9 @@ class ServingEngine:
             "promoted_pages_total": self.swap.promoted_pages_total,
             "cow_in_bytes_total": self.cow_in_bytes_total,
             "cow_out_bytes_total": self.cow_out_bytes_total,
+            "interval_refusals_total": self.interval_refusals,
+            "interval_switches_total": self.interval_switches,
+            "idle_wait_total_s": self.idle_wait_total_s,
             "n_finished": len(self.finished),
             "n_rejected": len(self.rejected),
             "n_active": sum(1 for r in self.slot_req if r is not None),
@@ -970,14 +1098,29 @@ class ServingEngine:
         self.prefill_log = []
         self.last_decode = None
         t_start = self.clock_s
+        idle_wait = self.idle_wait_s
+        self.idle_wait_s = 0.0
         if peers is not None and link_bw is not None:
-            insts = [self.instance_state()] + [p.instance_state()
-                                               for p in peers]
-            res = coordinate(insts, link_bw)
-            if res.ok:
-                self.set_interval(res.intervals[self.name])
-                for p in peers:
-                    p.set_interval(res.intervals[p.name])
+            engines = [self] + list(peers)
+            insts = [e.instance_state() for e in engines]
+            # bounded re-plan: an executor may refuse its assignment (host
+            # pool cannot absorb the demoted KV) — clamp that instance's
+            # ceiling to the interval it actually holds and coordinate
+            # again, instead of silently running a plan nobody applied
+            for _ in range(len(engines) + 1):
+                res = coordinate(insts, link_bw)
+                if not res.ok:
+                    break
+                refused = False
+                for eng, inst in zip(engines, insts):
+                    if not eng.set_interval(res.intervals[eng.name]):
+                        inst.max_interval = min(inst.max_interval,
+                                                eng.interval)
+                        refused = True
+                if not refused:
+                    break
+        elif self.tuner is not None:
+            self._autotune_interval()
         elif self.interval == 0:
             self.set_interval(NO_OFFLOAD)
 
@@ -1035,6 +1178,7 @@ class ServingEngine:
                 parked=[p.req.rid for p in plan.preemptions],
                 resumed=[r.req.rid for r in plan.resumes],
                 finished=finished, chunk_s=dt_rec,
+                idle_wait_s=idle_wait,
                 certified_dt_s=plan.certified_dt_s,
                 staged_issued_pages=st_issued,
                 staged_completed_pages=st_completed,
@@ -1176,6 +1320,7 @@ class ServingEngine:
             compute_s=bd.compute_s, kv_in_s=bd.kv_in_s,
             kv_out_s=bd.kv_out_s, stall_s=bd.stall_s, pcie_s=bd.pcie_s,
             disk_s=bd.disk_s, chunk_s=chunk_s, model_dt_s=bd.total_s,
+            idle_wait_s=idle_wait,
             link_bw_bytes_s=link_bandwidth(times),
             certified_dt_s=plan.certified_dt_s,
             staged_issued_pages=st_issued,
@@ -1188,12 +1333,47 @@ class ServingEngine:
                     for slot, req in decode_reqs]))
 
     def run(self, requests: list[Request], max_iters: int = 10_000,
-            peers=None, link_bw=None) -> dict:
-        for r in requests:
-            self.submit(r)
+            peers=None, link_bw=None, submit_all: bool = False) -> dict:
+        """Serve ``requests`` to completion on the modeled clock.
+
+        By default the arrival process is honored: a request stays invisible
+        to the scheduler until ``clock_s`` reaches its ``arrival_s``, and
+        when the engine drains before the next arrival, the idle wait
+        advances the clock to it (stamped as ``idle_wait_s`` on the next
+        iteration record so the trace still tiles). ``queue_delay_s`` is
+        then measured from arrival, not from submission. ``submit_all=True``
+        is the compat path: everything submits at the current clock exactly
+        as before arrivals were honored (bitwise-identical traces for the
+        differential suites; also the default behavior for traces whose
+        ``arrival_s`` are all 0)."""
+        if submit_all:
+            pending: list[Request] = []
+            for r in requests:
+                self.submit(r)
+        else:
+            pending = sorted(requests, key=lambda r: r.arrival_s)
         it = 0
-        while (self.scheduler.has_work() or self._active_batch() > 0) \
-                and it < max_iters:
+        n_pend = 0                     # consumed prefix of ``pending``
+        while True:
+            while n_pend < len(pending) \
+                    and pending[n_pend].arrival_s <= self.clock_s:
+                req = pending[n_pend]
+                n_pend += 1
+                self.submit(req)
+                # queueing delay counts from the arrival process, not from
+                # the iteration boundary the request became visible at
+                req.submitted_s = max(req.arrival_s, 0.0)
+            if not (self.scheduler.has_work() or self._active_batch() > 0):
+                if n_pend >= len(pending):
+                    break
+                nxt = pending[n_pend].arrival_s
+                if nxt > self.clock_s:          # idle: jump to next arrival
+                    self.idle_wait_s += nxt - self.clock_s
+                    self.idle_wait_total_s += nxt - self.clock_s
+                    self.clock_s = nxt
+                continue
+            if it >= max_iters:
+                break
             self.step(peers=peers, link_bw=link_bw)
             it += 1
         if self.data_plane is not None:
@@ -1225,6 +1405,25 @@ class ServingEngine:
             "queue_delay_p99_s": summarize_latency(delays)["p99_s"],
             "queue_delay": summarize_latency(delays),
             "ttft": summarize_latency([m["ttft_s"] for m in done]),
+            "tpot": summarize_latency([t for r in self.finished
+                                       for t in r.tpot_s]),
             "link_bytes": self.trace.totals(),
+            # arrival-process accounting: with arrivals honored, the first
+            # admission can never precede the first arrival on the modeled
+            # clock (fig19's harness claim); idle_wait_s is the drained-
+            # engine time run() skipped to the next arrival
+            "first_arrival_s": (min(r.arrival_s for r in requests)
+                                if requests else None),
+            "first_admit_s": min((e.t_s for e in self.trace.events
+                                  if e.kind == "admit"), default=None),
+            "idle_wait_s": self.idle_wait_total_s,
+            "arrivals_honored": not submit_all,
+            # interval policy telemetry (coordinator / online tuner)
+            "interval_switches": self.interval_switches,
+            "interval_refusals": self.interval_refusals,
+            "autotune": ({"lifts": self.tuner.lifts,
+                          "retreats": self.tuner.retreats,
+                          "refusals": self.tuner.refusals}
+                         if self.tuner is not None else None),
             "per_request": done,
         }

@@ -68,6 +68,18 @@ class Request:
             return None
         return self.admitted_s - self.submitted_s
 
+    @property
+    def ttft_e2e_s(self) -> float | None:
+        """End-to-end first-token latency on the modeled clock: queueing
+        delay (from the arrival process — ``engine.run`` stamps
+        ``submitted_s = arrival_s`` when honoring arrivals) plus the prefill
+        latency ``ttft_s``. The SLO check stays on ``ttft_s`` (the bound the
+        scheduler certifies at admission); this is the user-visible number
+        the sustained-load bench reports alongside it."""
+        if self.queue_delay_s is None or self.ttft_s is None:
+            return None
+        return self.queue_delay_s + self.ttft_s
+
     def metrics(self) -> dict:
         tpot = float(np.mean(self.tpot_s)) if self.tpot_s else 0.0
         return {
@@ -84,4 +96,5 @@ class Request:
             "preempts": self.preempt_count,
             "preempt_stall_s": self.preempt_stall_s,
             "queue_delay_s": self.queue_delay_s,
+            "ttft_e2e_s": self.ttft_e2e_s,
         }

@@ -145,6 +145,10 @@ class IterationRecord:
     disk_s: float = 0.0
     chunk_s: float = 0.0
     model_dt_s: float = 0.0        # max(pcie_s, disk_s); dt = model + chunk
+    # drained-engine wait run() skipped to the next arrival BEFORE this
+    # iteration began (arrival-honoring loop): the clock-tiling check
+    # expects t_start == previous t_end + idle_wait_s
+    idle_wait_s: float = 0.0
     link_bw_bytes_s: float = 0.0
     certified_dt_s: float | None = None   # scheduler's stamp (decode only)
     occupancy: dict = dataclasses.field(default_factory=dict)
@@ -319,8 +323,10 @@ class AuditReport:
       I3  dt identity: ``dt == max(pcie_s, disk_s) + chunk_s`` exactly, and
           the PCIe term decomposes into compute + kv_in + stall.
       I4  clock continuity: ``t_end == t_start + one-shot prefill TTFTs +
-          dt`` per iteration, and iterations tile the clock (``t_start[i+1]
-          == t_end[i]``).
+          dt`` per iteration, and iterations tile the clock
+          (``t_start[i+1] == t_end[i] + idle_wait_s[i+1]``, where
+          ``idle_wait_s`` is the drained-engine jump the arrival-honoring
+          loop took to the next arrival — never backwards).
       I5  occupancy: per tier, ``0 <= used_pages <= total_pages`` and cache
           frames never exceed used frames.
       I6  certified dt: every decode iteration's observed dt is bounded by
@@ -430,9 +436,12 @@ def audit_trace(trace: dict) -> AuditReport:
               f"iter {i}: clock {r['t_start_s']} + prefill {pre} + dt "
               f"{r['dt_s']} != {r['t_end_s']}")
         if prev_end is not None:
-            check(r["t_start_s"] == prev_end,
+            idle = r.get("idle_wait_s", 0.0)
+            check(_close(r["t_start_s"], prev_end + idle,
+                         scale=max(r["t_start_s"], 1e-9))
+                  and r["t_start_s"] >= prev_end,
                   f"iter {i}: t_start {r['t_start_s']} != previous t_end "
-                  f"{prev_end}")
+                  f"{prev_end} + idle wait {idle}")
         prev_end = r["t_end_s"]
         # I5: occupancy within capacity
         for tier, occ in r["occupancy"].items():

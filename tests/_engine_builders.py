@@ -31,6 +31,7 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                       disk_backing_path: str | None = None,
                       async_data_plane: bool = False,
                       incremental_prefill: bool = False,
+                      autotune: bool = False,
                       batches=(1, 2, 4, 8), seqs=(16, 32, 64)):
     """Reduced-qwen engine + analyzer. Size HBM either directly (``hbm_gb``)
     or as resident weights plus ``extra_device_pages`` KV pages (the
@@ -73,5 +74,6 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                                      disk_latency_s=disk_latency_s,
                                      disk_backing_path=disk_backing_path,
                                      async_data_plane=async_data_plane,
-                                     incremental_prefill=incremental_prefill))
+                                     incremental_prefill=incremental_prefill,
+                                     autotune=autotune))
     return eng, an

@@ -1,0 +1,243 @@
+"""Sustained-load autotuning differential traces (nightly tier).
+
+Gates, mirroring how previous subsystems were landed:
+
+  * **Sweep**: the fig19 scenario at a reduced request count — autotuned
+    vs every fixed interval in the offline range {1, 2} on the same
+    arrival-honored diurnal trace. The autotuned run must be the only
+    SLO-clean *and* throughput-undominated configuration, while hosting
+    strictly more weight bytes (time-averaged) than the SLO-clean fixed
+    choice, with bitwise-identical greedy tokens: the interval schedule
+    changes timing and memory placement, never the numbers.
+  * **Lockstep**: a ``DualEngine`` dense-shadow run over an autotuned
+    engine whose tuner provably moves mid-trace — every prefill and decode
+    logit is checked against the frozen slot-dense reference across the
+    interval switches.
+  * **Regressions** for the bug family underneath: arrivals honored on the
+    modeled clock (no admission before ``arrival_s``), the ``submit_all``
+    compat path bitwise-unchanged, ``set_interval`` refusing (not
+    corrupting) a resize that would orphan live KV, and the coordinator
+    floor ``_min_interval_now`` folding ACTIVE requests, not just the head
+    of the queue.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.interval import NO_OFFLOAD
+from repro.serving.request import Request
+
+from _engine_builders import mk_reduced_engine
+from harness import DualEngine
+
+import benchmarks.fig19_sustained_load as fig19
+
+pytestmark = pytest.mark.slow
+
+N_SWEEP = 40
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    """fig19's engines on fig19's workload, reduced to 40 requests."""
+    reqs = fig19.workload(N_SWEEP)
+    out = {}
+    for name, fixed in [("auto", None), ("fixed-1", 1), ("fixed-2", 2)]:
+        eng = fig19.mk_engine(name, autotune=fixed is None)
+        if fixed is not None:
+            assert eng.set_interval(fixed)
+        summary = eng.run(fig19.clone_requests(reqs), max_iters=100_000)
+        out[name] = (eng, summary)
+    return reqs, out
+
+
+def _violations(summary):
+    return sum((0 if m["tpot_ok"] else 1) + (0 if m["ttft_ok"] else 1)
+               for m in summary["per_request"])
+
+
+def test_sweep_arrivals_honored(sweep):
+    reqs, out = sweep
+    for eng, summary in out.values():
+        assert summary["arrivals_honored"]
+        assert summary["first_arrival_s"] == reqs[0].arrival_s > 0
+        assert summary["first_admit_s"] >= summary["first_arrival_s"]
+        assert summary["idle_wait_s"] > 0      # diurnal troughs drain it
+
+
+def test_sweep_all_finish_and_audit_clean(sweep):
+    reqs, out = sweep
+    for eng, summary in out.values():
+        assert summary["finished"] == len(reqs)
+        assert summary["rejected"] == 0
+        rep = eng.trace.audit()
+        assert rep.ok, rep.violations[:5]
+
+
+def test_sweep_only_autotuned_is_slo_clean(sweep):
+    _, out = sweep
+    assert _violations(out["auto"][1]) == 0
+    assert _violations(out["fixed-1"][1]) > 0   # 2.46ms iters vs 2ms TPOT
+    assert _violations(out["fixed-2"][1]) == 0  # the safe-but-small choice
+
+
+def test_sweep_autotuned_throughput_undominated(sweep):
+    _, out = sweep
+    tput = {k: s["throughput_tok_s"] for k, (_, s) in out.items()}
+    assert tput["auto"] >= tput["fixed-2"] * (1 - 1e-9)
+    assert tput["auto"] > tput["fixed-1"]       # strict over the violator
+
+
+def test_sweep_autotuned_hosts_more_weight_bytes(sweep):
+    _, out = sweep
+    auto, _ = out["auto"]
+    fixed2, _ = out["fixed-2"]
+    a = fig19.hosted_bytes_time_avg(auto)
+    f2 = fig19.hosted_bytes_time_avg(fixed2)
+    assert a > f2                               # the paper's objective
+    assert auto.tuner.lifts > 0 and auto.tuner.retreats > 0
+    assert auto.interval_switches >= 2
+
+
+def test_sweep_tokens_bitwise_equal_best_fixed(sweep):
+    _, out = sweep
+    auto, _ = out["auto"]
+    fixed2, _ = out["fixed-2"]
+    toks_a = {r.rid: list(r.generated) for r in auto.finished}
+    toks_f = {r.rid: list(r.generated) for r in fixed2.finished}
+    assert toks_a == toks_f
+
+
+# --------------------------------------------------------------------------
+# Dense-shadow lockstep across live interval switches
+# --------------------------------------------------------------------------
+
+def test_dual_engine_lockstep_across_tuner_switches():
+    """Interactive requests pin interval 2; once only the loose class
+    remains, the tuner lifts host-ward to 1 — the shadow must agree on
+    every logit through the switch (and through the retreat demotions a
+    later tight arrival would force)."""
+    eng = fig19.mk_engine("dual-auto", autotune=True)
+    rng = np.random.default_rng(3)
+
+    def req(rid, tpot, new):
+        return Request(rid=rid,
+                       prompt=rng.integers(0, fig19.VOCAB, 16
+                                           ).astype(np.int32),
+                       max_new_tokens=new, ttft_slo_s=1.0, tpot_slo_s=tpot)
+
+    for rid in range(4):                        # interactive: short outputs
+        eng.submit(req(rid, 0.002, 4))
+    for rid in range(4, 10):                    # loose class: long outputs
+        eng.submit(req(rid, 0.02, 14))
+    dual = DualEngine(eng)
+    dual.run_until_drained(max_iters=500)
+    assert len(eng.finished) == 10
+    assert dual.decode_compares > 0 and dual.prefill_compares == 10
+    assert eng.interval_switches >= 1, \
+        "trace never exercised a live interval switch"
+    assert eng.tuner.lifts >= 1
+
+
+# --------------------------------------------------------------------------
+# Regressions: the fixed-interval bug family
+# --------------------------------------------------------------------------
+
+def _small_engine(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 48)
+    kw.setdefault("page_size", 16)
+    eng, _ = mk_reduced_engine(extra_device_pages=kw.pop("pages", 8), **kw)
+    return eng
+
+
+def _small_req(rid, arrival_s=0.0, new=4):
+    rng = np.random.default_rng(100 + rid)
+    return Request(rid=rid, prompt=rng.integers(0, 100, 8).astype(np.int32),
+                   max_new_tokens=new, ttft_slo_s=10.0, tpot_slo_s=1.0,
+                   arrival_s=arrival_s)
+
+
+def test_arrival_not_admitted_before_arrival_s():
+    eng = _small_engine()
+    req = _small_req(0, arrival_s=0.05)
+    summary = eng.run([req])
+    assert summary["first_arrival_s"] == 0.05
+    assert summary["first_admit_s"] >= 0.05
+    admits = [e.t_s for e in eng.trace.events if e.kind == "admit"]
+    assert admits and min(admits) >= 0.05
+    # the engine was empty until then: the idle jump IS the arrival gap
+    assert summary["idle_wait_s"] == pytest.approx(0.05)
+    # queueing delay measured from arrival, not from t=0
+    assert req.submitted_s == 0.05
+    m = req.metrics()
+    assert m["queue_delay_s"] is not None and m["queue_delay_s"] < 0.05
+
+
+def test_submit_all_compat_path_is_bitwise_unchanged():
+    """submit_all=True with nonzero arrivals must reproduce the pre-arrival
+    engine exactly: same modeled clock, same tokens as arrival_s=0."""
+    reqs_arr = [_small_req(i, arrival_s=0.01 * (i + 1)) for i in range(4)]
+    reqs_zero = [dataclasses.replace(_small_req(i), arrival_s=0.0)
+                 for i in range(4)]
+    a = _small_engine(name="compat-a")
+    b = _small_engine(name="compat-b")
+    sa = a.run(reqs_arr, submit_all=True)
+    sb = b.run(reqs_zero)
+    assert not sa["arrivals_honored"] and sb["arrivals_honored"]
+    assert a.clock_s == b.clock_s
+    assert sa["idle_wait_s"] == sb["idle_wait_s"] == 0.0
+    toks_a = {r.rid: list(r.generated) for r in a.finished}
+    toks_b = {r.rid: list(r.generated) for r in b.finished}
+    assert toks_a == toks_b
+
+
+def test_set_interval_refusal_leaves_engine_intact():
+    """Growing the resident set must be REFUSED when the displaced KV has
+    nowhere to go (host pool absent), not silently corrupt live pages."""
+    eng = _small_engine(pages=8, host_pages=0, page_size=8, max_seq=48)
+    assert eng.set_interval(1)                  # tiny resident set, huge pool
+    for i in range(2):
+        eng.submit(_small_req(i, new=40))
+    for _ in range(80):
+        eng.step()
+        if eng.kv.device.used_pages > 8:
+            break
+    used = eng.kv.device.used_pages
+    assert used > 8, "trace too small to exercise the refusal"
+    assert eng.set_interval(NO_OFFLOAD) is False
+    assert eng.interval == 1                    # position held
+    assert eng.interval_refusals == 1
+    assert eng._trace_footer()["interval_refusals_total"] == 1
+    assert eng.kv.device.used_pages == used     # nothing moved
+    # and the trace drains cleanly afterwards
+    while eng.scheduler.has_work() or eng._active_batch() > 0:
+        eng.step()
+    assert len(eng.finished) == 2
+    rep = eng.trace.audit()
+    assert rep.ok, rep.violations[:5]
+
+
+def test_min_interval_folds_active_slots_not_just_queue_head():
+    """A tight-TPOT request already DECODING must raise the coordinator
+    floor exactly like a tight waiter would (the old code only looked at
+    the head of the queue, so a rebalance could break a live request)."""
+    eng = fig19.mk_engine("floor")
+    loose = Request(rid=0, prompt=np.arange(16, dtype=np.int32),
+                    max_new_tokens=8, ttft_slo_s=1.0, tpot_slo_s=0.02)
+    eng.submit(loose)
+    eng.step()
+    assert eng._active_batch() == 1 and not eng.queue
+    floor_loose = eng._min_interval_now()
+    assert floor_loose == eng.rec["decode"].lookup(0.02, 1, 24)
+
+    tight = Request(rid=1, prompt=np.arange(16, dtype=np.int32),
+                    max_new_tokens=8, ttft_slo_s=1.0, tpot_slo_s=0.002)
+    eng.submit(tight)
+    eng.step()
+    assert eng._active_batch() == 2 and not eng.queue
+    floor_both = eng._min_interval_now()
+    want = eng.rec["decode"].lookup(0.002, 2, 24)
+    assert floor_both == want > floor_loose
+    assert want == 2        # 2.46ms interval-1 iters cannot meet 2ms TPOT

@@ -1,0 +1,164 @@
+"""Unit tests for the online interval tuner policy and the offline-range
+plumbing it leans on — pure stubs, no engine, no jit.
+
+The tuner is the paper's §5 online stage: inside the offline bracket
+``[min_interval, max_interval]`` it lifts host-ward (smaller interval =
+more host memory) when the predicted latency leaves headroom, retreats
+before a predicted violation, and under a backlog optimizes service rate
+instead of host bytes. These tests pin each of those decisions against a
+hand-built ``TunerGauges``."""
+import pytest
+
+from repro.core.coordinator import InstanceState
+from repro.core.interval import LayerTimes, NO_OFFLOAD
+from repro.serving.autotune import IntervalTuner, TunerConfig, TunerGauges
+
+# 4 layers, 1ms transfer per layer, negligible compute: predicted dt is
+# ~(offloaded layers) * 1ms, so interval 1 -> 4ms, 2 -> 2ms, 4 -> 1ms.
+TIMES = LayerTimes(t_compute_s=1e-6, t_transfer_s=1e-3, num_layers=4,
+                   layer_bytes=1000, t_rest_s=0.0)
+
+
+def gauges(*, tpot=1.0, min_i=1, max_i=4, queue=0, batch=1,
+           resize=lambda i: 0.0, capacity=None, kv_in=0.0, kv_out=0.0):
+    return TunerGauges(batch=batch, queue_depth=queue, min_interval=min_i,
+                       max_interval=max_i, num_units=4, times=TIMES,
+                       kv_in_bytes=kv_in, kv_out_bytes=kv_out,
+                       tpot_budget_s=tpot, resize_out_bytes=resize,
+                       batch_capacity=capacity)
+
+
+def test_candidates_respect_offline_range_without_fallback():
+    t = IntervalTuner()
+    assert t.candidates(gauges(min_i=2, max_i=3)) == [2, 3]
+    # NO_OFFLOAD only when the fully-resident model genuinely fits
+    assert t.candidates(gauges(min_i=1, max_i=NO_OFFLOAD)) == \
+        [1, 2, 3, 4, NO_OFFLOAD]
+    assert NO_OFFLOAD not in t.candidates(gauges(min_i=1, max_i=4))
+    # contradictory bounds -> empty, and propose() holds position
+    g = gauges(min_i=3, max_i=2)
+    assert t.candidates(g) == []
+    assert t.propose(g, 2) == 2
+
+
+def test_lift_requires_patience_then_fires():
+    t = IntervalTuner(TunerConfig(lift_patience=2))
+    # budget 10ms: every interval feasible; smallest (1) is the target but
+    # the first proposal must hold position (streak=1 < patience)
+    g = gauges(tpot=10.0 / 0.8)
+    assert t.propose(g, 3) == 3
+    assert t.lifts == 0
+    assert t.propose(g, 3) == 1          # second consecutive: fires
+    assert t.lifts == 1
+
+
+def test_lift_streak_resets_when_target_moves():
+    t = IntervalTuner(TunerConfig(lift_patience=2))
+    roomy = gauges(tpot=10.0 / 0.8)
+    assert t.propose(roomy, 3) == 3      # streak (1, n=1)
+    # budget tightens: target jumps to 2, which restarts the streak
+    mid = gauges(tpot=2.5e-3 / 0.8)
+    assert t.propose(mid, 3) == 3
+    assert t.propose(mid, 3) == 2
+
+
+def test_retreat_is_immediate_no_patience():
+    t = IntervalTuner(TunerConfig(lift_patience=2))
+    # budget 2ms with 20% headroom -> 1.6ms: intervals 3 and 4 (~1ms) fit;
+    # current interval 2 predicts ~2ms > budget -> move NOW, and to the
+    # smallest feasible (3), not all the way out
+    g = gauges(tpot=2e-3)
+    assert t.propose(g, 2) == 3
+    assert t.retreats == 1
+
+
+def test_nothing_feasible_sheds_as_much_as_memory_allows():
+    t = IntervalTuner()
+    g = gauges(tpot=1e-4, max_i=3)       # nothing fits the budget
+    assert t.propose(g, 1) == 3          # largest in range, not NO_OFFLOAD
+    assert t.retreats == 1
+
+
+def test_banned_intervals_are_replanned_around():
+    t = IntervalTuner(TunerConfig(lift_patience=1))
+    g = gauges(tpot=10.0 / 0.8)
+    assert t.propose(g, 4) == 1
+    assert t.propose(g, 4, banned={1}) == 2
+    assert t.propose(g, 4, banned={1, 2, 3}) == 4
+    t.note_refusal(1)
+    t.note_refusal(2)
+    assert t.refusals == 2
+
+
+def test_resize_writeback_counts_against_switch_targets_only():
+    t = IntervalTuner(TunerConfig(lift_patience=1))
+    # demotion write-back makes switching to 1 cost 2 extra layer-times
+    # (2000 bytes over the layer link rate of 1000 bytes/ms): 4+2=6ms
+    # exceeds the 5ms budget, so the tuner settles for 2 (2ms)
+    g = gauges(tpot=5e-3 / 0.8,
+               resize=lambda i: 2000.0 if i != 2 else 0.0)
+    assert t.predicted_dt_s(g, 2, 2) == pytest.approx(2e-3, rel=1e-2)
+    assert t.predicted_dt_s(g, 1, 2) == pytest.approx(6e-3, rel=1e-2)
+    assert t.propose(g, 2) == 2
+
+
+def test_backlog_mode_optimizes_service_rate_not_host_bytes():
+    t = IntervalTuner(TunerConfig(lift_patience=1))
+    # interval 1 frees enough KV room for batch 4, interval 2 for batch 2,
+    # the rest fit batch 1 — service rates 4/4ms == 2/2ms == 1/1ms tie
+    # (transfer time scales linearly with offloaded layers), so the
+    # host-ward tie-break keeps the smallest interval in play
+    cap = {1: 4, 2: 2, 3: 1, 4: 1}.get
+    roomy = gauges(tpot=10.0 / 0.8, capacity=cap)
+    # no backlog: host-memory objective, smallest feasible
+    assert t.propose(roomy, 1) == 1
+    # backlog, rate tie: host-ward tie-break holds interval 1
+    pressured = gauges(tpot=10.0 / 0.8, queue=3, capacity=cap)
+    assert t.propose(pressured, 1) == 1
+    # backlog, interval 1's capacity halved: its rate 2/4ms loses to
+    # interval 4's 1/1.001ms — throughput now beats host bytes
+    starved = gauges(tpot=10.0 / 0.8, queue=3,
+                     capacity={1: 2, 2: 1, 3: 1, 4: 1}.get)
+    assert t.propose(starved, 4) == 4
+    # the backlog winner must still be SLO-feasible: with a 3ms budget
+    # interval 1 (4ms) drops out even though its capacity is highest
+    tight = gauges(tpot=3e-3 / 0.8, queue=3, capacity=cap)
+    assert t.propose(tight, 2) == 2
+
+
+# --------------------------------------------------------------------------
+# Offline-range plumbing (satellite of the same bug family): the coordinator
+# must not resurrect NO_OFFLOAD when the memory bound rules everything out.
+# --------------------------------------------------------------------------
+
+def _state(min_i, max_i, idle=False):
+    return InstanceState(name="i0", num_units=4, unit_bytes=1000,
+                         t_iter_s=1e-3, min_interval=min_i,
+                         max_interval=max_i, idle=idle)
+
+
+def test_valid_intervals_empty_when_slo_and_memory_contradict():
+    st = _state(min_i=3, max_i=2)
+    assert st.valid_intervals() == []
+    assert not st.admissible()
+
+
+def test_valid_intervals_no_no_offload_fallback_below_capacity():
+    # memory caps at 2: NO_OFFLOAD must NOT appear even though the range
+    # is non-empty (the old fallback re-added it whenever the range was
+    # empty, admitting requests the device cannot hold)
+    st = _state(min_i=1, max_i=2)
+    assert st.valid_intervals() == [1, 2]
+    assert NO_OFFLOAD not in st.valid_intervals()
+
+
+def test_valid_intervals_keeps_no_offload_when_it_fits():
+    st = _state(min_i=5, max_i=NO_OFFLOAD)
+    assert st.valid_intervals() == [NO_OFFLOAD]
+    assert st.admissible()
+
+
+def test_idle_instance_is_admissible_at_no_offload():
+    st = _state(min_i=3, max_i=2, idle=True)
+    assert st.valid_intervals() == [NO_OFFLOAD]
+    assert st.admissible()

@@ -138,7 +138,9 @@ def test_trace_replay_with_host_tier_meets_slos():
                     max_new_tokens=min(r.max_new_tokens, 8),
                     ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
                     arrival_s=r.arrival_s) for r in stream]
-    out = eng.run(reqs, max_iters=800)
+    # burst replay (submit_all): the point is host-tier pressure, which the
+    # honored Poisson arrivals at this rate are too spread out to create
+    out = eng.run(reqs, max_iters=800, submit_all=True)
 
     assert out["finished"] == len(reqs)
     assert out["rejected"] == 0
