@@ -1,0 +1,276 @@
+"""Fig. 20 (extension): multi-instance serving fleet with KV-affinity
+routing vs round-robin, against a single consolidated instance.
+
+A multi-tenant chat trace (``tenants`` distinct system prompts, multi-round
+sessions extending their own history) is served three ways on the modeled
+clock: a 2-instance fleet with the KV-affinity router, the same fleet with
+round-robin placement, and one "big" instance holding both instances' pooled
+capacity (2x batch, 2x device KV pages, 2x host pool). Every engine runs
+prefix dedup, the host prefix cache, and preempt-to-host; the fleets keep
+cross-instance preemption armed (a parked request's host frames + cursor
+serialize into a ``MigrationTicket`` and resume bitwise-exactly on a peer).
+
+The affinity router hashes each arriving prompt ONCE (``prefix_page_keys``)
+and places it on the instance already claiming the longest prefix run, so a
+tenant's sessions pile onto one instance and their shared pages stay
+deduplicated there. Round-robin scatters the same tenant across instances:
+each one ends up holding (and spilling, and streaming) its own copy of every
+tenant prefix — strictly more KV bytes over the modeled PCIe link for
+byte-identical output.
+
+Claims checked:
+  * per-request greedy tokens bitwise identical across affinity fleet,
+    round-robin fleet, and the consolidated big instance — placement
+    composes timing, never numbers;
+  * the affinity fleet moves strictly fewer total KV bytes than round-robin
+    (PCIe both directions + disk tier + migration payloads);
+  * affinity concentrates each tenant on one instance (weighted majority)
+    and routes on real prefix hits, not just load;
+  * zero TTFT/TPOT violations on the affinity fleet, everything finishes,
+    nothing rejected;
+  * every per-instance trace audit (I1-I11) passes and the fleet-level
+    migration conservation cross-check holds: exported bytes == adopted
+    bytes across the fleet.
+
+Emits ``reports/BENCH_fleet.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import BenchResult, Claim, capture_trace
+from repro.configs import get_config
+from repro.configs.reduced import reduce_config
+from repro.core import costs
+from repro.core.analyzer import PerformanceAnalyzer
+from repro.core.hardware import A10
+from repro.core.interval import NO_OFFLOAD, OffloadPlan
+from repro.data.workload import SLOClass, WorkloadConfig, generate_workload
+from repro.models.model import build_model
+from repro.models.transformer import pattern_info
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.fleet import Fleet
+from repro.serving.request import Request
+
+D_MODEL, HEADS, LAYERS, D_FF, VOCAB = 256, 4, 8, 1024, 128
+MAX_BATCH, MAX_SEQ, PAGE = 4, 96, 16
+# Per-instance device KV: 6 pages ≈ one request's footprint (a 60-80
+# token prompt + decode spans 5-6 pages), so concurrent requests spill
+# cold pages host-ward and stream them back — the traffic affinity's
+# dedup shrinks. Finished prefixes therefore land host-side, where the
+# keep-alive cache adopts them (it only adopts HOST frames).
+DEVICE_EXTRA_PAGES, HOST_PAGES, CACHE_PAGES = 6, 40, 10
+N_INSTANCES = 2
+TENANTS = 4
+SEED, N_REQUESTS = 20, 48
+# generous classes: the claim is byte traffic, not latency headroom
+SLO_CLASSES = (SLOClass("standard", 4.0, 0.05, weight=0.7),
+               SLOClass("batch", 8.0, 0.2, weight=0.3))
+
+
+def mk_engine(name: str, scale: int = 1) -> ServingEngine:
+    """One fleet instance; ``scale=N_INSTANCES`` builds the consolidated
+    big-instance baseline with the pooled capacity of the whole fleet."""
+    cfg = reduce_config(get_config("qwen2.5-3b"), d_model=D_MODEL,
+                        heads=HEADS, layers=LAYERS, d_ff=D_FF, vocab=VOCAB)
+    model = build_model(cfg)
+    an = PerformanceAnalyzer(cfg, A10, measure="model")
+    kv_tok = max(costs.kv_cache_bytes(cfg, 1, 1, model.virtual_kv), 1)
+    _, units = pattern_info(cfg)
+    pb = PAGE * kv_tok
+    # weights stay fully resident (NO_OFFLOAD): the link traffic under test
+    # is the KV tier's, and totals() counts exactly that
+    hbm = OffloadPlan(units, NO_OFFLOAD).device_bytes(
+        costs.unit_weight_bytes(cfg)) + scale * DEVICE_EXTRA_PAGES * pb
+    slos = [0.002 * k for k in range(1, 30)]
+    rec_p = an.generate_record(slos, [1, 2, 4, 8], [16, 32, 64], "prefill")
+    rec_d = an.generate_record(slos, [1, 2, 4, 8], [16, 32, 64], "decode")
+    return ServingEngine(name, model, A10, rec_p, rec_d, an.layer_times,
+                         EngineConfig(max_batch=scale * MAX_BATCH,
+                                      max_seq=MAX_SEQ, page_size=PAGE,
+                                      hbm_budget_bytes=hbm,
+                                      host_kv_bytes=scale * HOST_PAGES * pb,
+                                      prefix_dedup=True, preemption=True,
+                                      host_prefix_cache_pages=scale
+                                      * CACHE_PAGES))
+
+
+def workload(n: int = N_REQUESTS, seed: int = SEED) -> list[Request]:
+    wcfg = WorkloadConfig(
+        # dense arrivals: per-instance concurrency must exceed the device
+        # pool under BOTH routers, or round-robin never spills and there
+        # is no traffic for affinity to save
+        seed=seed, process="poisson", rate_per_s=3000.0,
+        mean_rounds=2.0, mean_think_s=0.0005, tenants=TENANTS,
+        # max_prompt_len must cover the longest accumulated history:
+        # generate_workload clips prompts to the LAST max_prompt_len
+        # tokens, and a clipped history no longer page-aligns with its
+        # tenant's system prompt (no shared prefix keys at all)
+        system_prompt_len=48, median_turn_len=12, turn_len_sigma=0.3,
+        max_prompt_len=80, mean_output_len=8.0, max_output_len=16,
+        vocab_size=VOCAB, slo_classes=SLO_CLASSES)
+    return generate_workload(wcfg, n)
+
+
+def clone_requests(reqs: list[Request]) -> list[Request]:
+    return [Request(rid=r.rid, prompt=r.prompt.copy(),
+                    max_new_tokens=r.max_new_tokens,
+                    ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
+                    arrival_s=r.arrival_s, tenant=r.tenant) for r in reqs]
+
+
+def kv_bytes_moved(link: dict) -> float:
+    """Total KV payload over the modeled links: PCIe both directions (which
+    subsume streamed + promoted, audited by I1), the NVMe tier, and each
+    migration ticket counted once (out == in by fleet conservation)."""
+    return (link["pcie_in_bytes"] + link["pcie_out_bytes"]
+            + link["disk_in_bytes"] + link["disk_out_bytes"]
+            + link["mig_out_bytes"])
+
+
+def run_fleet(reqs: list[Request], policy: str, prefix: str) -> dict:
+    engines = [mk_engine(f"{prefix}{i}") for i in range(N_INSTANCES)]
+    fleet = Fleet(engines, policy=policy)
+    out = fleet.run(clone_requests(reqs), max_iters=200_000)
+    ok, violations = fleet.audit()
+    finished = [r for e in engines for r in e.finished]
+    return {
+        "name": prefix, "fleet": fleet, "summary": out,
+        "audit_ok": ok, "violations": violations,
+        "audit_checks": sum(capture_trace(e)["audit_checks"]
+                            for e in engines),
+        "bytes_moved": kv_bytes_moved(out["link_bytes"]),
+        "per_rid_instance": {r.rid: e.name for e in engines
+                             for r in e.finished},
+        "gen_tokens": {r.rid: list(r.generated) for r in finished},
+        "viol": sum(0 if m["ttft_ok"] and m["tpot_ok"] else 1
+                    for m in out["per_request"]),
+    }
+
+
+def run_big(reqs: list[Request]) -> dict:
+    eng = mk_engine("big", scale=N_INSTANCES)
+    summary = eng.run(clone_requests(reqs), max_iters=200_000)
+    trace = capture_trace(eng)
+    per = [r.metrics() for r in eng.finished]
+    return {
+        "name": "big", "summary": summary, "audit_ok": trace["audit_ok"],
+        "violations": trace["violations"],
+        "audit_checks": trace["audit_checks"],
+        "bytes_moved": kv_bytes_moved(eng.trace.totals()),
+        "finished": len(eng.finished), "rejected": len(eng.rejected),
+        "tokens": sum(m["tokens"] for m in per),
+        "wall_s": eng.clock_s,
+        "gen_tokens": {r.rid: list(r.generated) for r in eng.finished},
+        "viol": sum(0 if m["ttft_ok"] and m["tpot_ok"] else 1 for m in per),
+    }
+
+
+def tenant_concentration(reqs: list[Request], placed: dict) -> float:
+    """Weighted fraction of each tenant's requests landing on that tenant's
+    modal instance — 1.0 means perfect per-tenant partitioning."""
+    tenant_of = {r.rid: r.tenant for r in reqs}
+    per_tenant: dict[int, dict[str, int]] = {}
+    for rid, inst in placed.items():
+        per_tenant.setdefault(tenant_of[rid], {}).setdefault(inst, 0)
+        per_tenant[tenant_of[rid]][inst] += 1
+    hit = sum(max(c.values()) for c in per_tenant.values())
+    return hit / max(sum(sum(c.values()) for c in per_tenant.values()), 1)
+
+
+def run() -> BenchResult:
+    reqs = workload()
+    aff = run_fleet(reqs, "affinity", "aff")
+    rr = run_fleet(reqs, "round_robin", "rr")
+    big = run_big(reqs)
+
+    rows = []
+    for side in (aff, rr):
+        s = side["summary"]
+        rows.append({
+            "config": f"fleet-{s['router']}",
+            "instances": s["instances"],
+            "finished": s["finished"], "rejected": s["rejected"],
+            "wall_s": s["wall_modeled_s"],
+            "throughput_tok_s": s["throughput_tok_s"],
+            "kv_bytes_moved_MB": side["bytes_moved"] / 1e6,
+            "slo_violations": side["viol"],
+            "migrations": s["migrations"],
+            "preemptions": s["preemptions"],
+            "ttft_p99_s": s["ttft"]["p99_s"],
+            "tpot_p99_s": s["tpot"]["p99_s"],
+        })
+    rows.append({
+        "config": "big-instance", "instances": 1,
+        "finished": big["finished"], "rejected": big["rejected"],
+        "wall_s": big["wall_s"],
+        "throughput_tok_s": big["tokens"] / big["wall_s"],
+        "kv_bytes_moved_MB": big["bytes_moved"] / 1e6,
+        "slo_violations": big["viol"],
+        "migrations": 0, "preemptions": None,
+        "ttft_p99_s": None, "tpot_p99_s": None,
+    })
+
+    tokens_exact = (aff["gen_tokens"] == big["gen_tokens"]
+                    == rr["gen_tokens"])
+    fewer_bytes = aff["bytes_moved"] < rr["bytes_moved"]
+    conc = tenant_concentration(reqs, aff["per_rid_instance"])
+    conc_rr = tenant_concentration(reqs, rr["per_rid_instance"])
+    hits_used = sum(max(d.hits) for d in aff["fleet"].router.decisions)
+    all_done = all(s["summary"]["finished"] == len(reqs)
+                   and s["summary"]["rejected"] == 0 for s in (aff, rr)) \
+        and big["finished"] == len(reqs) and big["rejected"] == 0
+    audits_ok = aff["audit_ok"] and rr["audit_ok"] and big["audit_ok"]
+    mig_conserved = all(
+        not any("fleet:" in v for v in s["violations"]) for s in (aff, rr))
+
+    claims = [
+        Claim("fig20 greedy tokens bitwise identical across placements",
+              "routing and migration compose timing, never numbers",
+              "affinity == round_robin == big instance, per request"
+              if tokens_exact else "DIVERGED", ok=tokens_exact),
+        Claim("fig20 affinity moves strictly fewer KV bytes than "
+              "round-robin",
+              "co-locating a tenant's sessions dedups their shared pages "
+              "once per fleet, not once per instance",
+              f"affinity {aff['bytes_moved']/1e6:.2f}MB < round_robin "
+              f"{rr['bytes_moved']/1e6:.2f}MB "
+              f"({1 - aff['bytes_moved']/max(rr['bytes_moved'], 1):.0%} "
+              "less)", ok=fewer_bytes),
+        Claim("fig20 affinity partitions tenants across instances",
+              "prefix hits steer same-tenant sessions to one instance",
+              f"tenant concentration {conc:.0%} (round_robin {conc_rr:.0%})"
+              f", {hits_used} claimed prefix pages across decisions",
+              ok=conc >= 0.75 and conc > conc_rr and hits_used > 0),
+        Claim("fig20 zero SLO violations on the affinity fleet",
+              "affinity admission respects per-class TTFT/TPOT",
+              f"{aff['viol']} violations, {len(reqs)} requests finished"
+              if all_done else "incomplete", ok=aff["viol"] == 0 and all_done),
+        Claim("fig20 every audit passes incl. fleet migration conservation",
+              "I1-I11 per instance; exported bytes == adopted bytes "
+              "fleet-wide",
+              f"{aff['audit_checks'] + rr['audit_checks'] + big['audit_checks']}"
+              f" checks, {aff['summary']['migrations']} migrations "
+              f"({aff['summary']['migrated_bytes']}B)"
+              if audits_ok and mig_conserved else
+              str((aff["violations"] + rr["violations"]
+                   + big["violations"])[:5]),
+              ok=audits_ok and mig_conserved),
+    ]
+    res = BenchResult(
+        "fig20_fleet", rows, claims,
+        notes=[f"workload: {N_REQUESTS} requests, {TENANTS} tenants, "
+               f"poisson 3000/s, {N_INSTANCES}-instance fleet vs pooled "
+               "big instance",
+               f"per instance: {DEVICE_EXTRA_PAGES} device KV pages "
+               f"(< batch working set), {HOST_PAGES} host, "
+               f"{CACHE_PAGES} prefix-cache pages"])
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/BENCH_fleet.json", "w") as f:
+        json.dump(res.to_json(), f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    print(run().render())

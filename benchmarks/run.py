@@ -31,6 +31,7 @@ MODULES = [
     "fig17_preemption",
     "fig18_disk_tier",
     "fig19_sustained_load",
+    "fig20_fleet",
     "roofline",
 ]
 

@@ -134,6 +134,29 @@ def coordinate(instances: Sequence[InstanceState], link_bw: float
         True, {i.name: v for i, v in zip(instances, combo)}, host, rate)
 
 
+class FleetLinkBudget:
+    """Fleet-wide owner of the shared host-link budget (the bus arbiter
+    promoted to fleet scope). One object per fleet holds the link bandwidth;
+    the fleet's step loop asks it to ``certify`` the instance set (the same
+    §4.5 arbitration ``coordinate`` runs per bus), and the affinity router
+    asks it for per-instance ``pressure`` — the fraction of the shared link
+    one instance's current interval + KV traffic would consume — so
+    admissions steer away from instances already saturating their share."""
+
+    def __init__(self, link_bw: float):
+        self.link_bw = link_bw
+
+    def certify(self, instances: Sequence[InstanceState]
+                ) -> CoordinationResult:
+        return coordinate(instances, self.link_bw)
+
+    def pressure(self, inst: InstanceState, interval: int) -> float:
+        if self.link_bw <= 0:
+            return 0.0
+        return inst.link_rate(interval if interval else NO_OFFLOAD) \
+            / self.link_bw
+
+
 def max_interval_for_memory(num_units: int, unit_bytes: int,
                             hbm_budget_bytes: float) -> int:
     """Largest interval whose resident set fits the budget; NO_OFFLOAD if the

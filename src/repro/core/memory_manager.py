@@ -367,7 +367,7 @@ class OffloadRuntime:
 
     # ----- prefill --------------------------------------------------------------
     def prefill(self, params_split: Params, inputs: dict, cache_len: int,
-                attn_impl: str = "chunked"):
+                attn_impl: str = "chunked", last_pos=None):
         cfg, model = self.model.cfg, self.model
         enc_out = enc_pos = None
         if cfg.encoder_layers > 0:
@@ -425,7 +425,14 @@ class OffloadRuntime:
         else:
             caches["tail"] = None
         x = L.apply_norm(cfg, params_split["final_norm"], x)
-        logits = T.lm_logits(cfg, params_split, x[:, -1:])[:, 0]
+        # last_pos: logits position for shape-bucketed prefills whose tokens
+        # carry suffix padding — causal attention keeps every position < S
+        # bitwise-independent of the padding, but the last ROW is padding,
+        # so the caller passes the true last position (traced: one compile
+        # serves every prompt length in the bucket)
+        h = x[:, -1:] if last_pos is None else \
+            jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+        logits = T.lm_logits(cfg, params_split, h)[:, 0]
         return logits, caches, enc_pos
 
     # ----- cache helpers ---------------------------------------------------------

@@ -11,9 +11,10 @@ production-stack's multi-round-qa exemplar:
     diurnal_amplitude * sin(2*pi*t / diurnal_period_s))`` sampled by
     thinning);
   * **multi-round chat sessions** — a session opens with a system prompt
-    shared across ALL sessions (what prefix dedup deduplicates), every
-    round's prompt extends the session's own growing history prefix, and
-    rounds are spaced by exponential think time;
+    shared across ALL sessions (what prefix dedup deduplicates) — or, with
+    ``tenants > 1``, with its tenant's system prompt, shared across that
+    tenant's sessions only — every round's prompt extends the session's own
+    growing history prefix, and rounds are spaced by exponential think time;
   * **mixed SLO classes** — each session draws one ``(ttft_slo_s,
     tpot_slo_s)`` class (interactive / standard / batch style) with
     configurable weights;
@@ -56,6 +57,14 @@ class WorkloadConfig:
     mean_rounds: float = 3.0            # geometric number of chat rounds
     mean_think_s: float = 1.0           # exponential gap between rounds
     system_prompt_len: int = 32         # shared across every session
+    # multi-tenant traces: with tenants > 1 each session draws a tenant id
+    # uniformly and opens with that TENANT's system prompt instead of the
+    # global one, so same-tenant sessions share identical leading
+    # ``prefix_page_keys`` (the fleet router's affinity signal) while
+    # different tenants diverge from page 0. tenants == 1 keeps the legacy
+    # single shared prompt and makes no extra RNG draws (bitwise-identical
+    # traces for every existing config).
+    tenants: int = 1
     # per-round user turn: lognormal long tail, clipped to max_prompt_len
     median_turn_len: int = 24
     turn_len_sigma: float = 0.8
@@ -102,6 +111,13 @@ def generate_workload(cfg: WorkloadConfig, n_requests: int) -> list[Request]:
     rng = np.random.Generator(np.random.Philox(key=cfg.seed))
     system = rng.integers(0, cfg.vocab_size, cfg.system_prompt_len
                           ).astype(np.int32)
+    # per-tenant system prompts (tenant 0 keeps the legacy draw above, so a
+    # tenants=1 config reproduces pre-tenant traces bitwise)
+    tenant_systems = [system]
+    for _ in range(1, max(cfg.tenants, 1)):
+        tenant_systems.append(rng.integers(0, cfg.vocab_size,
+                                           cfg.system_prompt_len
+                                           ).astype(np.int32))
     starts = _session_arrivals(rng, cfg, n_requests)  # upper bound: >=1/sess
     reqs: list[Request] = []
     rid = 0
@@ -109,7 +125,8 @@ def generate_workload(cfg: WorkloadConfig, n_requests: int) -> list[Request]:
         if rid >= n_requests:
             break
         rounds = int(rng.geometric(1.0 / max(cfg.mean_rounds, 1.0)))
-        history = system
+        tenant = int(rng.integers(0, cfg.tenants)) if cfg.tenants > 1 else 0
+        history = tenant_systems[tenant]
         t = t0
         cls = rng.choice(len(cfg.slo_classes),
                          p=_weights(cfg.slo_classes))
@@ -126,7 +143,8 @@ def generate_workload(cfg: WorkloadConfig, n_requests: int) -> list[Request]:
                               1, cfg.max_output_len))
             reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=new,
                                 ttft_slo_s=slo.ttft_slo_s,
-                                tpot_slo_s=slo.tpot_slo_s, arrival_s=t))
+                                tpot_slo_s=slo.tpot_slo_s, arrival_s=t,
+                                tenant=tenant))
             rid += 1
             # the next round's history includes this round's turn (the
             # modeled reply tokens are not knowable at trace time; the

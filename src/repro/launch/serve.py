@@ -6,7 +6,11 @@
 Builds the offline performance record (the analyzer's two-stage step 1),
 starts an engine, replays a synthetic request stream, and reports SLO
 attainment + throughput. ``--peer`` starts a second engine sharing the host
-link to exercise the per-bus coordinator (step 2).
+link to exercise the per-bus coordinator (step 2). ``--fleet N`` starts N
+instances behind a KV-affinity ``Router`` (``--router round_robin`` for the
+baseline) with cross-instance preemption and the fleet-wide link-budget
+coordinator; the run always audits every instance's trace plus the
+cross-instance migration conservation and exits 3 on any violation.
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ from repro.data.pipeline import DataConfig, request_stream
 from repro.data.workload import SLOClass, WorkloadConfig, generate_workload
 from repro.models.model import build_model
 from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.fleet import Fleet
 from repro.serving.request import Request
 
 
@@ -125,6 +130,18 @@ def main(argv=None) -> dict:
                          "a predicted violation")
     ap.add_argument("--peer", action="store_true",
                     help="second engine on the same host link (coordinator)")
+    ap.add_argument("--fleet", type=int, default=1,
+                    help="number of independent serving instances; > 1 "
+                         "starts a Fleet with a Router placing each arrival "
+                         "by claimed prefix hits, queue depth and link "
+                         "pressure, cross-instance preemption migrating "
+                         "parked requests off overloaded instances, and "
+                         "the fleet-wide link-budget coordinator")
+    ap.add_argument("--router", choices=["affinity", "round_robin"],
+                    default="affinity",
+                    help="fleet placement policy (--fleet > 1): 'affinity' "
+                         "scores prefix hits + load + link pressure; "
+                         "'round_robin' is the byte-traffic baseline")
     ap.add_argument("--trace-out", default=None,
                     help="write the iteration trace as Chrome trace-event "
                          "JSON (load in Perfetto / chrome://tracing); also "
@@ -146,6 +163,12 @@ def main(argv=None) -> dict:
         ap.error("--autotune and --peer are mutually exclusive: when a "
                  "link is shared, the per-bus coordinator owns the "
                  "interval")
+    if args.fleet > 1 and args.peer:
+        ap.error("--fleet subsumes --peer: the fleet coordinates every "
+                 "instance on the shared link already")
+    if args.fleet > 1 and args.autotune:
+        ap.error("--fleet and --autotune are mutually exclusive: the "
+                 "fleet-wide link-budget coordinator owns the interval")
 
     cfg = reduce_config(get_config(args.arch))
     hw = PRESETS[args.hw]
@@ -209,6 +232,29 @@ def main(argv=None) -> dict:
                                            args.max_seq // 4),
                         ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
                         arrival_s=r.arrival_s) for r in stream]
+
+    if args.fleet > 1:
+        engines = [eng] + [build_engine(f"e{i}", cfg, hw, ecfg, slos)
+                           for i in range(1, args.fleet)]
+        fleet = Fleet(engines, policy=args.router,
+                      link_bw=hw.host_link_bw)
+        out = fleet.run(reqs, submit_all=args.submit_all)
+        summary = {k: v for k, v in out.items() if k != "per_request"}
+        # the fleet always audits: per-instance conservation invariants
+        # (I1-I11) plus the cross-instance migration-byte cross-check
+        ok, violations = fleet.audit()
+        summary["audit"] = {"ok": ok, "violations": violations[:20]}
+        if args.trace_out:
+            for e in engines:
+                e.trace.write_perfetto(f"{args.trace_out}.{e.name}")
+        if args.metrics_out:
+            for e in engines:
+                e.trace.write_trace(f"{args.metrics_out}.{e.name}",
+                                    audit=e.trace.audit())
+        print(json.dumps(summary, indent=1))
+        if not ok:
+            raise SystemExit(3)
+        return out
 
     out = eng.run(reqs, peers=peers or None,
                   link_bw=hw.host_link_bw if peers else None,

@@ -115,13 +115,19 @@ class Model:
 
     # ---- serving steps ---------------------------------------------------------
     def prefill(self, params: Params, inputs: dict, cache_len: int,
-                attn_impl: str = "chunked"):
-        """Returns (last-token logits [B,V], caches, enc_pos)."""
+                attn_impl: str = "chunked", last_pos=None):
+        """Returns (last-token logits [B,V], caches, enc_pos).
+
+        ``last_pos`` selects the logits position for shape-bucketed prefills
+        whose token rows carry causally-inert suffix padding (default: the
+        final row, i.e. unpadded inputs)."""
         cfg = self.cfg
         hidden, caches, _, enc_pos = self.forward(
             params, inputs, want_cache=True, cache_len=cache_len,
             attn_impl=attn_impl)
-        logits = T.lm_logits(cfg, params, hidden[:, -1:])[:, 0]
+        h = hidden[:, -1:] if last_pos is None else \
+            jax.lax.dynamic_slice_in_dim(hidden, last_pos, 1, axis=1)
+        logits = T.lm_logits(cfg, params, h)[:, 0]
         return logits, caches, enc_pos
 
     def decode_step(self, params: Params, tokens: jax.Array, pos: jax.Array,

@@ -65,7 +65,8 @@ from repro.serving.autotune import IntervalTuner, TunerGauges
 from repro.serving.data_plane import CopyStageEngine
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
 from repro.serving.kv_offload import (DEVICE, DISK, HOST, LinkSpec,
-                                      SwapScheduler, TieredKVAllocator)
+                                      MigrationTicket, SwapScheduler,
+                                      TieredKVAllocator)
 from repro.serving.request import Request, State
 from repro.serving.scheduler import (ActiveInfo, IterationOutcome,
                                      IterationPlan, PlannedPreemption,
@@ -122,6 +123,12 @@ class EngineConfig:
     # Off = every hook copy executes synchronously at plan time (the PR 5
     # behavior, bitwise identical token streams either way).
     async_data_plane: bool = False
+    # Staged-prefetch depth: disk pages of the oldest parked request staged
+    # host-ward per iteration boundary (async mode only). 1 keeps the
+    # conservative one-page cadence; deeper drains a parked request's disk
+    # set in fewer boundaries at the cost of host frames held earlier. The
+    # effective depth is always bounded by free host frames.
+    prefetch_pages_per_boundary: int = 1
     # Incremental chunked prefill: each chunk attends only its own queries
     # against the resident paged KV (Pallas chunk kernel) instead of
     # recomputing the whole prefix per chunk. Opt-in: chunk logits now see
@@ -284,6 +291,19 @@ class ServingEngine:
         # trace auditor can still tile the clock
         self.idle_wait_s = 0.0
         self.idle_wait_total_s = 0.0
+        # cross-instance migration (fleet): ticket bytes sent/received over
+        # the peer link and the modeled transfer seconds charged to THIS
+        # instance's clock. Pending amounts accumulate between iterations
+        # and are stamped on the next record (same idle_wait_s discipline),
+        # so the trace auditor can tile the clock and conserve the bytes
+        self.mig_in_bytes_total = 0.0
+        self.mig_out_bytes_total = 0.0
+        self.pending_mig_in_bytes = 0.0
+        self.pending_mig_out_bytes = 0.0
+        self.mig_wait_s = 0.0
+        self.mig_wait_total_s = 0.0
+        self.n_migrated_in = 0
+        self.n_migrated_out = 0
 
     # ------------------------------------------------------------------ plan --
     @property
@@ -442,23 +462,43 @@ class ServingEngine:
 
     def _batch_capacity(self, interval: int) -> int:
         """Decode slots the KV capacity at ``interval`` could sustain for
-        the current population: device pool plus host spill headroom,
-        divided by the footprint of a typical live/waiting request. The
-        tuner's backlog mode trades this against the interval's iteration
-        time."""
+        the current population, as a packing plan over the allocator's
+        ACTUAL free frames (device headroom at that interval, free host
+        frames, and reclaimable keep-alive cache pages): residents keep
+        their claimed frames and charge only their remaining growth, then
+        waiting requests' full footprints pack greedily smallest-first.
+        The tuner's backlog mode trades this against the interval's
+        iteration time. (Replaces the average-footprint estimate, which
+        counted the WHOLE host pool — pages already claimed by parked
+        requests included — and over-admitted under host pressure.)"""
         weight_free = max(int(self.ecfg.hbm_budget_bytes
                               - self._plan(interval)
                               .device_bytes(self.unit_bytes)), 0)
-        pool_pages = weight_free // self.kv.page_bytes
-        pool_pages += self.kv.host.total_pages
-        reqs = ([r for r in self.slot_req if r is not None]
-                + self.queue + self.scheduler.preempted)
-        if not reqs:
+        dev_pages = weight_free // self.kv.page_bytes
+        free_pages = (max(dev_pages - self.kv.device.used_pages, 0)
+                      + self.kv.host.free_pages
+                      + self.kv.reclaimable_host_pages())
+        residents = ([r for r in self.slot_req if r is not None]
+                     + list(self.scheduler.preempted))
+        if not residents and not self.queue:
             return self.ecfg.max_batch
-        per_req = [-(-(r.prompt_len + r.max_new_tokens)
-                     // self.ecfg.page_size) for r in reqs]
-        pages_each = max(sum(per_req) / len(per_req), 1.0)
-        return int(max(1, min(self.ecfg.max_batch, pool_pages // pages_each)))
+
+        def need_pages(r: Request) -> int:
+            return self.kv.device.pages_for(r.prompt_len + r.max_new_tokens)
+
+        fit = len(residents)
+        growth = 0
+        for r in residents:
+            have = len(self.kv.refs(r.rid)) \
+                + (1 if self.kv.reserve_of(r.rid) is not None else 0)
+            growth += max(need_pages(r) - have, 0)
+        budget = free_pages - growth
+        for need in sorted(need_pages(r) for r in self.queue):
+            if need > budget:
+                break
+            budget -= need
+            fit += 1
+        return int(max(1, min(self.ecfg.max_batch, fit)))
 
     def _tuner_gauges(self) -> TunerGauges:
         """Snapshot the runtime state the online tuner decides from — the
@@ -630,11 +670,77 @@ class ServingEngine:
                 or not self.scheduler.preempted):
             return
         req = self.scheduler.preempted[0]
-        free = self.kv.host.free_pages
-        if free <= 0:
+        depth = min(self.kv.host.free_pages,
+                    max(self.ecfg.prefetch_pages_per_boundary, 1))
+        if depth <= 0:
             return
         self.prefetch_pages_total += self.kv.prefetch_from_disk(req.rid,
-                                                                free)
+                                                                depth)
+
+    # ------------------------------------------- cross-instance migration --
+    def export_parked_request(self, rid: int) -> tuple[Request,
+                                                       MigrationTicket] | None:
+        """Serialize a parked request for cross-instance preemption: its
+        host frames (payload copy, token order) plus the decode-cursor
+        snapshot the park took — everything a peer instance needs to resume
+        it bitwise-exactly. On success the request leaves this instance's
+        books entirely (scheduler preempted set + allocator frames); the
+        ticket bytes are charged to this instance's clock by the fleet when
+        the transfer is modeled. None (nothing changed) when the request is
+        not an exportable shape — disk-demoted pages, a held COW reserve,
+        or not parked here at all."""
+        pages = self.kv.export_parked(rid)
+        if pages is None:
+            return None
+        req = self.scheduler.take_preempted(rid)
+        if req is None:
+            return None
+        if req.parked_at_s is not None:
+            # close the source-side park stall; the destination opens its
+            # own segment at adoption time
+            req.preempt_stall_s += self.clock_s - req.parked_at_s
+            req.parked_at_s = None
+        assert self.host_pool is not None
+        self._guard_host_writes(pages)
+        ticket = MigrationTicket(
+            rid=rid, n_pages=len(pages), page_bytes=self.kv.page_bytes,
+            payload=np.stack([np.asarray(self.host_pool[p])
+                              for p in pages]),
+            next_token=req.next_token, resume_pos=req.resume_pos)
+        self.kv.free(rid)
+        self.mig_out_bytes_total += ticket.bytes_total
+        self.pending_mig_out_bytes += ticket.bytes_total
+        self.n_migrated_out += 1
+        self.trace.event("migrate_out", rid, self.clock_s,
+                         n_pages=ticket.n_pages)
+        return req, ticket
+
+    def import_parked_request(self, req: Request,
+                              ticket: MigrationTicket) -> bool:
+        """Adopt a request migrated in from a peer: claim private host
+        frames, land the ticket payload, and park it in the scheduler's
+        preempted set — it resumes through the ordinary priority path,
+        token-exactly, from the carried cursor snapshot. False (nothing
+        claimed) when the host tier cannot absorb the set."""
+        assert ticket.page_bytes == self.kv.page_bytes, \
+            "migration between incompatible page geometries"
+        pages = self.kv.import_parked(req.rid, ticket.n_pages)
+        if pages is None:
+            return False
+        assert self.host_pool is not None
+        self._guard_host_writes(pages)
+        for hp, frame in zip(pages, ticket.payload):
+            self.host_pool[hp] = np.asarray(frame)
+        req.state = State.PREEMPTED
+        req.slot = -1
+        req.parked_at_s = self.clock_s
+        self.scheduler.adopt_parked(req)
+        self.mig_in_bytes_total += ticket.bytes_total
+        self.pending_mig_in_bytes += ticket.bytes_total
+        self.n_migrated_in += 1
+        self.trace.event("migrate_in", req.rid, self.clock_s,
+                         n_pages=ticket.n_pages)
+        return True
 
     def _disk_page_copy(self, src_tier: str, src_page: int,
                         dst_tier: str, dst_page: int) -> None:
@@ -713,6 +819,14 @@ class ServingEngine:
             "interval_refusals_total": self.interval_refusals,
             "interval_switches_total": self.interval_switches,
             "idle_wait_total_s": self.idle_wait_total_s,
+            "mig_in_bytes_total": self.mig_in_bytes_total,
+            "mig_out_bytes_total": self.mig_out_bytes_total,
+            "pending_mig_in_bytes": self.pending_mig_in_bytes,
+            "pending_mig_out_bytes": self.pending_mig_out_bytes,
+            "mig_wait_total_s": self.mig_wait_total_s,
+            "pending_mig_wait_s": self.mig_wait_s,
+            "n_migrated_in": self.n_migrated_in,
+            "n_migrated_out": self.n_migrated_out,
             "n_finished": len(self.finished),
             "n_rejected": len(self.rejected),
             "n_active": sum(1 for r in self.slot_req if r is not None),
@@ -730,26 +844,36 @@ class ServingEngine:
 
     # -------------------------------------------------------------- prefill --
     def _jitted_prefill(self, tokens: np.ndarray, cache_len: int):
-        """Run the offload-aware jitted prefill over ``tokens`` (retraces
-        per distinct length; chunk boundaries are page-aligned to bound the
-        variety)."""
+        """Run the offload-aware jitted prefill over ``tokens``, shape-
+        bucketed to one compiled length (``max_seq``). Suffix padding is
+        causally inert — masked softmax terms contribute exact 0.0 and the
+        running-max flash combine is a no-op over all-masked chunks — so a
+        prefix's KV bits are identical no matter the prompt length it was
+        computed under. That makes content-addressed KV reuse (prefix dedup,
+        host prefix cache, cross-instance migration) bitwise-sound between
+        requests of unequal length, and collapses prefill to a single
+        compile per interval instead of one per distinct S."""
         rt = self._rt(self.interval)
         if self.interval not in self._jit_prefill:
             self._jit_prefill[self.interval] = jax.jit(
                 rt.prefill, static_argnames=("cache_len",))
-        inputs = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
+        bucket = self.ecfg.max_seq
+        s = int(len(tokens))
+        padded = np.zeros(bucket, np.int32)
+        padded[:s] = np.asarray(tokens, np.int32)
+        inputs = {"tokens": jnp.asarray(padded)[None]}
         return self._jit_prefill[self.interval](
-            self._params_split[self.interval], inputs, cache_len=cache_len)
+            self._params_split[self.interval], inputs, cache_len=bucket,
+            last_pos=jnp.int32(s - 1))
 
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
         req.state = State.PREFILLING
         req.slot = slot
         self.slot_req[slot] = req
         # prefill this request alone (chunked prefill routes through
-        # _run_chunks instead; the paper separates phases). cache_len is
-        # the exact prompt length: the tokens shape [1, S] forces a retrace
-        # per distinct S anyway, so this adds no compiles and the merged
-        # caches carry no padding into the page scatter.
+        # _run_chunks instead; the paper separates phases). The prefill is
+        # shape-bucketed to max_seq (see _jitted_prefill); the page scatter
+        # slices the merged caches back to the true prompt length.
         logits, caches1, _ = self._jitted_prefill(req.prompt, req.prompt_len)
         req.prefill_pos = req.prompt_len
         self.prefill_tokens_computed += req.prompt_len
@@ -802,10 +926,10 @@ class ServingEngine:
         merged = merge_stacked(caches1, rt.plan)   # per pattern j: [R,1,S,..]
         # global layer order: unit-major, pattern-minor (u * P + j)
         shape = (self.cfg.num_layers, n_tokens, *self.page_shape[3:])
-        k_all = np.stack([np.asarray(m["self"]["k"])[:, 0] for m in merged],
-                         axis=1).reshape(shape)
-        v_all = np.stack([np.asarray(m["self"]["v"])[:, 0] for m in merged],
-                         axis=1).reshape(shape)
+        k_all = np.stack([np.asarray(m["self"]["k"])[:, 0, :n_tokens]
+                          for m in merged], axis=1).reshape(shape)
+        v_all = np.stack([np.asarray(m["self"]["v"])[:, 0, :n_tokens]
+                          for m in merged], axis=1).reshape(shape)
         vals = ops.pack_token_pages(k_all, v_all, self.ecfg.page_size,
                                     dtype=jnp.bfloat16)
         refs = self.kv.refs(req.rid)
@@ -1100,6 +1224,12 @@ class ServingEngine:
         t_start = self.clock_s
         idle_wait = self.idle_wait_s
         self.idle_wait_s = 0.0
+        mig_wait = self.mig_wait_s
+        mig_in_b = self.pending_mig_in_bytes
+        mig_out_b = self.pending_mig_out_bytes
+        self.mig_wait_s = 0.0
+        self.pending_mig_in_bytes = 0.0
+        self.pending_mig_out_bytes = 0.0
         if peers is not None and link_bw is not None:
             engines = [self] + list(peers)
             insts = [e.instance_state() for e in engines]
@@ -1178,7 +1308,8 @@ class ServingEngine:
                 parked=[p.req.rid for p in plan.preemptions],
                 resumed=[r.req.rid for r in plan.resumes],
                 finished=finished, chunk_s=dt_rec,
-                idle_wait_s=idle_wait,
+                idle_wait_s=idle_wait, mig_wait_s=mig_wait,
+                mig_in_bytes=mig_in_b, mig_out_bytes=mig_out_b,
                 certified_dt_s=plan.certified_dt_s,
                 staged_issued_pages=st_issued,
                 staged_completed_pages=st_completed,
@@ -1320,7 +1451,8 @@ class ServingEngine:
             compute_s=bd.compute_s, kv_in_s=bd.kv_in_s,
             kv_out_s=bd.kv_out_s, stall_s=bd.stall_s, pcie_s=bd.pcie_s,
             disk_s=bd.disk_s, chunk_s=chunk_s, model_dt_s=bd.total_s,
-            idle_wait_s=idle_wait,
+            idle_wait_s=idle_wait, mig_wait_s=mig_wait,
+            mig_in_bytes=mig_in_b, mig_out_bytes=mig_out_b,
             link_bw_bytes_s=link_bandwidth(times),
             certified_dt_s=plan.certified_dt_s,
             staged_issued_pages=st_issued,

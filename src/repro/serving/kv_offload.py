@@ -168,6 +168,28 @@ class Migration:
 
 
 @dataclasses.dataclass
+class MigrationTicket:
+    """Serialized form of a parked request's KV for cross-instance
+    preemption (fleet migration): the host-resident page payload in token
+    order plus the decode-cursor snapshot (``next_token`` / ``resume_pos``)
+    that makes the resume bitwise-exact on the destination. The payload is
+    a COPY — the source frees its frames after exporting, the destination
+    claims fresh private host frames and writes the payload in. Transfer
+    bytes (``bytes_total``) ride a modeled peer ``LinkSpec`` and are
+    charged to BOTH instances' iteration clocks by the fleet."""
+    rid: int
+    n_pages: int
+    page_bytes: int
+    payload: object                  # [n_pages, *page_shape] array or None
+    next_token: int
+    resume_pos: int
+
+    @property
+    def bytes_total(self) -> int:
+        return self.n_pages * self.page_bytes
+
+
+@dataclasses.dataclass
 class CowMove:
     """Copy-on-write: ``rid`` leaves the shared ``src`` frame for its private
     ``dst`` frame; the data plane must copy the page bytes src -> dst before
@@ -476,6 +498,25 @@ class TieredKVAllocator:
             if ntok < self.pcfg.page_size and tokens > len(prompt):
                 need_reserve = True
         return DedupPreview(hits, idxs, need_reserve, keys)
+
+    def claimed_prefix_hits(self, keys) -> int:
+        """Contiguous leading prompt pages this allocator could serve from
+        its prefix index right now — the fleet router's affinity score.
+        Same hit-run semantics as ``dedup_preview`` (a disk frame a parked
+        request still owns ends the run), but over pre-hashed ``keys``
+        (``prefix_page_keys`` output) so the router hashes an arriving
+        prompt ONCE and probes every instance's index with one key list."""
+        if not self.enable_dedup:
+            return 0
+        n = 0
+        for key in keys:
+            ref = self.index.get(key)
+            if ref is None:
+                break
+            if ref.tier == DISK and ref.page not in self._disk_cache:
+                break
+            n += 1
+        return n
 
     # ---- allocation ----------------------------------------------------------
     def alloc(self, rid: int, tokens: int, allow_host: bool = True,
@@ -1122,6 +1163,40 @@ class TieredKVAllocator:
         if self.device.free_pages > 0:
             moves.extend(promote(len(self.host_pages_of(rid))))
         return moves
+
+    # ---- cross-instance migration --------------------------------------------
+    def export_parked(self, rid: int) -> list[int] | None:
+        """Host frame ids of a fully host-parked request, in token order —
+        the payload a ``MigrationTicket`` serializes for cross-instance
+        preemption. None (nothing exported) unless EVERY block-table ref
+        is host-resident and no COW reserve is held: a partially
+        disk-demoted or reserve-holding park stays put (the fleet migrates
+        only the bitwise-safe shape). Shared frames are fine — the payload
+        is a copy, and the source-side ``free(rid)`` afterwards just drops
+        this owner's refcount, leaving the frame to its siblings."""
+        refs = self._refs.get(rid)
+        if not refs or self._reserve.get(rid) is not None:
+            return None
+        if any(r.tier != HOST for r in refs):
+            return None
+        return [r.page for r in refs]
+
+    def import_parked(self, rid: int, n_pages: int) -> list[int] | None:
+        """Claim ``n_pages`` PRIVATE host frames for a request migrating
+        in from a peer instance and install them as its block table (token
+        order; the caller writes the ticket payload into them). The frames
+        are not prefix-index-registered — this instance never hashed that
+        KV — and the request resumes and frees like any locally parked
+        one. None (nothing claimed) when the host tier cannot absorb the
+        set even after prefix-cache reclaim."""
+        assert rid not in self._refs, "import over a live rid"
+        if n_pages > self.host.free_pages:
+            self._reclaim_host(n_pages - self.host.free_pages)
+        hp = self.host.alloc_pages(rid, n_pages)
+        if hp is None:
+            return None
+        self._refs[rid] = [PageRef(HOST, p) for p in hp]
+        return hp
 
     def can_resize_device(self, new_total_bytes: float) -> bool:
         """Would ``resize_device`` succeed? False when the shrink's overflow

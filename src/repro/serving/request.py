@@ -28,6 +28,10 @@ class Request:
     ttft_slo_s: float
     tpot_slo_s: float
     arrival_s: float = 0.0
+    # multi-tenant traces: sessions of the same tenant share a per-tenant
+    # system prefix, so same-tenant prompts carry identical leading
+    # ``prefix_page_keys`` — the fleet router's affinity signal
+    tenant: int = 0
     state: State = State.QUEUED
     # runtime
     slot: int = -1

@@ -240,7 +240,8 @@ class Scheduler:
         self._prefilling: list[Request] = []   # chunked prefills in flight
         self.stats = {"iterations": 0, "tokens": 0, "preemptions": 0,
                       "resumes": 0, "chunked_prefill_iters": 0,
-                      "disk_demotions": 0, "disk_stagings": 0}
+                      "disk_demotions": 0, "disk_stagings": 0,
+                      "migrations_out": 0, "migrations_in": 0}
         self._iv = NO_OFFLOAD                  # interval of the current plan
         self.last_dt_s = 0.0                   # last nonzero observed dt
 
@@ -250,6 +251,26 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.queue or self.preempted or self._prefilling)
+
+    # ------------------------------------------------- cross-instance moves --
+    def take_preempted(self, rid: int) -> Request | None:
+        """Remove a parked request from this scheduler's preempted set (the
+        fleet is exporting it to a peer instance). Returns the request, or
+        None if ``rid`` is not parked here."""
+        for req in self.preempted:
+            if req.rid == rid:
+                self.preempted.remove(req)
+                self.stats["migrations_out"] += 1
+                return req
+        return None
+
+    def adopt_parked(self, req: Request) -> None:
+        """Adopt a request migrated in from a peer instance. It joins the
+        preempted set — parked, host-resident — and resumes through the
+        ordinary ``_plan_resumes`` priority path, token-exactly, from the
+        ``next_token``/``resume_pos`` snapshot it carried over."""
+        self.preempted.append(req)
+        self.stats["migrations_in"] += 1
 
     # -------------------------------------------------------------- planning --
     def plan(self, view: SchedulerView) -> IterationPlan:

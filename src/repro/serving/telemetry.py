@@ -147,8 +147,16 @@ class IterationRecord:
     model_dt_s: float = 0.0        # max(pcie_s, disk_s); dt = model + chunk
     # drained-engine wait run() skipped to the next arrival BEFORE this
     # iteration began (arrival-honoring loop): the clock-tiling check
-    # expects t_start == previous t_end + idle_wait_s
+    # expects t_start == previous t_end + idle_wait_s (+ mig_wait_s)
     idle_wait_s: float = 0.0
+    # cross-instance migration (fleet): ticket payload bytes this instance
+    # sent/received over the peer link since the previous iteration, and
+    # the modeled transfer seconds charged to this instance's clock before
+    # this iteration began. Both endpoints charge the same transfer — the
+    # bytes ride BOTH iteration clocks (audited by I11)
+    mig_in_bytes: float = 0.0
+    mig_out_bytes: float = 0.0
+    mig_wait_s: float = 0.0
     link_bw_bytes_s: float = 0.0
     certified_dt_s: float | None = None   # scheduler's stamp (decode only)
     occupancy: dict = dataclasses.field(default_factory=dict)
@@ -205,7 +213,9 @@ class TraceRecorder:
                 "disk_in_bytes": sum(r.disk_in_bytes for r in it),
                 "disk_out_bytes": sum(r.disk_out_bytes for r in it),
                 "streamed_bytes": sum(r.streamed_bytes for r in it),
-                "promoted_bytes": sum(r.promoted_bytes for r in it)}
+                "promoted_bytes": sum(r.promoted_bytes for r in it),
+                "mig_in_bytes": sum(r.mig_in_bytes for r in it),
+                "mig_out_bytes": sum(r.mig_out_bytes for r in it)}
 
     def audit(self) -> "AuditReport":
         return audit_trace(self.to_dict())
@@ -352,6 +362,17 @@ class AuditReport:
           iteration prefix completions never exceed issues (an
           async-reordered trace where a completion is recorded before its
           issue fails here).
+      I11 cross-instance migration conservation (fleet traces only): per
+          direction, summed per-iteration ticket bytes equal the engine's
+          cumulative migration counters minus what is still pending a
+          stamp; every per-iteration total is a whole-page multiple;
+          summed ``mig_wait_s`` equals the cumulative transfer seconds
+          charged to this instance's clock; and migrate_in/out event
+          counts match the footer counters. I4 and I9 fold migration in:
+          ``t_start == prev t_end + idle_wait + mig_wait``, and a
+          migrated-in request counts like an admit (it finishes, stays
+          active/parked, or migrates back out) while a migrated-out one
+          leaves the books like a finish.
     """
     ok: bool
     violations: list[str]
@@ -437,11 +458,12 @@ def audit_trace(trace: dict) -> AuditReport:
               f"{r['dt_s']} != {r['t_end_s']}")
         if prev_end is not None:
             idle = r.get("idle_wait_s", 0.0)
-            check(_close(r["t_start_s"], prev_end + idle,
+            mig = r.get("mig_wait_s", 0.0)
+            check(_close(r["t_start_s"], prev_end + idle + mig,
                          scale=max(r["t_start_s"], 1e-9))
                   and r["t_start_s"] >= prev_end,
                   f"iter {i}: t_start {r['t_start_s']} != previous t_end "
-                  f"{prev_end} + idle wait {idle}")
+                  f"{prev_end} + idle wait {idle} + migration wait {mig}")
         prev_end = r["t_end_s"]
         # I5: occupancy within capacity
         for tier, occ in r["occupancy"].items():
@@ -530,21 +552,64 @@ def audit_trace(trace: dict) -> AuditReport:
               == footer["cow_out_bytes_total"],
               "trace COW d2h bytes != engine COW counter")
 
-        # I9: request conservation
+        # I9: request conservation. Migration folds in symmetrically: a
+        # migrated-in request counts like an admit (it must finish, stay
+        # active/parked, or migrate back out) and joins the parked books
+        # without a local park event; a migrated-out one leaves both books.
         n_admit = sum(1 for e in events if e["kind"] == "admit")
         n_finish = sum(1 for e in events if e["kind"] == "finish")
         n_park = sum(1 for e in events if e["kind"] == "park")
         n_resume = sum(1 for e in events if e["kind"] == "resume")
+        n_mig_in = sum(1 for e in events if e["kind"] == "migrate_in")
+        n_mig_out = sum(1 for e in events if e["kind"] == "migrate_out")
         check(n_finish == footer["n_finished"],
               f"{n_finish} finish events != {footer['n_finished']} finished "
               f"requests")
-        check(n_admit == footer["n_finished"] + footer["n_active"]
-              + footer["n_parked"],
-              f"{n_admit} admits != finished {footer['n_finished']} + active "
-              f"{footer['n_active']} + parked {footer['n_parked']}")
-        check(n_park == n_resume + footer["n_parked"],
-              f"{n_park} parks != {n_resume} resumes + {footer['n_parked']} "
-              f"still parked")
+        check(n_admit + n_mig_in == footer["n_finished"] + footer["n_active"]
+              + footer["n_parked"] + n_mig_out,
+              f"{n_admit} admits + {n_mig_in} migrated in != finished "
+              f"{footer['n_finished']} + active {footer['n_active']} + "
+              f"parked {footer['n_parked']} + {n_mig_out} migrated out")
+        check(n_park + n_mig_in == n_resume + footer["n_parked"] + n_mig_out,
+              f"{n_park} parks + {n_mig_in} migrated in != {n_resume} "
+              f"resumes + {footer['n_parked']} still parked + {n_mig_out} "
+              f"migrated out")
+
+        # I11: cross-instance migration conservation (fleet traces only)
+        if "mig_out_bytes_total" in footer:
+            check(n_mig_in == footer["n_migrated_in"],
+                  f"{n_mig_in} migrate_in events != footer "
+                  f"{footer['n_migrated_in']}")
+            check(n_mig_out == footer["n_migrated_out"],
+                  f"{n_mig_out} migrate_out events != footer "
+                  f"{footer['n_migrated_out']}")
+            for r in its:
+                for f_ in ("mig_in_bytes", "mig_out_bytes"):
+                    b = r.get(f_, 0.0)
+                    whole = b == 0 or (pb > 0 and b == int(b)
+                                       and int(b) % int(pb) == 0)
+                    check(whole,
+                          f"iter {r['index']}: {f_} {b}B not a whole-page "
+                          f"multiple of {pb:.0f}B")
+            sum_in = sum(r.get("mig_in_bytes", 0.0) for r in its)
+            sum_out = sum(r.get("mig_out_bytes", 0.0) for r in its)
+            check(sum_in == footer["mig_in_bytes_total"]
+                  - footer["pending_mig_in_bytes"],
+                  f"trace migration-in bytes {sum_in:.0f}B != engine total "
+                  f"{footer['mig_in_bytes_total']:.0f}B - pending "
+                  f"{footer['pending_mig_in_bytes']:.0f}B")
+            check(sum_out == footer["mig_out_bytes_total"]
+                  - footer["pending_mig_out_bytes"],
+                  f"trace migration-out bytes {sum_out:.0f}B != engine "
+                  f"total {footer['mig_out_bytes_total']:.0f}B - pending "
+                  f"{footer['pending_mig_out_bytes']:.0f}B")
+            sum_wait = sum(r.get("mig_wait_s", 0.0) for r in its)
+            check(_close(sum_wait, footer["mig_wait_total_s"]
+                         - footer["pending_mig_wait_s"],
+                         scale=max(sum_wait, 1e-9)),
+                  f"trace migration wait {sum_wait}s != engine total "
+                  f"{footer['mig_wait_total_s']}s - pending "
+                  f"{footer['pending_mig_wait_s']}s")
 
         # I10: copy-stage conservation (only present once the engine runs a
         # data plane). The final sync() in run() completes trailing pages

@@ -32,6 +32,7 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                       async_data_plane: bool = False,
                       incremental_prefill: bool = False,
                       autotune: bool = False,
+                      prefetch_pages_per_boundary: int = 1,
                       batches=(1, 2, 4, 8), seqs=(16, 32, 64)):
     """Reduced-qwen engine + analyzer. Size HBM either directly (``hbm_gb``)
     or as resident weights plus ``extra_device_pages`` KV pages (the
@@ -75,5 +76,7 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                                      disk_backing_path=disk_backing_path,
                                      async_data_plane=async_data_plane,
                                      incremental_prefill=incremental_prefill,
-                                     autotune=autotune))
+                                     autotune=autotune,
+                                     prefetch_pages_per_boundary=
+                                     prefetch_pages_per_boundary))
     return eng, an

@@ -166,3 +166,79 @@ def test_engine_interval_lowers_kv_headroom_tradeoff():
     eng2, _ = _mk_engine(hbm_gb=0.01)
     eng2.set_interval(1)
     assert eng2.allocator.total_pages > base
+
+
+def test_batch_capacity_is_a_packing_plan_not_an_average():
+    """Regression (PR 8 open note): the old average-footprint estimate
+    divided the WHOLE host pool — pages already claimed by a parked request
+    included — by the mean footprint, and over-admitted under host
+    pressure. The packing plan counts actual free frames."""
+    eng, _ = _mk_engine(max_batch=4, extra_device_pages=4, host_pages=12)
+    page = eng.ecfg.page_size
+    # parked resident holding every frame: 16 pages (4 device + 12 host)
+    parked = Request(rid=0,
+                     prompt=np.zeros(16 * page - 6, np.int32),
+                     max_new_tokens=6, ttft_slo_s=1.0, tpot_slo_s=1.0)
+    assert eng.kv.alloc(parked.rid, 16 * page) is not None
+    eng.scheduler.preempted.append(parked)
+    waiters = [Request(rid=1 + i, prompt=np.zeros(4 * page - 6, np.int32),
+                       max_new_tokens=6, ttft_slo_s=1.0, tpot_slo_s=1.0)
+               for i in range(4)]
+    eng.scheduler.queue.extend(waiters)
+
+    cap = eng._batch_capacity(eng.interval)
+    # true packing: the parked resident alone — zero free frames remain
+    assert cap == 1
+
+    # the retired estimate, recomputed inline: it still believed 2 fit
+    pool_pages = eng.kv.device.total_pages + eng.kv.host.total_pages
+    per_req = [-(-(r.prompt_len + r.max_new_tokens) // page)
+               for r in [parked] + waiters]
+    pages_each = max(sum(per_req) / len(per_req), 1.0)
+    old_cap = int(max(1, min(eng.ecfg.max_batch, pool_pages // pages_each)))
+    assert old_cap > cap, "the over-admission case no longer discriminates"
+
+    # frames freed -> packing capacity recovers
+    eng.kv.free(parked.rid)
+    eng.scheduler.preempted.clear()
+    assert eng._batch_capacity(eng.interval) == 4
+
+
+def test_prefetch_depth_drains_parked_disk_pages_in_fewer_boundaries():
+    """Satellite gate: ``EngineConfig.prefetch_pages_per_boundary`` sets how
+    many of a parked request's disk pages stage host-ward per iteration
+    boundary — depth 1 (default) takes one boundary per page, depth 4
+    drains the same parked set in ceil(n/4) boundaries."""
+    def boundaries(depth):
+        eng, _ = mk_reduced_engine(
+            name=f"pf{depth}", max_batch=2, max_seq=64,
+            extra_device_pages=8, host_pages=8, disk_pages=16,
+            preemption=True, async_data_plane=True,
+            prefetch_pages_per_boundary=depth)
+        rng = np.random.default_rng(3)
+        req = Request(rid=0,
+                      prompt=rng.integers(0, 100, 56).astype(np.int32),
+                      max_new_tokens=8, ttft_slo_s=1.0, tpot_slo_s=1.0)
+        eng.submit(req)
+        eng.step()                     # admit + prefill + first decode
+        moves = eng.kv.park(req.rid, [])
+        assert moves is not None
+        eng.kv.demote_to_disk(req.rid, 99)
+        eng.data_plane.drain()
+        n_disk = len(eng.kv.disk_pages_of(req.rid))
+        eng.scheduler.preempted.append(req)
+        n = 0
+        while eng.kv.disk_pages_of(req.rid):
+            eng._issue_prefetch()
+            eng.data_plane.drain()
+            n += 1
+            assert n <= n_disk, "prefetch made no progress"
+        eng.kv.check_invariants()
+        return n, n_disk
+
+    n1, d1 = boundaries(1)
+    n4, d4 = boundaries(4)
+    assert d1 == d4 and d1 >= 4
+    assert n1 == d1                    # default: one page per boundary
+    assert n4 == -(-d4 // 4)
+    assert n4 < n1

@@ -9,7 +9,13 @@ import dataclasses
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
 from repro.data.workload import SLOClass, WorkloadConfig, generate_workload
+from repro.serving.kv_offload import prefix_page_keys
 
 CFG = WorkloadConfig(seed=7, rate_per_s=10.0, mean_rounds=3.0,
                      mean_think_s=0.05, system_prompt_len=8,
@@ -108,6 +114,51 @@ def test_slo_classes_mix_with_configured_weights():
     frac_a = np.mean([r.tpot_slo_s == 0.01 for r in reqs])
     assert 0.5 < frac_a < 0.9
     assert {r.ttft_slo_s for r in reqs} <= {0.1, 9.0}
+
+
+def test_tenants_default_is_bitwise_compatible():
+    # tenants=1 must reproduce the pre-tenant trace bitwise (no extra RNG
+    # draws on the default path) and stamp tenant 0 everywhere
+    a = generate_workload(CFG, 150)
+    b = generate_workload(dataclasses.replace(CFG, tenants=1), 150)
+    for ra, rb in zip(a, b):
+        assert ra.arrival_s == rb.arrival_s
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+        assert ra.tenant == rb.tenant == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(tenants=st.integers(min_value=2, max_value=5),
+       seed=st.integers(min_value=0, max_value=1000))
+def test_same_tenant_prompts_share_leading_prefix_page_keys(tenants, seed):
+    # the router's affinity signal: every request of one tenant opens with
+    # that tenant's system prompt, so the leading system pages hash to
+    # IDENTICAL prefix_page_keys across same-tenant sessions, and distinct
+    # tenants diverge from the very first page
+    page = 8
+    cfg = dataclasses.replace(CFG, seed=seed, tenants=tenants,
+                              system_prompt_len=2 * page)
+    reqs = [r for r in generate_workload(cfg, 120)
+            if r.prompt_len < cfg.max_prompt_len]   # unclipped prompts only
+    sys_pages = cfg.system_prompt_len // page
+    lead: dict[int, list] = {}
+    for r in reqs:
+        keys = prefix_page_keys("scope", r.prompt, page)[:sys_pages]
+        if r.tenant in lead:
+            assert keys == lead[r.tenant], \
+                f"tenant {r.tenant} prompts disagree on system pages"
+        else:
+            lead[r.tenant] = keys
+    seen = list(lead.values())
+    for i, ka in enumerate(seen):
+        for kb in seen[i + 1:]:
+            assert ka[0] != kb[0], "distinct tenants share page-0 key"
+
+
+def test_tenant_field_distribution_covers_all_tenants():
+    cfg = dataclasses.replace(CFG, tenants=3)
+    reqs = generate_workload(cfg, 400)
+    assert {r.tenant for r in reqs} == {0, 1, 2}
 
 
 def test_single_class_and_single_round_degenerate_cases():
