@@ -32,6 +32,7 @@ MODULES = [
     "fig18_disk_tier",
     "fig19_sustained_load",
     "fig20_fleet",
+    "fig21_disagg",
     "roofline",
 ]
 

@@ -35,6 +35,11 @@ class InstanceState:
     # same host link as weight prefetch, so the coordinator must arbitrate
     # the combined rate (weights + KV) against the link bandwidth.
     kv_bytes_per_iter: float = 0.0
+    # Pending peer-link handoff traffic (PEER tier, both directions). The
+    # transfer itself has its own modeled link, but every handoff payload
+    # crosses this instance's host memory system, so its rate is arbitrated
+    # against the shared budget alongside weight prefetch and KV streams.
+    peer_bytes_per_iter: float = 0.0
 
     def valid_intervals(self) -> list[int]:
         if self.idle:
@@ -58,8 +63,8 @@ class InstanceState:
         if self.idle:
             return 0.0
         plan = OffloadPlan(self.num_units, interval)
-        kv_rate = self.kv_bytes_per_iter / self.t_iter_s \
-            if self.t_iter_s > 0 else 0.0
+        kv_rate = (self.kv_bytes_per_iter + self.peer_bytes_per_iter) \
+            / self.t_iter_s if self.t_iter_s > 0 else 0.0
         return plan.link_rate(self.unit_bytes, self.t_iter_s) + kv_rate
 
     def host_bytes(self, interval: int) -> int:

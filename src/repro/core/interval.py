@@ -131,6 +131,23 @@ def disk_transfer_seconds(disk_in_bytes: float, disk_out_bytes: float,
     return disk_latency_s + total / disk_bw
 
 
+def peer_transfer_seconds(peer_in_bytes: float, peer_out_bytes: float,
+                          peer_bw: float, peer_latency_s: float = 0.0
+                          ) -> float:
+    """Peer-link seconds for one iteration's cross-instance KV handoff
+    traffic (disaggregated prefill/decode, see serving.fleet). The peer
+    link — NIC/NVLink to another instance's host pool — is its own channel
+    like the NVMe link: its bytes never ride the local PCIe copy stream,
+    but an iteration that imported or exported handoff pages cannot
+    complete before its peer queue drains."""
+    total = peer_in_bytes + peer_out_bytes
+    if total <= 0:
+        return 0.0
+    if peer_bw <= 0:
+        raise ValueError("peer KV traffic needs a peer link bandwidth")
+    return peer_latency_s + total / peer_bw
+
+
 @dataclasses.dataclass(frozen=True)
 class IterTimeBreakdown:
     """One iteration's modeled latency, decomposed by what the clock was
@@ -138,7 +155,7 @@ class IterTimeBreakdown:
     the folded ``total_s`` float).
 
     Identities (the trace auditor machine-checks them):
-      ``total_s == max(pcie_s, disk_s)`` exactly, and
+      ``total_s == max(pcie_s, disk_s, peer_s)`` exactly, and
       ``pcie_s == kv_in_s + compute_s + stall_s`` up to float reassociation.
     """
     total_s: float        # what iter_time_with_interval_kv returns
@@ -148,6 +165,7 @@ class IterTimeBreakdown:
     kv_in_s: float        # h2d KV copy gating layer-0 compute
     kv_out_s: float       # d2h write-back occupancy of the copy stream
     stall_s: float        # compute stalled on queued weight prefetches
+    peer_s: float = 0.0   # peer-link drain (cross-instance KV handoff)
 
 
 def iter_time_breakdown_kv(times: LayerTimes, interval: int,
@@ -157,13 +175,19 @@ def iter_time_breakdown_kv(times: LayerTimes, interval: int,
                            disk_in_bytes: float = 0.0,
                            disk_out_bytes: float = 0.0,
                            disk_bw: float = 0.0,
-                           disk_latency_s: float = 0.0) -> IterTimeBreakdown:
+                           disk_latency_s: float = 0.0,
+                           peer_in_bytes: float = 0.0,
+                           peer_out_bytes: float = 0.0,
+                           peer_bw: float = 0.0,
+                           peer_latency_s: float = 0.0) -> IterTimeBreakdown:
     """``iter_time_with_interval_kv`` with the latency decomposed into its
-    compute / link-queue / disk-queue terms. ``total_s`` is bit-identical
-    to the folded form — the wrapper below delegates here, so the two can
-    never drift."""
+    compute / link-queue / disk-queue / peer-queue terms. ``total_s`` is
+    bit-identical to the folded form — the wrapper below delegates here, so
+    the two can never drift."""
     t_disk = disk_transfer_seconds(disk_in_bytes, disk_out_bytes,
                                    disk_bw, disk_latency_s)
+    t_peer = peer_transfer_seconds(peer_in_bytes, peer_out_bytes,
+                                   peer_bw, peer_latency_s)
     t_kv_in = kv_transfer_seconds(times, kv_in_bytes, link_bw)
     t_kv_out = kv_transfer_seconds(times, kv_out_bytes, link_bw)
     compute = times.t_iter_no_offload_s
@@ -171,10 +195,12 @@ def iter_time_breakdown_kv(times: LayerTimes, interval: int,
         # no weight prefetches: the d2h write-back overlaps compute without
         # queueing anything behind it (kv_out_s is occupancy, not delay)
         pcie = t_kv_in + times.t_iter_no_offload_s
-        return IterTimeBreakdown(total_s=max(pcie, t_disk), pcie_s=pcie,
+        return IterTimeBreakdown(total_s=max(pcie, t_disk, t_peer),
+                                 pcie_s=pcie,
                                  disk_s=t_disk, compute_s=compute,
                                  kv_in_s=t_kv_in, kv_out_s=t_kv_out,
-                                 stall_s=pcie - t_kv_in - compute)
+                                 stall_s=pcie - t_kv_in - compute,
+                                 peer_s=t_peer)
     i, tc, tt = interval, times.t_compute_s, times.t_transfer_s
     groups = times.num_layers // i
     t = t_kv_in
@@ -188,10 +214,11 @@ def iter_time_breakdown_kv(times: LayerTimes, interval: int,
         t = max(t, xfer_done) + tc              # offloaded layer
     t += (times.num_layers - groups * i) * tc   # remainder layers (resident)
     pcie = t + times.t_rest_s
-    return IterTimeBreakdown(total_s=max(pcie, t_disk), pcie_s=pcie,
+    return IterTimeBreakdown(total_s=max(pcie, t_disk, t_peer), pcie_s=pcie,
                              disk_s=t_disk, compute_s=compute,
                              kv_in_s=t_kv_in, kv_out_s=t_kv_out,
-                             stall_s=pcie - t_kv_in - compute)
+                             stall_s=pcie - t_kv_in - compute,
+                             peer_s=t_peer)
 
 
 def iter_time_with_interval_kv(times: LayerTimes, interval: int,
@@ -201,7 +228,11 @@ def iter_time_with_interval_kv(times: LayerTimes, interval: int,
                                disk_in_bytes: float = 0.0,
                                disk_out_bytes: float = 0.0,
                                disk_bw: float = 0.0,
-                               disk_latency_s: float = 0.0) -> float:
+                               disk_latency_s: float = 0.0,
+                               peer_in_bytes: float = 0.0,
+                               peer_out_bytes: float = 0.0,
+                               peer_bw: float = 0.0,
+                               peer_latency_s: float = 0.0) -> float:
     """Iteration latency when KV-page traffic shares the copy stream with
     weight prefetch (tiered KV offloading, see serving.kv_offload).
 
@@ -222,18 +253,21 @@ def iter_time_with_interval_kv(times: LayerTimes, interval: int,
     double-counted nor hidden.
 
     Disk-tier traffic (``disk_in_bytes`` / ``disk_out_bytes``) runs on its
-    OWN channel (NVMe) concurrently with the PCIe schedule: the iteration
-    ends when both channels drain, ``max(t_pcie, t_disk)`` — disk bytes get
-    their own term instead of silently riding (or being hidden from) the
-    PCIe budget the TPOT math certifies. With no disk traffic this reduces
-    exactly to the two-tier model.
+    OWN channel (NVMe) concurrently with the PCIe schedule, and so does
+    cross-instance handoff traffic (``peer_in_bytes`` / ``peer_out_bytes``)
+    on the peer link: the iteration ends when every channel drains,
+    ``max(t_pcie, t_disk, t_peer)`` — disk and peer bytes get their own
+    terms instead of silently riding (or being hidden from) the PCIe
+    budget the TPOT math certifies. With no disk or peer traffic this
+    reduces exactly to the two-tier model.
 
     ``iter_time_breakdown_kv`` exposes the same latency decomposed into
-    compute / link-queue / disk-queue terms (what the telemetry plane
-    records); this wrapper returns its ``total_s``."""
+    compute / link-queue / disk-queue / peer-queue terms (what the
+    telemetry plane records); this wrapper returns its ``total_s``."""
     return iter_time_breakdown_kv(
         times, interval, kv_in_bytes, kv_out_bytes, link_bw,
-        disk_in_bytes, disk_out_bytes, disk_bw, disk_latency_s).total_s
+        disk_in_bytes, disk_out_bytes, disk_bw, disk_latency_s,
+        peer_in_bytes, peer_out_bytes, peer_bw, peer_latency_s).total_s
 
 
 def min_feasible_interval(times: LayerTimes, slo_s: float) -> int:

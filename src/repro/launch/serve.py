@@ -11,10 +11,17 @@ instances behind a KV-affinity ``Router`` (``--router round_robin`` for the
 baseline) with cross-instance preemption and the fleet-wide link-budget
 coordinator; the run always audits every instance's trace plus the
 cross-instance migration conservation and exits 3 on any violation.
+``--disagg`` splits the fleet into ``--prefill-instances`` prefill-role and
+``--decode-instances`` decode-role engines: prompts route to the prefill
+side, completed prefills hand their KV pages off through the PEER tier to
+whichever decode instance certifies the transfer, and the audit adds the
+handoff conservation invariant (bytes exported == bytes imported, per
+link) — exit 3 again on any violation.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 import numpy as np
@@ -137,6 +144,18 @@ def main(argv=None) -> dict:
                          "pressure, cross-instance preemption migrating "
                          "parked requests off overloaded instances, and "
                          "the fleet-wide link-budget coordinator")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode fleet: prompts route "
+                         "to prefill-role instances, completed prefills "
+                         "hand their KV off through the PEER tier to a "
+                         "decode-role instance that certified the transfer "
+                         "against its live TPOT budgets; TTFT is charged on "
+                         "the prefill side, TPOT-plus-transfer on the "
+                         "decode side")
+    ap.add_argument("--prefill-instances", type=int, default=1,
+                    help="prefill-role instance count (--disagg)")
+    ap.add_argument("--decode-instances", type=int, default=1,
+                    help="decode-role instance count (--disagg)")
     ap.add_argument("--router", choices=["affinity", "round_robin"],
                     default="affinity",
                     help="fleet placement policy (--fleet > 1): 'affinity' "
@@ -169,6 +188,17 @@ def main(argv=None) -> dict:
     if args.fleet > 1 and args.autotune:
         ap.error("--fleet and --autotune are mutually exclusive: the "
                  "fleet-wide link-budget coordinator owns the interval")
+    if args.disagg:
+        if args.fleet > 1 or args.peer or args.autotune:
+            ap.error("--disagg builds its own role-typed fleet: drop "
+                     "--fleet/--peer/--autotune")
+        if args.host_kv_gb <= 0:
+            ap.error("--disagg requires a host KV tier (--host-kv-gb > 0): "
+                     "prefill instances park completed prefills on host "
+                     "before the peer handoff")
+        if args.prefill_instances < 1 or args.decode_instances < 1:
+            ap.error("--disagg needs at least one prefill and one decode "
+                     "instance")
 
     cfg = reduce_config(get_config(args.arch))
     hw = PRESETS[args.hw]
@@ -186,7 +216,9 @@ def main(argv=None) -> dict:
                         incremental_prefill=args.incremental_prefill,
                         autotune=args.autotune)
     slos = [0.002 * k for k in range(1, 120)]
-    eng = build_engine("e0", cfg, hw, ecfg, slos)
+    eng = None
+    if not args.disagg:
+        eng = build_engine("e0", cfg, hw, ecfg, slos)
     peers = []
     if args.peer:
         peers.append(build_engine("e1", cfg, hw, ecfg, slos))
@@ -232,6 +264,35 @@ def main(argv=None) -> dict:
                                            args.max_seq // 4),
                         ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
                         arrival_s=r.arrival_s) for r in stream]
+
+    if args.disagg:
+        # parked staging + resume are the handoff transport: force the
+        # preemption machinery on regardless of the flag
+        pcfg = dataclasses.replace(ecfg, role="prefill", preemption=True)
+        dcfg = dataclasses.replace(ecfg, role="decode", preemption=True)
+        engines = ([build_engine(f"p{i}", cfg, hw, pcfg, slos)
+                    for i in range(args.prefill_instances)]
+                   + [build_engine(f"d{i}", cfg, hw, dcfg, slos)
+                      for i in range(args.decode_instances)])
+        fleet = Fleet(engines, policy=args.router, link_bw=hw.host_link_bw)
+        out = fleet.run(reqs, submit_all=args.submit_all)
+        summary = {k: v for k, v in out.items() if k != "per_request"}
+        # per-instance conservation invariants (I1-I12) plus the fleet's
+        # handoff conservation cross-check: bytes exported == imported,
+        # per link — exit 3 on any violation (the CI smoke gate)
+        ok, violations = fleet.audit()
+        summary["audit"] = {"ok": ok, "violations": violations[:20]}
+        if args.trace_out:
+            for e in engines:
+                e.trace.write_perfetto(f"{args.trace_out}.{e.name}")
+        if args.metrics_out:
+            for e in engines:
+                e.trace.write_trace(f"{args.metrics_out}.{e.name}",
+                                    audit=e.trace.audit())
+        print(json.dumps(summary, indent=1))
+        if not ok:
+            raise SystemExit(3)
+        return out
 
     if args.fleet > 1:
         engines = [eng] + [build_engine(f"e{i}", cfg, hw, ecfg, slos)

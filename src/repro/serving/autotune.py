@@ -82,6 +82,12 @@ class TunerGauges:
     disk_out_bytes: float = 0.0
     disk_bw: float = 0.0
     disk_latency_s: float = 0.0
+    # pending PEER-tier handoff traffic (live post-prefill KV import/export
+    # in a disaggregated fleet) — its own concurrent link channel, like disk
+    peer_in_bytes: float = 0.0
+    peer_out_bytes: float = 0.0
+    peer_bw: float = 0.0
+    peer_latency_s: float = 0.0
 
 
 class IntervalTuner:
@@ -112,7 +118,9 @@ class IntervalTuner:
         return iter_time_with_interval_kv(
             g.times, interval, g.kv_in_bytes, kv_out,
             disk_in_bytes=g.disk_in_bytes, disk_out_bytes=g.disk_out_bytes,
-            disk_bw=g.disk_bw, disk_latency_s=g.disk_latency_s)
+            disk_bw=g.disk_bw, disk_latency_s=g.disk_latency_s,
+            peer_in_bytes=g.peer_in_bytes, peer_out_bytes=g.peer_out_bytes,
+            peer_bw=g.peer_bw, peer_latency_s=g.peer_latency_s)
 
     # ------------------------------------------------------------ policy --
     def propose(self, g: TunerGauges, current: int,
@@ -137,9 +145,17 @@ class IntervalTuner:
             # than the extra weight transfers cost; otherwise the tuner
             # holds throughput and resumes chasing host memory once the
             # queue empties. Ties go host-ward.
+            if g.batch_capacity is None:
+                # the packing-plan gauge is mandatory in backlog mode:
+                # falling back to a constant reduces the rate objective to
+                # plain latency and silently re-introduces the
+                # average-footprint over-admission the packing plan fixed
+                raise ValueError("backlog-mode tuning requires the "
+                                 "batch_capacity packing-plan gauge")
+
             def score(c: int) -> float:
-                cap = g.batch_capacity(c) if g.batch_capacity else 1
-                return max(cap, 1) / self.predicted_dt_s(g, c, current)
+                return (max(g.batch_capacity(c), 1)
+                        / self.predicted_dt_s(g, c, current))
             best = max(score(c) for c in feas)
             target = next(c for c in feas if score(c) >= best * (1 - 1e-12))
         else:

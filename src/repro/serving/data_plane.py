@@ -159,6 +159,35 @@ class CopyStageEngine:
         self._wait_bg()
         self.blocking_copy_s += time.perf_counter() - t0
 
+    # ----- peer handoff ----------------------------------------------------
+
+    def peer_export(self, srcs: list[int], out: np.ndarray) -> None:
+        """Gather host frames into a handoff ticket payload (PEER tier
+        export). The gather is a host-pool read, so every queued op that
+        writes these frames — the park's d2h legs staged in the same
+        planning pass — must land first: an async queue is drained before
+        the copy. In-flight background retirements only *read* host
+        frames, so they need no wait. The bytes themselves are charged to
+        the peer link's own latency term via the allocator's pending peer
+        counters, never to the staged-plane totals."""
+        if self.async_mode:
+            self.drain()
+        t0 = time.perf_counter()
+        for i, s in enumerate(srcs):
+            out[i] = self.host_pool[s]
+        self.blocking_copy_s += time.perf_counter() - t0
+
+    def peer_import(self, payload: np.ndarray, dsts: list[int]) -> None:
+        """Scatter a handoff ticket payload into freshly claimed host
+        frames (PEER tier import). A host-pool write: any in-flight
+        background retirement still reading these frames must finish
+        first — the same guard every engine-side host write takes."""
+        self.guard_host_writes(dsts)
+        t0 = time.perf_counter()
+        for i, d in enumerate(dsts):
+            self.host_pool[d] = payload[i]
+        self.blocking_copy_s += time.perf_counter() - t0
+
     # ----- hazard guards ---------------------------------------------------
 
     def guard_host_writes(self, frames) -> None:

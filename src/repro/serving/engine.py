@@ -141,6 +141,17 @@ class EngineConfig:
     # queue depth) — the paper's §5 online stage. Mutually exclusive with
     # the peer coordinator, which owns the interval when a link is shared.
     autotune: bool = False
+    # Instance role in a disaggregated fleet (serving.fleet): "mixed" runs
+    # the full request lifecycle (the symmetric fleet behavior); "prefill"
+    # computes prompts and hands each finished prefill peer-ward; "decode"
+    # adopts handed-off requests and decodes them. Role typing only changes
+    # fleet routing/handoff policy — the engine itself can always do both.
+    role: str = "mixed"
+    # Peer link model (PEER tier): KV handoff traffic to/from other
+    # instances gets its own term in the iteration-latency model, exactly
+    # like the NVMe link — it never rides the PCIe budget.
+    peer_bw_bytes_s: float = 16e9
+    peer_latency_s: float = 1e-5
 
 
 class ServingEngine:
@@ -196,7 +207,12 @@ class ServingEngine:
             disk_bytes=ecfg.disk_kv_bytes,
             disk_link=LinkSpec(bw_bytes_s=ecfg.disk_bw_bytes_s,
                                latency_s=ecfg.disk_latency_s),
-            disk_backing_path=ecfg.disk_backing_path)
+            disk_backing_path=ecfg.disk_backing_path,
+            peer_link=LinkSpec(bw_bytes_s=ecfg.peer_bw_bytes_s,
+                               latency_s=ecfg.peer_latency_s))
+        if ecfg.role not in ("mixed", "prefill", "decode"):
+            raise ValueError(f"unknown instance role {ecfg.role!r}")
+        self.role = ecfg.role
         self.swap = SwapScheduler(self.kv)
         # policy layer: owns the queue, the preempted set and slot
         # assignment; this engine executes the plans it emits
@@ -207,6 +223,9 @@ class ServingEngine:
             SchedulerConfig(preemption=ecfg.preemption,
                             prefill_chunk_tokens=ecfg.prefill_chunk_tokens),
             prefill_seconds=self._prefill_seconds)
+        # prefill-role instances hold parked requests for peer handoff
+        # instead of resuming them locally
+        self.scheduler.hold_resumes = self.role == "prefill"
         self.host_kv_peak_pages = 0
         self.streamed_pages_peak = 0
         self.device_pages_peak = 0
@@ -304,6 +323,17 @@ class ServingEngine:
         self.mig_wait_total_s = 0.0
         self.n_migrated_in = 0
         self.n_migrated_out = 0
+        # live post-prefill KV handoff (disaggregated fleet): ticket bytes
+        # exported/imported over the PEER tier's link. Unlike emergency
+        # migration, a handoff transfer is never charged synchronously to
+        # either clock — each side's pages drain into its own next
+        # iteration's peer-link term (note_peer_export/import ->
+        # SwapPlan.peer_* -> peer_s), so the transfer overlaps modeled
+        # compute like any other offload channel.
+        self.handoff_in_bytes_total = 0.0
+        self.handoff_out_bytes_total = 0.0
+        self.n_handoff_in = 0
+        self.n_handoff_out = 0
 
     # ------------------------------------------------------------------ plan --
     @property
@@ -440,11 +470,19 @@ class ServingEngine:
                 disk_in_bytes=self.swap.pending_disk_in_bytes(),
                 disk_out_bytes=self.swap.pending_disk_out_bytes(),
                 disk_bw=self.kv.disk_link.bw_bytes_s,
-                disk_latency_s=self.kv.disk_link.latency_s),
+                disk_latency_s=self.kv.disk_link.latency_s,
+                peer_in_bytes=self.swap.pending_peer_in_bytes(),
+                peer_out_bytes=self.swap.pending_peer_out_bytes(),
+                peer_bw=self.kv.peer_link.bw_bytes_s,
+                peer_latency_s=self.kv.peer_link.latency_s),
             min_interval=min_i, max_interval=max_i,
             idle=idle if idle is not None else self._active_batch() == 0
             and not self.scheduler.has_work(),
-            kv_bytes_per_iter=kv_stream + kv_out)
+            kv_bytes_per_iter=kv_stream + kv_out,
+            # pending handoff traffic: its own link, but the fleet budget
+            # arbitrates it alongside weight prefetch (FleetLinkBudget)
+            peer_bytes_per_iter=(self.swap.pending_peer_in_bytes()
+                                 + self.swap.pending_peer_out_bytes()))
 
     # ------------------------------------------------------------ autotune --
     def _resize_out_bytes(self, interval: int) -> float:
@@ -490,7 +528,7 @@ class ServingEngine:
         growth = 0
         for r in residents:
             have = len(self.kv.refs(r.rid)) \
-                + (1 if self.kv.reserve_of(r.rid) is not None else 0)
+                + len(self.kv.reserves_of(r.rid))
             growth += max(need_pages(r) - have, 0)
         budget = free_pages - growth
         for need in sorted(need_pages(r) for r in self.queue):
@@ -527,7 +565,11 @@ class ServingEngine:
             disk_in_bytes=self.swap.pending_disk_in_bytes(),
             disk_out_bytes=self.swap.pending_disk_out_bytes(),
             disk_bw=self.kv.disk_link.bw_bytes_s,
-            disk_latency_s=self.kv.disk_link.latency_s)
+            disk_latency_s=self.kv.disk_link.latency_s,
+            peer_in_bytes=self.swap.pending_peer_in_bytes(),
+            peer_out_bytes=self.swap.pending_peer_out_bytes(),
+            peer_bw=self.kv.peer_link.bw_bytes_s,
+            peer_latency_s=self.kv.peer_link.latency_s)
 
     def _autotune_interval(self) -> None:
         """§5 online stage: let the tuner re-pick the interval for this
@@ -742,6 +784,145 @@ class ServingEngine:
                          n_pages=ticket.n_pages)
         return True
 
+    # ---------------------------------------------- post-prefill KV handoff --
+    def export_handoff(self, rid: int) -> tuple[Request,
+                                                MigrationTicket] | None:
+        """Serialize a parked post-prefill request for live handoff to a
+        decode instance. Mechanically this is ``export_parked_request`` —
+        same payload snapshot, same bitwise cursor — but the transfer is
+        charged to the PEER tier's own link term instead of a synchronous
+        migration stall: the exported pages drain into this instance's next
+        iteration's ``peer_s`` (overlapping its next prefill), and the
+        importer charges its own side symmetrically after certifying."""
+        pages = self.kv.export_parked(rid)
+        if pages is None:
+            return None
+        req = self.scheduler.take_preempted(rid)
+        if req is None:
+            return None
+        if req.parked_at_s is not None:
+            req.preempt_stall_s += self.clock_s - req.parked_at_s
+            req.parked_at_s = None
+        assert self.host_pool is not None
+        payload = np.empty((len(pages), *self.host_pool.shape[1:]),
+                           self.host_pool.dtype)
+        if self.data_plane is not None:
+            self.data_plane.peer_export(pages, payload)
+        else:
+            for i, p in enumerate(pages):
+                payload[i] = self.host_pool[p]
+        ticket = MigrationTicket(
+            rid=rid, n_pages=len(pages), page_bytes=self.kv.page_bytes,
+            payload=payload, next_token=req.next_token,
+            resume_pos=req.resume_pos, kind="handoff")
+        self.kv.free(rid)
+        self.kv.note_peer_export(ticket.n_pages)
+        self.handoff_out_bytes_total += ticket.bytes_total
+        self.n_handoff_out += 1
+        self.trace.event("handoff_out", rid, self.clock_s,
+                         n_pages=ticket.n_pages)
+        return req, ticket
+
+    def import_handoff(self, req: Request, ticket: MigrationTicket) -> bool:
+        """Adopt a handed-off post-prefill request: certify the peer
+        transfer against the live population's tightest TPOT budget (the
+        scheduler's peer-extended feasibility term), claim private host
+        frames, land the payload, and park the request into the ordinary
+        resume path. False (nothing claimed, exporter must roll back) when
+        the transfer cannot be certified or the host tier cannot absorb
+        the page set."""
+        assert ticket.kind == "handoff", ticket.kind
+        assert ticket.page_bytes == self.kv.page_bytes, \
+            "handoff between incompatible page geometries"
+        active = [ActiveInfo(r, s) for s, r in enumerate(self.slot_req)
+                  if r is not None and self.active[s]]
+        if not self.scheduler.certify_handoff(ticket.n_pages,
+                                              req.tpot_slo_s, active):
+            return False
+        pages = self.kv.import_parked(req.rid, ticket.n_pages)
+        if pages is None:
+            return False
+        assert self.host_pool is not None
+        if self.data_plane is not None:
+            self.data_plane.peer_import(ticket.payload, pages)
+        else:
+            for hp, frame in zip(pages, ticket.payload):
+                self.host_pool[hp] = np.asarray(frame)
+        req.state = State.PREEMPTED
+        req.slot = -1
+        req.parked_at_s = self.clock_s
+        self.scheduler.adopt_parked(req)
+        self.kv.note_peer_import(ticket.n_pages)
+        self.handoff_in_bytes_total += ticket.bytes_total
+        self.n_handoff_in += 1
+        self.trace.event("handoff_in", req.rid, self.clock_s,
+                         n_pages=ticket.n_pages)
+        return True
+
+    def park_for_handoff(self, rid: int) -> bool:
+        """Prefill-role instances: park a freshly prefilled request so its
+        KV becomes the host-resident, cursor-snapshotted shape a
+        ``MigrationTicket`` exports. Same mechanics (and the same d2h
+        write-back charge) as a scheduler-planned preemption, just forced
+        at the post-prefill boundary instead of under admission pressure.
+        False when the host tier cannot absorb the park — the request then
+        simply keeps its slot and decodes locally (graceful fallback)."""
+        slot = next((s for s, r in enumerate(self.slot_req)
+                     if r is not None and r.rid == rid), None)
+        if slot is None or not self.active[slot]:
+            return False
+        req = self.slot_req[slot]
+        others = [r.rid for s, r in enumerate(self.slot_req)
+                  if r is not None and self.active[s] and r.rid != rid]
+        moves = self.kv.park(rid, others)
+        if moves is None:
+            return False
+        self.swap.note_demotions(len(moves))
+        self.scheduler.stats["preemptions"] += 1
+        self.scheduler.preempted.append(req)
+        if moves and self.kv.park_copy is None:
+            assert self.host_pool is not None
+            ops.copy_pages_to_host(self.pool,
+                                   [m.src_page for m in moves],
+                                   self.host_pool,
+                                   [m.dst_page for m in moves])
+        req.state = State.PREEMPTED
+        req.preempt_count += 1
+        req.parked_at_s = self.clock_s
+        self.trace.event("park", req.rid, self.clock_s, slot=slot)
+        req.next_token = int(self.tokens[slot])
+        req.resume_pos = int(self.pos[slot])
+        req.slot = -1
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        return True
+
+    def rollback_handoff(self, req: Request,
+                         ticket: MigrationTicket) -> None:
+        """Refused handoff: the destination certified nothing and claimed
+        nothing, so the exporter re-adopts the request in place and cancels
+        the export accounting — no peer bytes crossed the link in either
+        direction, and the conservation audit sees a net zero."""
+        pages = self.kv.import_parked(req.rid, ticket.n_pages)
+        assert pages is not None, \
+            "exporter must be able to re-claim the frames it just freed"
+        assert self.host_pool is not None
+        self._guard_host_writes(pages)
+        for hp, frame in zip(pages, ticket.payload):
+            self.host_pool[hp] = np.asarray(frame)
+        req.state = State.PREEMPTED
+        req.slot = -1
+        req.parked_at_s = self.clock_s
+        self.scheduler.adopt_parked(req)
+        assert self.kv.pending_peer_out_pages >= ticket.n_pages, \
+            "rollback after the export already drained into an iteration"
+        self.kv.pending_peer_out_pages -= ticket.n_pages
+        self.kv.peer_out_pages_total -= ticket.n_pages
+        self.handoff_out_bytes_total -= ticket.bytes_total
+        self.n_handoff_out -= 1
+        self.trace.event("handoff_rollback", req.rid, self.clock_s,
+                         n_pages=ticket.n_pages)
+
     def _disk_page_copy(self, src_tier: str, src_page: int,
                         dst_tier: str, dst_page: int) -> None:
         """NVMe data plane (TieredKVAllocator.disk_copy hook): fired by the
@@ -827,6 +1008,14 @@ class ServingEngine:
             "pending_mig_wait_s": self.mig_wait_s,
             "n_migrated_in": self.n_migrated_in,
             "n_migrated_out": self.n_migrated_out,
+            "peer_in_pages_total": self.kv.peer_in_pages_total,
+            "peer_out_pages_total": self.kv.peer_out_pages_total,
+            "pending_peer_in_pages": self.kv.pending_peer_in_pages,
+            "pending_peer_out_pages": self.kv.pending_peer_out_pages,
+            "handoff_in_bytes_total": self.handoff_in_bytes_total,
+            "handoff_out_bytes_total": self.handoff_out_bytes_total,
+            "n_handoff_in": self.n_handoff_in,
+            "n_handoff_out": self.n_handoff_out,
             "n_finished": len(self.finished),
             "n_rejected": len(self.rejected),
             "n_active": sum(1 for r in self.slot_req if r is not None),
@@ -1274,6 +1463,19 @@ class ServingEngine:
                                      self.kv.device.used_pages)
         self.disk_kv_peak_pages = max(self.disk_kv_peak_pages,
                                       self.kv.disk.used_pages)
+        if self.role == "prefill" and self.scheduler.hold_resumes:
+            # disaggregated prefill instance: every freshly prefilled
+            # request parks here BEFORE any decode runs — its first token
+            # (TTFT) was charged by the prefill; decode belongs to the
+            # peer the fleet hands it to at the next boundary. Gated on
+            # hold_resumes: once the fleet's drained-flush releases the
+            # staging set (no peer ever certified), resumed requests must
+            # decode here instead of bouncing resume -> re-park forever
+            for slot in range(self.ecfg.max_batch):
+                req = self.slot_req[slot]
+                if (req is not None and self.active[slot]
+                        and req.state is State.DECODING):
+                    self.park_for_handoff(req.rid)
         chunk_s, finals = self._run_chunks(plan.chunks)
         if self._active_batch() == 0:
             # no decode this iteration; chunk compute still advances the
@@ -1314,7 +1516,7 @@ class ServingEngine:
                 staged_issued_pages=st_issued,
                 staged_completed_pages=st_completed,
                 occupancy=self.kv.occupancy(),
-                reserve_pages=len(self.kv._reserve)))
+                reserve_pages=self.kv.n_reserve_frames()))
             return
         # KV tier activity of this iteration: promote host pages into freed
         # device frames, stream the rest in for attention, write back any
@@ -1325,6 +1527,8 @@ class ServingEngine:
         pend_out_b = self.swap.pending_out_bytes()
         pdisk_in_pages = self.kv.pending_disk_in_pages
         pdisk_out_pages = self.kv.pending_disk_out_pages
+        ppeer_in_pages = self.kv.pending_peer_in_pages
+        ppeer_out_pages = self.kv.pending_peer_out_pages
         sp = self.swap.plan_iteration(self._active_rids())
         if sp.promotions:
             assert self.host_pool is not None
@@ -1388,7 +1592,11 @@ class ServingEngine:
             disk_in_bytes=sp.disk_in_bytes,
             disk_out_bytes=sp.disk_out_bytes,
             disk_bw=self.kv.disk_link.bw_bytes_s,
-            disk_latency_s=self.kv.disk_link.latency_s)
+            disk_latency_s=self.kv.disk_link.latency_s,
+            peer_in_bytes=sp.peer_in_bytes,
+            peer_out_bytes=sp.peer_out_bytes,
+            peer_bw=self.kv.peer_link.bw_bytes_s,
+            peer_latency_s=self.kv.peer_link.latency_s)
         dt = bd.total_s + chunk_s
         self.clock_s += dt
         decode_reqs = [(slot, self.slot_req[slot])
@@ -1448,9 +1656,13 @@ class ServingEngine:
             disk_in_bytes=sp.disk_in_bytes,
             disk_out_bytes=sp.disk_out_bytes,
             disk_in_pages=pdisk_in_pages, disk_out_pages=pdisk_out_pages,
+            peer_in_bytes=sp.peer_in_bytes,
+            peer_out_bytes=sp.peer_out_bytes,
+            peer_in_pages=ppeer_in_pages, peer_out_pages=ppeer_out_pages,
             compute_s=bd.compute_s, kv_in_s=bd.kv_in_s,
             kv_out_s=bd.kv_out_s, stall_s=bd.stall_s, pcie_s=bd.pcie_s,
-            disk_s=bd.disk_s, chunk_s=chunk_s, model_dt_s=bd.total_s,
+            disk_s=bd.disk_s, peer_s=bd.peer_s, chunk_s=chunk_s,
+            model_dt_s=bd.total_s,
             idle_wait_s=idle_wait, mig_wait_s=mig_wait,
             mig_in_bytes=mig_in_b, mig_out_bytes=mig_out_b,
             link_bw_bytes_s=link_bandwidth(times),
@@ -1458,7 +1670,7 @@ class ServingEngine:
             staged_issued_pages=st_issued,
             staged_completed_pages=st_completed,
             occupancy=self.kv.occupancy(),
-            reserve_pages=len(self.kv._reserve),
+            reserve_pages=self.kv.n_reserve_frames(),
             gauges=[SlotGauge(rid=req.rid, slot=slot,
                               tpot_slo_s=req.tpot_slo_s,
                               headroom_s=req.tpot_slo_s - dt)
@@ -1529,6 +1741,8 @@ class ServingEngine:
             "resumes": st["resumes"],
             "disk_demotions": st["disk_demotions"],
             "disk_stagings": st["disk_stagings"],
+            "handoffs_in": self.n_handoff_in,
+            "handoffs_out": self.n_handoff_out,
             "prefetch_pages": self.prefetch_pages_total,
             "disk_direct_pages": self.kv.disk_direct_pages_total,
             "prefill_tokens_computed": self.prefill_tokens_computed,

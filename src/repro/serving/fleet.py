@@ -40,6 +40,25 @@ and payload bytes are charged to BOTH instances' iteration clocks/records
 and conserved by the trace auditor (invariant I11) — plus the fleet-level
 cross-check here (``Fleet.audit``): total bytes exported == total bytes
 imported across the fleet.
+
+Disaggregated prefill/decode: engines constructed with ``role="prefill"``
+or ``role="decode"`` split the fleet. The router binds prompts to prefill
+instances only; a prefill instance parks every freshly-prefilled request
+(TTFT charged on its side, ``hold_resumes`` keeps local decode away), and
+after every fleet step ``_maybe_handoff`` drains the staging set peer-ward:
+the least-loaded decode instance whose scheduler CERTIFIES the transfer
+(host room + the peer-extended feasibility term against the live
+population's tightest TPOT) adopts the ticket through the PEER tier. The
+payload's bytes ride the peer link's own concurrent channel (``peer_s`` in
+both endpoints' next iteration records — invariant I12), so the transfer
+overlaps the exporter's next prefill instead of stalling it; a refused
+import rolls back into the frames the export just freed. Routes re-bind
+per iteration boundary (``_rescore_queued``): a request still waiting in
+one queue moves to a peer that now strictly wins, e.g. one that drained
+since the arrival instant. Because shape-bucketed prefill makes KV pages
+placement-independent, greedy tokens are bitwise identical across the
+disaggregated fleet, the symmetric affinity fleet, and one pooled
+instance — the differential suite pins exactly that.
 """
 from __future__ import annotations
 
@@ -89,11 +108,11 @@ class Router:
         self._rr = 0
         self.decisions: list[RouteDecision] = []
 
-    def route(self, req: Request, engines: list[ServingEngine]) -> int:
-        if self.policy == "round_robin":
-            i = self._rr % len(engines)
-            self._rr += 1
-            return i
+    def scores(self, req: Request, engines: list[ServingEngine]
+               ) -> tuple[list[int], list[float], list[float], list[tuple]]:
+        """Per-instance (hits, delays, loads, score tuples) for one request
+        — the comparable quantities both the arrival-time route and the
+        per-boundary re-score rank by."""
         # hash the prompt ONCE; probe every instance's index with the same
         # key list (all instances of a fleet share one dedup scope — same
         # model config and page geometry)
@@ -118,6 +137,14 @@ class Router:
             delays.append(delay_s)
             loads.append(load)
             scores.append((ok, h, -load, -delay_s))
+        return hits, delays, loads, scores
+
+    def route(self, req: Request, engines: list[ServingEngine]) -> int:
+        if self.policy == "round_robin":
+            i = self._rr % len(engines)
+            self._rr += 1
+            return i
+        hits, delays, loads, scores = self.scores(req, engines)
         best = max(range(len(engines)), key=lambda i: scores[i])
         self.decisions.append(RouteDecision(req.rid, best, hits, delays,
                                             loads))
@@ -132,18 +159,39 @@ class Fleet:
                  policy: str = "affinity",
                  link_bw: float | None = None,
                  peer_link: LinkSpec = DEFAULT_PEER_LINK,
-                 migrate: bool = True):
+                 migrate: bool = True,
+                 rescore: bool = True):
         assert engines, "a fleet needs at least one instance"
         self.engines = engines
         self.budget = FleetLinkBudget(link_bw) if link_bw else None
         self.router = Router(policy, self.budget)
         self.peer_link = peer_link
         self.migrate = migrate
+        self.rescore = rescore
         self.migrations: list[dict] = []
+        # role-typed instances: any non-"mixed" role makes the fleet
+        # disaggregated — prompts route to prefill instances, finished
+        # prefills hand off peer-ward, decode instances own the TPOT side
+        self.prefill_engines = [e for e in engines if e.role == "prefill"]
+        self.decode_engines = [e for e in engines if e.role == "decode"]
+        self.disagg = bool(self.prefill_engines or self.decode_engines)
+        if self.disagg and not (self.prefill_engines
+                                and self.decode_engines):
+            raise ValueError("a disaggregated fleet needs at least one "
+                             "prefill and one decode instance")
+        # per-link handoff ledger: one entry per accepted ticket, keyed by
+        # (src, dst) in audit — the cross-instance half of invariant I12
+        self.handoffs: list[dict] = []
+        self.reroutes: list[dict] = []
 
     # ------------------------------------------------------------- serving --
-    def _submit(self, req: Request) -> None:
-        eng = self.engines[self.router.route(req, self.engines)]
+    def _routable(self) -> list[ServingEngine]:
+        """Engines fresh prompts may route to: prefill instances in a
+        disaggregated fleet (decode instances only receive handoffs),
+        everyone otherwise."""
+        return self.prefill_engines if self.disagg else self.engines
+
+    def _place(self, req: Request, eng: ServingEngine) -> None:
         if eng.clock_s < req.arrival_s:
             # the chosen instance drained before this arrival: jump its
             # clock exactly like the single-engine arrival-honoring loop
@@ -151,8 +199,39 @@ class Fleet:
             eng.idle_wait_s += dt
             eng.idle_wait_total_s += dt
             eng.clock_s = req.arrival_s
-        eng.submit(req)
+        eng.scheduler.submit(req)
+
+    def _submit(self, req: Request) -> None:
+        routable = self._routable()
+        eng = routable[self.router.route(req, routable)]
+        self._place(req, eng)
         req.submitted_s = max(req.arrival_s, 0.0)
+
+    def _rescore_queued(self) -> None:
+        """Routes bind per-boundary, not per-arrival: a request still
+        WAITING in one instance's queue (no KV claimed — withdrawing it
+        rolls back nothing) re-scores against the routable set after every
+        fleet step and moves when another instance now strictly wins, e.g.
+        a peer that drained since the arrival instant."""
+        if not self.rescore or self.router.policy != "affinity":
+            return
+        routable = self._routable()
+        if len(routable) < 2:
+            return
+        for eng in routable:
+            for req in list(eng.queue):
+                cur = routable.index(eng)
+                _, _, _, scores = self.router.scores(req, routable)
+                best = max(range(len(routable)), key=lambda i: scores[i])
+                if best == cur or not scores[best] > scores[cur]:
+                    continue
+                got = eng.scheduler.withdraw(req.rid)
+                if got is None:
+                    continue
+                self._place(got, routable[best])
+                self.reroutes.append({
+                    "rid": req.rid, "src": eng.name,
+                    "dst": routable[best].name})
 
     def _step(self, eng: ServingEngine) -> None:
         if self.budget is not None:
@@ -160,6 +239,17 @@ class Fleet:
                      link_bw=self.budget.link_bw)
         else:
             eng.step()
+
+    def _busy(self, eng: ServingEngine) -> bool:
+        """Does stepping this engine make progress? For a prefill-role
+        instance the parked set is the handoff staging area, not local
+        work: with ``hold_resumes`` set, a step that only holds parked
+        requests is a no-op whose clock never advances, so counting it as
+        busy would spin the min-clock event loop forever."""
+        if eng.role == "prefill" and eng.scheduler.hold_resumes:
+            return bool(eng.queue) or eng._active_batch() > 0 \
+                or bool(eng.scheduler._prefilling)
+        return eng.scheduler.has_work() or eng._active_batch() > 0
 
     def run(self, requests: list[Request], max_iters: int = 100_000,
             submit_all: bool = False) -> dict:
@@ -177,14 +267,20 @@ class Fleet:
             n_pend = len(pending)
         iters = 0
         while iters < max_iters:
-            busy = [e for e in self.engines
-                    if e.scheduler.has_work() or e._active_batch() > 0]
+            busy = [e for e in self.engines if self._busy(e)]
             t_step = min((e.clock_s for e in busy), default=math.inf)
             t_arr = (pending[n_pend].arrival_s if n_pend < len(pending)
                      else math.inf)
             if t_arr <= t_step:
                 if t_arr == math.inf:
-                    break                     # drained fleet, no arrivals
+                    # drained of arrivals and no busy engine — but a
+                    # prefill instance may still hold parked handoffs the
+                    # decode side refused earlier; push them through now
+                    # (empty decode populations certify via the
+                    # starvation guard) before declaring the fleet done
+                    if self.disagg and self._flush_handoffs():
+                        continue
+                    break
                 req = pending[n_pend]
                 n_pend += 1
                 self._submit(req)
@@ -193,8 +289,15 @@ class Fleet:
                                            self.engines.index(e)))
             self._step(eng)
             iters += 1
-            if self.migrate and len(self.engines) > 1:
+            if self.disagg:
+                # handoffs are the only cross-instance movement in a
+                # disaggregated fleet: the emergency migration path would
+                # raid the prefill staging set with a synchronous,
+                # uncertified transfer
+                self._maybe_handoff()
+            elif self.migrate and len(self.engines) > 1:
                 self._maybe_migrate(eng)
+            self._rescore_queued()
         for eng in self.engines:
             if eng.data_plane is not None:
                 eng.data_plane.sync()
@@ -253,6 +356,80 @@ class Fleet:
             "n_pages": ticket.n_pages, "bytes": ticket.bytes_total,
             "transfer_s": t})
 
+    # ------------------------------------------------------------- handoff --
+    def _pick_decode(self, req: Request,
+                     n_pages: int) -> ServingEngine | None:
+        """Least-loaded decode instance whose scheduler certifies the
+        handoff (host room + peer-extended feasibility against the live
+        population's tightest TPOT), or None — certify-before-offer, so a
+        refusal costs nothing."""
+        cands = [e for e in self.decode_engines if e.host_pool is not None]
+        for dst in sorted(cands, key=self._load):
+            if dst.scheduler.certify_handoff(n_pages, req.tpot_slo_s,
+                                             dst._view().active):
+                return dst
+        return None
+
+    def _maybe_handoff(self) -> int:
+        """Live post-prefill KV handoff, evaluated after every fleet step:
+        each prefill instance's parked set (its handoff staging area —
+        ``hold_resumes`` keeps local resume away from it) drains peer-ward
+        to whichever certified decode instance is least loaded. The
+        payload's bytes ride the PEER tier's own link term (``peer_s`` in
+        both endpoints' next iteration records — the transfer overlaps the
+        exporter's next prefill), so unlike the emergency migration path
+        nothing stalls synchronously. A refused import (certification can
+        shift between the precheck and the claim) rolls back into the
+        frames the export just freed."""
+        moved = 0
+        for src in self.prefill_engines:
+            for req in list(src.scheduler.preempted):
+                pages = src.kv.export_parked(req.rid)   # read-only probe
+                if pages is None:
+                    continue                  # not (yet) host-exportable
+                dst = self._pick_decode(req, len(pages))
+                if dst is None:
+                    continue
+                out = src.export_handoff(req.rid)
+                if out is None:
+                    continue
+                got, ticket = out
+                if dst.clock_s < src.clock_s:
+                    # causality: the decode side cannot resume KV that has
+                    # not been exported yet — an idle importer waits for
+                    # the export instant (same discipline as arrivals)
+                    dt = src.clock_s - dst.clock_s
+                    dst.idle_wait_s += dt
+                    dst.idle_wait_total_s += dt
+                    dst.clock_s = src.clock_s
+                if not dst.import_handoff(got, ticket):
+                    src.rollback_handoff(got, ticket)
+                    continue
+                moved += 1
+                self.handoffs.append({
+                    "rid": got.rid, "src": src.name, "dst": dst.name,
+                    "n_pages": ticket.n_pages,
+                    "bytes": ticket.bytes_total})
+        return moved
+
+    def _flush_handoffs(self) -> bool:
+        """Drained-fleet backstop: no arrivals left and no busy engine,
+        but prefill instances still hold parked requests. First retry the
+        ordinary handoff path (an empty decode population certifies via
+        the starvation guard whenever host room exists); if nothing can
+        move — the decode tier genuinely cannot absorb the stranded set —
+        degrade gracefully by releasing ``hold_resumes`` so the stranded
+        prefill instance decodes locally (the resume path is
+        placement-independent, so tokens stay bitwise)."""
+        if self._maybe_handoff() > 0:
+            return True
+        changed = False
+        for eng in self.prefill_engines:
+            if eng.scheduler.preempted and eng.scheduler.hold_resumes:
+                eng.scheduler.hold_resumes = False
+                changed = True
+        return changed
+
     # --------------------------------------------------------------- audit --
     def audit(self) -> tuple[bool, list[str]]:
         """Per-instance trace audits (I1-I11) plus the fleet-level
@@ -276,6 +453,37 @@ class Fleet:
         if tik != out_b:
             violations.append(f"fleet: ticket log {tik:.0f}B != exported "
                               f"{out_b:.0f}B")
+        # handoff conservation — the cross-instance half of invariant I12:
+        # bytes exported == bytes imported, fleet-wide and per link
+        ho_out = sum(e.handoff_out_bytes_total for e in self.engines)
+        ho_in = sum(e.handoff_in_bytes_total for e in self.engines)
+        if ho_out != ho_in:
+            violations.append(f"fleet: handoff-out bytes {ho_out:.0f} != "
+                              f"handoff-in bytes {ho_in:.0f}")
+        n_ho_out = sum(e.n_handoff_out for e in self.engines)
+        n_ho_in = sum(e.n_handoff_in for e in self.engines)
+        if n_ho_out != n_ho_in:
+            violations.append(f"fleet: {n_ho_out} handoff tickets exported "
+                              f"!= {n_ho_in} adopted")
+        # per-endpoint: the ledger's per-instance byte totals must match
+        # each endpoint's own counters (no link moved bytes the ledger
+        # didn't see, and vice versa)
+        led_out: dict[str, float] = {}
+        led_in: dict[str, float] = {}
+        for h in self.handoffs:
+            led_out[h["src"]] = led_out.get(h["src"], 0.0) + h["bytes"]
+            led_in[h["dst"]] = led_in.get(h["dst"], 0.0) + h["bytes"]
+        for eng in self.engines:
+            if led_out.get(eng.name, 0.0) != eng.handoff_out_bytes_total:
+                violations.append(
+                    f"fleet: ledger says {eng.name} exported "
+                    f"{led_out.get(eng.name, 0.0):.0f}B but it booked "
+                    f"{eng.handoff_out_bytes_total:.0f}B")
+            if led_in.get(eng.name, 0.0) != eng.handoff_in_bytes_total:
+                violations.append(
+                    f"fleet: ledger says {eng.name} imported "
+                    f"{led_in.get(eng.name, 0.0):.0f}B but it booked "
+                    f"{eng.handoff_in_bytes_total:.0f}B")
         return not violations, violations
 
     # ------------------------------------------------------------- summary --
@@ -297,8 +505,12 @@ class Fleet:
             "wall_modeled_s": wall,
             "throughput_tok_s": total_tokens / wall if wall > 0 else 0.0,
             "slo_ok": all(m["ttft_ok"] and m["tpot_ok"] for m in done),
+            "disagg": self.disagg,
             "migrations": len(self.migrations),
             "migrated_bytes": sum(m["bytes"] for m in self.migrations),
+            "handoffs": len(self.handoffs),
+            "handoff_bytes": sum(h["bytes"] for h in self.handoffs),
+            "reroutes": len(self.reroutes),
             "preemptions": sum(e.scheduler.stats["preemptions"]
                                for e in self.engines),
             "resumes": sum(e.scheduler.stats["resumes"]
@@ -311,12 +523,15 @@ class Fleet:
             "link_bytes": link,
             "per_instance": {
                 e.name: {
+                    "role": e.role,
                     "finished": len(e.finished),
                     "rejected": len(e.rejected),
                     "clock_s": e.clock_s,
                     "preemptions": e.scheduler.stats["preemptions"],
                     "migrations_out": e.n_migrated_out,
                     "migrations_in": e.n_migrated_in,
+                    "handoffs_out": e.n_handoff_out,
+                    "handoffs_in": e.n_handoff_in,
                     "link_bytes": e.trace.totals(),
                 } for e in self.engines},
             "per_request": done,

@@ -61,12 +61,15 @@ Sharing + copy-on-write protocol (refcounts live in ``PagedKVAllocator``):
   * Only pages covering the *prompt* are content-indexed: full pages keyed by
     (index, chain digest), the trailing partial page additionally by its
     token count. Tail (decode) pages are always private.
-  * A sharer that will decode (total tokens > prompt length) pre-claims one
+  * A sharer that will decode (total tokens > prompt length) pre-claims a
     private COW *reserve* frame at admission time, so the copy-on-write at
     its first decode write can never fail or race a later admission for a
-    frame. ``prepare_write`` swaps the reserve into the block table and
-    returns the data-plane copy; the shared frame is left untouched for its
-    siblings.
+    frame. Reserves are PER PAGE: the admission-time reserve covers the
+    partial prompt page, and forked beams (``fork`` + ``add_reserve``)
+    claim one reserve per shared page each sharer may write, so N live
+    writers of one shared tail diverge safely. ``prepare_write`` swaps the
+    page's reserve into the block table and returns the data-plane copy;
+    the shared frame is left untouched for its siblings.
   * The request that *registered* a page (its origin) may keep appending in
     place even while the page is shared: a sharer's context never extends
     past the `k` prompt tokens the index key describes until the sharer
@@ -100,12 +103,46 @@ from repro.serving.kv_cache import (PageConfig, PagedKVAllocator,
 DEVICE = "device"
 HOST = "host"
 DISK = "disk"
+PEER = "peer"
 
-# Ordered tier hierarchy: frames migrate only between adjacent tiers
-# (device <-> host over PCIe, host <-> disk over NVMe). Generalizing this
-# tuple is how a fourth tier would land: every migration / invariant /
-# reclaim path below iterates it instead of naming pools.
-TIER_ORDER = (DEVICE, HOST, DISK)
+# Role-typed tier registry: every tier declares what it is FOR, not where
+# it sits in a fixed ladder. Local roles form the ordered spill hierarchy
+# (compute -> staging -> spill: frames migrate only between adjacent local
+# tiers — device <-> host over PCIe, host <-> disk over NVMe). The PEER
+# tier's role is different in kind: its far side is another instance's
+# host pool, reached over its own ``LinkSpec`` — pages never "migrate
+# adjacent" into it, they are exported/imported whole-request as
+# ``MigrationTicket`` payloads, and its traffic is charged to the peer
+# link's own latency term (``interval.peer_transfer_seconds``), never to
+# PCIe or NVMe.
+ROLE_COMPUTE = "compute"   # the tier the decode kernel indexes (HBM)
+ROLE_STAGING = "staging"   # pinned-host pool below HBM (PCIe)
+ROLE_SPILL = "spill"       # cold storage at the ladder's end (NVMe)
+ROLE_PEER = "peer"         # a remote instance's staging tier (peer link)
+
+TIER_ROLES: dict[str, str] = {
+    DEVICE: ROLE_COMPUTE,
+    HOST: ROLE_STAGING,
+    DISK: ROLE_SPILL,
+    PEER: ROLE_PEER,
+}
+
+
+def tier_role(tier: str) -> str:
+    return TIER_ROLES[tier]
+
+
+def local_tiers() -> tuple[str, ...]:
+    """The ordered local ladder (tiers that own frames in THIS instance's
+    pools), derived from the role registry. Adding a local tier means
+    registering its role here — every migration / invariant / reclaim path
+    below iterates this instead of naming pools."""
+    return tuple(t for t, role in TIER_ROLES.items() if role != ROLE_PEER)
+
+
+# Backwards-compatible ladder view: the fixed (DEVICE, HOST, DISK) tuple is
+# now DERIVED from the role registry instead of hand-ordered.
+TIER_ORDER = local_tiers()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,20 +206,34 @@ class Migration:
 
 @dataclasses.dataclass
 class MigrationTicket:
-    """Serialized form of a parked request's KV for cross-instance
-    preemption (fleet migration): the host-resident page payload in token
-    order plus the decode-cursor snapshot (``next_token`` / ``resume_pos``)
-    that makes the resume bitwise-exact on the destination. The payload is
-    a COPY — the source frees its frames after exporting, the destination
-    claims fresh private host frames and writes the payload in. Transfer
-    bytes (``bytes_total``) ride a modeled peer ``LinkSpec`` and are
-    charged to BOTH instances' iteration clocks by the fleet."""
+    """Serialized form of one request's KV crossing an instance boundary —
+    the ordinary transport of the PEER tier, not just the emergency one:
+    the host-resident page payload in token order plus the decode-cursor
+    snapshot (``next_token`` / ``resume_pos``) that makes the resume
+    bitwise-exact on the destination. The payload is a COPY — the source
+    frees its frames after exporting, the destination claims fresh private
+    host frames and writes the payload in.
+
+    Two kinds ride the same ticket shape, with different clock charging:
+
+      * ``"evacuation"`` — cross-instance preemption of a parked request
+        under overload (PR 9). The fleet charges the transfer seconds
+        synchronously to BOTH instances' clocks (``mig_wait_s``).
+      * ``"handoff"`` — live post-prefill KV handoff in a disaggregated
+        prefill/decode fleet: the prefill side exports through the async
+        copy-stage engine (transfer overlaps its next prefill) and each
+        side drains the ticket's pages into its next iteration's
+        ``peer_s`` channel term (``interval.peer_transfer_seconds``), so
+        the decode scheduler certifies TPOT-plus-transfer the same way it
+        certifies NVMe traffic.
+    """
     rid: int
     n_pages: int
     page_bytes: int
     payload: object                  # [n_pages, *page_shape] array or None
     next_token: int
     resume_pos: int
+    kind: str = "evacuation"         # "evacuation" | "handoff"
 
     @property
     def bytes_total(self) -> int:
@@ -334,17 +385,33 @@ class TieredKVAllocator:
                  host_prefix_cache_pages: int = 0,
                  disk_bytes: float = 0.0,
                  disk_link: LinkSpec = LinkSpec(),
-                 disk_backing_path: str | None = None):
+                 disk_backing_path: str | None = None,
+                 peer_link: LinkSpec = LinkSpec()):
         self.pcfg = pcfg
         self.device = PagedKVAllocator(max(int(device_bytes), 0), pcfg)
         self.host = HostKVPool(max(int(host_bytes), 0), pcfg)
         self.disk = DiskKVPool(max(int(disk_bytes), 0), pcfg,
                                backing_path=disk_backing_path)
-        # ordered hierarchy view: every tier-generic path below goes through
-        # this map instead of naming a pool
+        # local-ladder view (role registry order): every tier-generic path
+        # below goes through this map instead of naming a pool. The PEER
+        # tier deliberately has no entry — its frames live in another
+        # instance's host pool, reached through tickets, never indexed here.
         self.pools: dict[str, PagedKVAllocator] = {
             DEVICE: self.device, HOST: self.host, DISK: self.disk}
+        assert set(self.pools) == set(local_tiers())
         self.disk_link = disk_link
+        # the PEER tier's link: bandwidth/latency to another instance's
+        # host pool (NIC / NVLink). Handoff traffic performed since the
+        # swap scheduler last planned is charged to this link's own
+        # latency term (interval.peer_transfer_seconds), never to PCIe or
+        # NVMe. The emergency evacuation path (fleet cross-instance
+        # preemption) does NOT ride these counters — it charges transfer
+        # seconds synchronously to both clocks (mig_wait_s).
+        self.peer_link = peer_link
+        self.pending_peer_in_pages = 0    # handoff imports (peer -> host)
+        self.pending_peer_out_pages = 0   # handoff exports (host -> peer)
+        self.peer_in_pages_total = 0
+        self.peer_out_pages_total = 0
         # data-plane hook for host<->disk moves: called as
         # disk_copy(src_tier, src_page, dst_tier, dst_page) the moment the
         # accounting move lands, while the vacated frame's bytes are still
@@ -389,7 +456,10 @@ class TieredKVAllocator:
         self.index = PrefixIndex()
         self._dedup_hits: dict[int, list[int]] = {}   # rid -> hit page idxs
         self._fresh_host: dict[int, int] = {}         # rid -> fresh host pages
-        self._reserve: dict[int, PageRef] = {}        # rid -> COW reserve
+        # per-page COW reserves: rid -> {page_idx -> private spare frame}.
+        # The admission-time reserve covers the partial prompt page; forked
+        # beams add one per shared page they may write (``add_reserve``).
+        self._reserves: dict[int, dict[int, PageRef]] = {}
         self.dedup_pages_reused = 0                   # cumulative hit count
         self.cow_copies = 0                           # cumulative COW moves
         # prefix-cache keep-alive: up to this many host frames survive their
@@ -455,7 +525,18 @@ class TieredKVAllocator:
         return list(self._dedup_hits.get(rid, []))
 
     def reserve_of(self, rid: int) -> PageRef | None:
-        return self._reserve.get(rid)
+        """The single reserve of an unforked sharer (compat view): the
+        first per-page reserve held, or None."""
+        rmap = self._reserves.get(rid)
+        return next(iter(rmap.values())) if rmap else None
+
+    def reserves_of(self, rid: int) -> dict[int, PageRef]:
+        """page_idx -> private COW reserve frame held by ``rid``."""
+        return dict(self._reserves.get(rid, {}))
+
+    def n_reserve_frames(self) -> int:
+        """Total claimed COW reserve frames across all requests."""
+        return sum(len(m) for m in self._reserves.values())
 
     def refcount(self, ref: PageRef) -> int:
         return self.pool_of(ref.tier).refcount(ref.page)
@@ -569,9 +650,11 @@ class TieredKVAllocator:
         assert hp is not None and dp is not None
         if pv.need_reserve:
             # the reserve prefers a device frame (the COW target is the
-            # decode write page); it is claimed in the pool but not in refs
-            self._reserve[rid] = (PageRef(DEVICE, dp.pop()) if dp
-                                  else PageRef(HOST, hp.pop()))
+            # decode write page); it is claimed in the pool but not in
+            # refs, keyed by the partial prompt page it protects
+            self._reserves[rid] = {
+                pv.hit_indices[-1]: (PageRef(DEVICE, dp.pop()) if dp
+                                     else PageRef(HOST, hp.pop()))}
         for ref in hit_refs:
             self.pool_of(ref.tier).share_pages(rid, [ref.page])
             if ref.tier == HOST and ref.page in self._cache_lru:
@@ -665,7 +748,7 @@ class TieredKVAllocator:
         self._refs.pop(rid, None)
         self._dedup_hits.pop(rid, None)
         self._fresh_host.pop(rid, None)
-        self._reserve.pop(rid, None)
+        self._reserves.pop(rid, None)
         if adopted:
             # trim AFTER rid's own claims are gone: adopted frames are
             # refcount-1 (pure cache) only now, so the LRU bound can evict
@@ -791,10 +874,12 @@ class TieredKVAllocator:
         corrupt a sibling:
 
           * private page (refcount 1): write in place; a now-stale COW
-            reserve (every sibling left or finished) is released.
-          * shared page, ``rid`` holds a reserve (it joined via dedup): swap
-            the reserve into the block table — the returned ``CowMove`` tells
-            the data plane to copy the page bytes first.
+            reserve for this page (every sibling left or finished) is
+            released.
+          * shared page, ``rid`` holds a reserve for it (admission dedup or
+            ``add_reserve``): swap the reserve into the block table — the
+            returned ``CowMove`` tells the data plane to copy the page
+            bytes first.
           * shared page, no reserve: ``rid`` is the page's origin; appending
             in place is safe (sibling contexts never reach the appended
             positions before their own COW — see module docstring).
@@ -804,21 +889,76 @@ class TieredKVAllocator:
         ref = refs[page_idx]
         pool = self.pool_of(ref.tier)
         if pool.refcount(ref.page) <= 1:
-            self._drop_reserve(rid)
+            self._drop_reserve(rid, page_idx)
             return []
-        new_ref = self._reserve.pop(rid, None)
+        new_ref = self._reserves.get(rid, {}).pop(page_idx, None)
         if new_ref is None:
             return []                          # origin: in-place append
+        if not self._reserves[rid]:
+            del self._reserves[rid]
         pool.release_pages(rid, [ref.page])    # rc > 1: frame survives
         refs[page_idx] = new_ref
         self.cow_copies += 1
         return [CowMove(rid, ref, new_ref)]
 
-    def _drop_reserve(self, rid: int) -> None:
-        res = self._reserve.pop(rid, None)
+    def _drop_reserve(self, rid: int, page_idx: int) -> None:
+        rmap = self._reserves.get(rid)
+        if rmap is None:
+            return
+        res = rmap.pop(page_idx, None)
+        if not rmap:
+            del self._reserves[rid]
         if res is None:
             return
         self.pool_of(res.tier).release_pages(rid, [res.page])
+
+    # ---- forked beams --------------------------------------------------------
+    def fork(self, src_rid: int, dst_rid: int) -> list[PageRef] | None:
+        """Make ``dst_rid`` a full sharer of ``src_rid``'s block table:
+        every frame's refcount += 1, position-wise (multiplicity kept), so
+        N beams decode from one shared context without copying a byte. The
+        fork inherits NO reserves and no dedup/fresh-host bookkeeping — it
+        writes no prefill; callers pre-claim per-page COW reserves with
+        ``add_reserve`` on every shared page the beam may write before it
+        diverges. None when ``src_rid`` has no refs or ``dst_rid`` is
+        already live."""
+        if dst_rid in self._refs or src_rid not in self._refs:
+            return None
+        refs = list(self._refs[src_rid])
+        for r in refs:
+            self.pool_of(r.tier).share_pages(dst_rid, [r.page])
+        self._refs[dst_rid] = list(refs)
+        return list(refs)
+
+    def add_reserve(self, rid: int, page_idx: int) -> PageRef | None:
+        """Pre-claim a private COW reserve for an ARBITRARY shared page of
+        ``rid`` (forked beams: each sharer of a shared tail page needs its
+        own spare frame so its first divergent write can never fail or
+        race a later admission). Device-preferred, host fallback — same
+        policy as the admission-time reserve. Returns the reserve (the
+        existing one if this page is already covered); None when the page
+        is private (no reserve needed) or neither pool has a free frame
+        (nothing is claimed then)."""
+        refs = self._refs.get(rid, [])
+        assert 0 <= page_idx < len(refs)
+        ref = refs[page_idx]
+        if self.pool_of(ref.tier).refcount(ref.page) <= 1:
+            return None
+        rmap = self._reserves.setdefault(rid, {})
+        if page_idx in rmap:
+            return rmap[page_idx]
+        dp = self.device.alloc_pages(rid, 1)
+        if dp is not None:
+            res = PageRef(DEVICE, dp[0])
+        else:
+            hp = self.host.alloc_pages(rid, 1)
+            if hp is None:
+                if not rmap:
+                    del self._reserves[rid]
+                return None
+            res = PageRef(HOST, hp[0])
+        rmap[page_idx] = res
+        return res
 
     # ---- migration -----------------------------------------------------------
     def _owners_of(self, ref: PageRef) -> list[tuple[int, list[int]]]:
@@ -837,9 +977,10 @@ class TieredKVAllocator:
             for i, r in enumerate(refs):
                 if r == ref:
                     refs[i] = new_ref
-        for rid, r in self._reserve.items():
-            if r == ref:
-                self._reserve[rid] = new_ref
+        for rmap in self._reserves.values():
+            for idx, r in rmap.items():
+                if r == ref:
+                    rmap[idx] = new_ref
         self.index.move(ref, new_ref)
 
     def _transfer_frame(self, ref: PageRef, dst_pool, dst_tier: str
@@ -850,7 +991,8 @@ class TieredKVAllocator:
         holders: list[int] = []        # one entry per reference held
         for rid, idxs in self._owners_of(ref):
             holders.extend([rid] * len(idxs))
-        holders.extend(rid for rid, r in self._reserve.items() if r == ref)
+        holders.extend(rid for rid, rmap in self._reserves.items()
+                       for r in rmap.values() if r == ref)
         assert holders, "transferring an unreferenced frame"
         dp = dst_pool.alloc_pages(holders[0], 1)
         if dp is None:
@@ -883,9 +1025,8 @@ class TieredKVAllocator:
                 continue
             hot.update(r.page for r in self._refs.get(arid, [])
                        if r.tier == tier)
-            res = self._reserve.get(arid)
-            if res is not None and res.tier == tier:
-                hot.add(res.page)
+            hot.update(r.page for r in self._reserves.get(arid, {}).values()
+                       if r.tier == tier)
         return hot
 
     def swap_out(self, rid: int, n_pages: int, active_rids=()
@@ -946,9 +1087,7 @@ class TieredKVAllocator:
         this demotion may trigger, for the same reason."""
         skip = self.hot_pages(active_rids, HOST, rid) | set(keep)
         cands = list(self._refs.get(rid, []))
-        res = self._reserve.get(rid)
-        if res is not None:
-            cands.append(res)
+        cands.extend(self._reserves.get(rid, {}).values())
         moves: list[Migration] = []
         seen: set[int] = set()
         for ref in cands:
@@ -979,9 +1118,7 @@ class TieredKVAllocator:
         referenced at several positions appears once."""
         keep = self.hot_pages(active_rids, DEVICE, rid)
         cands = list(self._refs.get(rid, []))
-        res = self._reserve.get(rid)
-        if res is not None:
-            cands.append(res)
+        cands.extend(self._reserves.get(rid, {}).values())
         uniq: list[PageRef] = []
         seen: set[int] = set()
         for r in cands:
@@ -1030,9 +1167,7 @@ class TieredKVAllocator:
         """Unique disk-tier frames ``rid`` references (block table + COW
         reserve), oldest first."""
         cands = list(self._refs.get(rid, []))
-        res = self._reserve.get(rid)
-        if res is not None:
-            cands.append(res)
+        cands.extend(self._reserves.get(rid, {}).values())
         out: list[PageRef] = []
         seen: set[int] = set()
         for r in cands:
@@ -1164,7 +1299,21 @@ class TieredKVAllocator:
             moves.extend(promote(len(self.host_pages_of(rid))))
         return moves
 
-    # ---- cross-instance migration --------------------------------------------
+    # ---- cross-instance migration (PEER tier) --------------------------------
+    def note_peer_export(self, n_pages: int) -> None:
+        """Charge a live handoff EXPORT (host -> peer) to the peer link:
+        the pages drain into the next ``SwapPlan.peer_out_bytes`` and from
+        there into the iteration's ``peer_s`` channel term. The emergency
+        evacuation path never calls this — it bills ``mig_wait_s``."""
+        self.pending_peer_out_pages += n_pages
+        self.peer_out_pages_total += n_pages
+
+    def note_peer_import(self, n_pages: int) -> None:
+        """Charge a live handoff IMPORT (peer -> host): the decode side's
+        TPOT-plus-transfer certification drains these into ``peer_s``."""
+        self.pending_peer_in_pages += n_pages
+        self.peer_in_pages_total += n_pages
+
     def export_parked(self, rid: int) -> list[int] | None:
         """Host frame ids of a fully host-parked request, in token order —
         the payload a ``MigrationTicket`` serializes for cross-instance
@@ -1175,7 +1324,7 @@ class TieredKVAllocator:
         is a copy, and the source-side ``free(rid)`` afterwards just drops
         this owner's refcount, leaving the frame to its siblings."""
         refs = self._refs.get(rid)
-        if not refs or self._reserve.get(rid) is not None:
+        if not refs or self._reserves.get(rid):
             return None
         if any(r.tier != HOST for r in refs):
             return None
@@ -1238,8 +1387,8 @@ class TieredKVAllocator:
                 ref = next(r for r in self._refs[rid] if r.tier == DEVICE)
             else:
                 # only COW reserves left on device
-                rid, ref = next((r, v) for r, v in self._reserve.items()
-                                if v.tier == DEVICE)
+                rid, ref = next((r, v) for r, rmap in self._reserves.items()
+                                for v in rmap.values() if v.tier == DEVICE)
             owners = self._owners_of(ref)
             hp = self._transfer_frame(ref, self.host, HOST)
             assert hp is not None            # entry check guarantees room
@@ -1265,9 +1414,10 @@ class TieredKVAllocator:
             for i, r in enumerate(refs):
                 if r.tier == DEVICE:
                     refs[i] = PageRef(DEVICE, assign(rid, r.page))
-        for rid, r in list(self._reserve.items()):
-            if r.tier == DEVICE:
-                self._reserve[rid] = PageRef(DEVICE, assign(rid, r.page))
+        for rid, rmap in self._reserves.items():
+            for idx, r in list(rmap.items()):
+                if r.tier == DEVICE:
+                    rmap[idx] = PageRef(DEVICE, assign(rid, r.page))
         # the index follows its frames to their new ids (two-phase: old and
         # new frame ids overlap)
         self.index.remap_frames(DEVICE, remap)
@@ -1289,23 +1439,24 @@ class TieredKVAllocator:
     def check_invariants(self) -> None:
         for pool in self.pools.values():
             pool.check_invariants()
-        rids = set(self._refs) | set(self._reserve)
+        rids = set(self._refs) | set(self._reserves)
         for rid in rids:
             refs = self._refs.get(rid, [])
             by_tier = {t: [r.page for r in refs if r.tier == t]
                        for t in TIER_ORDER}
-            res = self._reserve.get(rid)
-            if res is not None:
+            for res in self._reserves.get(rid, {}).values():
                 by_tier[res.tier].append(res.page)
             for tier in TIER_ORDER:
                 assert sorted(by_tier[tier]) == \
                     sorted(self.pool_of(tier).pages_of(rid)), \
                     f"{tier} refs out of sync with pool for rid {rid}"
-        for rid, res in self._reserve.items():
-            # a COW reserve is a claimed, private, spare frame
-            assert self.refcount(res) == 1, "reserve frame is shared"
-            assert all(res != r for r in self._refs.get(rid, [])), \
-                "reserve frame already mapped in the block table"
+        for rid, rmap in self._reserves.items():
+            assert rmap, "empty reserve map left behind"
+            for res in rmap.values():
+                # a COW reserve is a claimed, private, spare frame
+                assert self.refcount(res) == 1, "reserve frame is shared"
+                assert all(res != r for r in self._refs.get(rid, [])), \
+                    "reserve frame already mapped in the block table"
         for key, ref in self.index._by_key.items():
             assert self.index._by_frame.get(ref) == key
             assert self.refcount(ref) >= 1, "index entry on a dead frame"
@@ -1344,6 +1495,8 @@ class SwapPlan:
     streamed_bytes: float = 0.0   # recurring share of kv_in (no residency change)
     disk_in_bytes: float = 0.0    # disk->host staging reads (NVMe)
     disk_out_bytes: float = 0.0   # host->disk demotion writes (NVMe)
+    peer_in_bytes: float = 0.0    # handoff imports from a peer (peer link)
+    peer_out_bytes: float = 0.0   # handoff exports to a peer (peer link)
     promotions: list[Migration] = dataclasses.field(default_factory=list)
 
 
@@ -1405,6 +1558,15 @@ class SwapScheduler:
         """NVMe demotion writes (host->disk) performed since the last plan."""
         return self.kv.pending_disk_out_pages * self.kv.page_bytes
 
+    def pending_peer_in_bytes(self) -> float:
+        """Handoff imports (peer->host) performed since the last plan —
+        charged to the peer link's own term, never PCIe or NVMe."""
+        return self.kv.pending_peer_in_pages * self.kv.page_bytes
+
+    def pending_peer_out_bytes(self) -> float:
+        """Handoff exports (host->peer) performed since the last plan."""
+        return self.kv.pending_peer_out_pages * self.kv.page_bytes
+
     def streamed_host_pages(self, active_rids: list[int]) -> set[int]:
         """UNIQUE host frames the active requests attend through."""
         return {p for r in active_rids for p in self.kv.host_pages_of(r)}
@@ -1423,6 +1585,10 @@ class SwapScheduler:
         plan.disk_out_bytes = self.pending_disk_out_bytes()
         self.kv.pending_disk_in_pages = 0
         self.kv.pending_disk_out_pages = 0
+        plan.peer_in_bytes = self.pending_peer_in_bytes()
+        plan.peer_out_bytes = self.pending_peer_out_bytes()
+        self.kv.pending_peer_in_pages = 0
+        self.kv.pending_peer_out_pages = 0
         # promote into free device frames, cheapest request first (a shared
         # frame promotes once: the first owner's swap_in rewrites them all).
         # The cheapest request is RE-selected after every promotion: a

@@ -244,6 +244,11 @@ class Scheduler:
                       "migrations_out": 0, "migrations_in": 0}
         self._iv = NO_OFFLOAD                  # interval of the current plan
         self.last_dt_s = 0.0                   # last nonzero observed dt
+        # disaggregated prefill role: parked requests are held for peer
+        # handoff instead of resuming locally (the fleet exports them at
+        # the next boundary; clearing the flag restores the ordinary
+        # priority-resume path as a graceful fallback)
+        self.hold_resumes = False
 
     # ------------------------------------------------------------- queue I/O --
     def submit(self, req: Request) -> None:
@@ -271,6 +276,47 @@ class Scheduler:
         ``next_token``/``resume_pos`` snapshot it carried over."""
         self.preempted.append(req)
         self.stats["migrations_in"] += 1
+
+    def withdraw(self, rid: int) -> Request | None:
+        """Remove a still-QUEUED request (never admitted — no KV claimed,
+        nothing to roll back) so the fleet router can re-bind its route to
+        a peer at an iteration boundary. Returns the request, or None if
+        ``rid`` is not waiting in this scheduler's queue."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                return req
+        return None
+
+    def certify_handoff(self, n_pages: int, tpot_slo_s: float,
+                        active: list[ActiveInfo]) -> bool:
+        """Would adopting a live post-prefill handoff of ``n_pages`` keep
+        every TPOT budget on THIS (decode) side? The import's bytes ride
+        the peer link and drain into the next iteration's ``peer_s`` term
+        — certified here exactly the way NVMe staging is certified in
+        ``_resume_feasible``: host room first (free + prefix-cache reclaim
+        + disk-demotable capacity), then the modeled iteration time with
+        the prospective peer-in pages folded in, against the tightest TPOT
+        among the active set and the arriving request. The fleet offers a
+        handoff ticket only after this returns True — a refusal leaves the
+        request parked on the prefill side (nothing moves)."""
+        room = (self.kv.host.free_pages + self.kv.reclaimable_host_pages()
+                + self._demotable_to_disk([a.rid for a in active]))
+        if n_pages > room:
+            return False
+        if not active:
+            # starvation guard, as in _resume_feasible: an idle decode
+            # instance always absorbs the handoff — the transfer is its
+            # only work
+            return True
+        kv_in_now = (self.swap.streamed_bytes([a.rid for a in active])
+                     + self.swap.pending_in_bytes())
+        dt = self._iter_dt(len(active), kv_in_now,
+                           self.swap.pending_out_bytes(),
+                           self._chunk_overhead_s(),
+                           extra_peer_in_pages=n_pages)
+        bound = min([a.tpot_slo_s for a in active] + [tpot_slo_s])
+        return dt <= bound * (1 + 1e-9)
 
     # -------------------------------------------------------------- planning --
     def plan(self, view: SchedulerView) -> IterationPlan:
@@ -313,14 +359,19 @@ class Scheduler:
     # ------------------------------------------------------------- disk tier --
     def _iter_dt(self, n_active: int, kv_in: float, kv_out: float,
                  chunk_s: float = 0.0, extra_disk_in_pages: int = 0,
-                 extra_disk_out_pages: int = 0) -> float:
+                 extra_disk_out_pages: int = 0,
+                 extra_peer_in_pages: int = 0,
+                 extra_peer_out_pages: int = 0) -> float:
         """Modeled next-iteration latency under the given PCIe KV traffic
-        PLUS the disk link's own term: NVMe bytes already pending at the
+        PLUS the disk link's own term — NVMe bytes already pending at the
         allocator and any prospective staging/demotion pages the caller is
-        about to cause. Disk traffic never rides the PCIe budget — but a
-        feasibility check that ignored it would certify TPOTs the NVMe
-        queue then breaks."""
+        about to cause — PLUS the peer link's term for handoff traffic
+        (pending imports/exports and any prospective handoff the caller is
+        certifying). Disk and peer traffic never ride the PCIe budget, but
+        a feasibility check that ignored either would certify TPOTs that
+        channel's queue then breaks."""
         link = self.kv.disk_link
+        plink = self.kv.peer_link
         pb = self.kv.page_bytes
         times = self.times_fn(n_active, self.max_seq, "decode")
         return iter_time_with_interval_kv(
@@ -330,7 +381,13 @@ class Scheduler:
             disk_out_bytes=self.swap.pending_disk_out_bytes()
             + extra_disk_out_pages * pb,
             disk_bw=link.bw_bytes_s,
-            disk_latency_s=link.latency_s) + chunk_s
+            disk_latency_s=link.latency_s,
+            peer_in_bytes=self.swap.pending_peer_in_bytes()
+            + extra_peer_in_pages * pb,
+            peer_out_bytes=self.swap.pending_peer_out_bytes()
+            + extra_peer_out_pages * pb,
+            peer_bw=plink.bw_bytes_s,
+            peer_latency_s=plink.latency_s) + chunk_s
 
     def _demotable_to_disk(self, active_rids: list[int],
                            exclude_rid: int | None = None,
@@ -352,10 +409,9 @@ class Scheduler:
         for rid in rids:
             frames.update(p for p in self.kv.host_pages_of(rid)
                           if p not in hot)
-            res = self.kv.reserve_of(rid)
-            if res is not None and res.tier == HOST \
-                    and res.page not in hot:
-                frames.add(res.page)
+            frames.update(res.page
+                          for res in self.kv.reserves_of(rid).values()
+                          if res.tier == HOST and res.page not in hot)
         room = self.kv.disk.free_pages + self.kv.reclaimable_disk_pages()
         return min(len(frames), room)
 
@@ -402,6 +458,10 @@ class Scheduler:
         disk-demoted pages — fits every TPOT budget. A disk-parked request
         whose staging cannot fit the host tier first pushes YOUNGER parked
         requests' pages down to disk (oldest work wins the host tier)."""
+        if self.hold_resumes:
+            # prefill-role instance: its parked set is the handoff staging
+            # area, not resume candidates — decode belongs to a peer
+            return
         for req in list(self.preempted):
             if not free_slots:
                 return

@@ -130,6 +130,12 @@ class IterationRecord:
     disk_out_bytes: float = 0.0
     disk_in_pages: int = 0
     disk_out_pages: int = 0
+    # PEER channel: live KV handoff traffic over the instance-to-instance
+    # link, drained into this iteration exactly like the NVMe pendings
+    peer_in_bytes: float = 0.0
+    peer_out_bytes: float = 0.0
+    peer_in_pages: int = 0
+    peer_out_pages: int = 0
     # physical copy-stage engine activity sampled at the end of the step:
     # pages handed to the data plane vs. pages whose copies actually ran.
     # In sync mode the two are equal every iteration; in async mode issued
@@ -143,8 +149,10 @@ class IterationRecord:
     stall_s: float = 0.0
     pcie_s: float = 0.0
     disk_s: float = 0.0
+    peer_s: float = 0.0
     chunk_s: float = 0.0
-    model_dt_s: float = 0.0        # max(pcie_s, disk_s); dt = model + chunk
+    # max(pcie_s, disk_s, peer_s); dt = model + chunk
+    model_dt_s: float = 0.0
     # drained-engine wait run() skipped to the next arrival BEFORE this
     # iteration began (arrival-honoring loop): the clock-tiling check
     # expects t_start == previous t_end + idle_wait_s (+ mig_wait_s)
@@ -215,7 +223,9 @@ class TraceRecorder:
                 "streamed_bytes": sum(r.streamed_bytes for r in it),
                 "promoted_bytes": sum(r.promoted_bytes for r in it),
                 "mig_in_bytes": sum(r.mig_in_bytes for r in it),
-                "mig_out_bytes": sum(r.mig_out_bytes for r in it)}
+                "mig_out_bytes": sum(r.mig_out_bytes for r in it),
+                "peer_in_bytes": sum(r.peer_in_bytes for r in it),
+                "peer_out_bytes": sum(r.peer_out_bytes for r in it)}
 
     def audit(self) -> "AuditReport":
         return audit_trace(self.to_dict())
@@ -237,6 +247,7 @@ class TraceRecorder:
     _NVME_TID = 101
     _SCHED_TID = 102
     _PARKED_TID = 103
+    _PEER_TID = 104
 
     def to_perfetto(self) -> dict:
         """Chrome trace-event JSON (Perfetto-loadable). Timestamps are the
@@ -251,7 +262,8 @@ class TraceRecorder:
                  [(self._PCIE_TID, "pcie copy stream"),
                   (self._NVME_TID, "nvme channel"),
                   (self._SCHED_TID, "scheduler"),
-                  (self._PARKED_TID, "parked")]}
+                  (self._PARKED_TID, "parked"),
+                  (self._PEER_TID, "peer link")]}
         names.update({s: f"slot {s}" for s in range(self.max_batch)})
         for tid, nm in sorted(names.items()):
             ev.append({"ph": "M", "pid": pid, "tid": tid,
@@ -282,6 +294,10 @@ class TraceRecorder:
                 slice_(self._NVME_TID,
                        f"nvme {r.disk_in_pages}p in / {r.disk_out_pages}p "
                        f"out", t0, r.disk_s, iteration=r.index)
+            if r.peer_s > 0:
+                slice_(self._PEER_TID,
+                       f"peer {r.peer_in_pages}p in / {r.peer_out_pages}p "
+                       f"out", t0, r.peer_s, iteration=r.index)
             for tier, occ in r.occupancy.items():
                 ev.append({"ph": "C", "pid": pid, "tid": 0,
                            "name": f"{tier}_pages", "ts": r.t_end_s * us,
@@ -373,6 +389,16 @@ class AuditReport:
           migrated-in request counts like an admit (it finishes, stays
           active/parked, or migrates back out) while a migrated-out one
           leaves the books like a finish.
+      I12 KV handoff conservation (PEER tier, disaggregated fleets): per
+          direction, summed per-iteration peer-link drains equal the
+          allocator's cumulative peer page counters minus the pages still
+          pending a drain; handoff byte counters are exactly those pages'
+          bytes; handoff_in/out event counts (net of rollbacks) match the
+          footer. I2, I3 and I9 fold the peer channel in: peer bytes are
+          whole pages, ``model_dt_s == max(pcie_s, disk_s, peer_s)``, and
+          a handed-off request changes books like a migrated one. The
+          cross-instance half — exporter bytes == importer bytes per peer
+          link — is ``Fleet.audit``'s check, which sees all endpoints.
     """
     ok: bool
     violations: list[str]
@@ -426,20 +452,30 @@ def audit_trace(trace: dict) -> AuditReport:
               f"iter {i}: kv_out {r['kv_out_bytes']:.0f}B != pending_out "
               f"{r['pending_out_bytes']:.0f} + cow_out "
               f"{r['cow_out_bytes']:.0f}")
-        # I2: NVMe bytes are whole pages
+        # I2: NVMe / peer-link bytes are whole pages
         check(r["disk_in_bytes"] == r["disk_in_pages"] * pb,
               f"iter {i}: disk_in {r['disk_in_bytes']:.0f}B != "
               f"{r['disk_in_pages']} pages * {pb:.0f}B")
         check(r["disk_out_bytes"] == r["disk_out_pages"] * pb,
               f"iter {i}: disk_out {r['disk_out_bytes']:.0f}B != "
               f"{r['disk_out_pages']} pages * {pb:.0f}B")
+        check(r.get("peer_in_bytes", 0.0)
+              == r.get("peer_in_pages", 0) * pb,
+              f"iter {i}: peer_in {r.get('peer_in_bytes', 0.0):.0f}B != "
+              f"{r.get('peer_in_pages', 0)} pages * {pb:.0f}B")
+        check(r.get("peer_out_bytes", 0.0)
+              == r.get("peer_out_pages", 0) * pb,
+              f"iter {i}: peer_out {r.get('peer_out_bytes', 0.0):.0f}B != "
+              f"{r.get('peer_out_pages', 0)} pages * {pb:.0f}B")
         # I3: dt identity + decomposition
         check(r["dt_s"] == r["model_dt_s"] + r["chunk_s"],
               f"iter {i}: dt {r['dt_s']} != model {r['model_dt_s']} + chunk "
               f"{r['chunk_s']}")
-        check(r["model_dt_s"] == max(r["pcie_s"], r["disk_s"]),
+        check(r["model_dt_s"] == max(r["pcie_s"], r["disk_s"],
+                                     r.get("peer_s", 0.0)),
               f"iter {i}: model dt {r['model_dt_s']} != max(pcie "
-              f"{r['pcie_s']}, disk {r['disk_s']})")
+              f"{r['pcie_s']}, disk {r['disk_s']}, peer "
+              f"{r.get('peer_s', 0.0)})")
         if r["decode_batch"] > 0:
             check(_close(r["pcie_s"],
                          r["compute_s"] + r["kv_in_s"] + r["stall_s"],
@@ -562,18 +598,28 @@ def audit_trace(trace: dict) -> AuditReport:
         n_resume = sum(1 for e in events if e["kind"] == "resume")
         n_mig_in = sum(1 for e in events if e["kind"] == "migrate_in")
         n_mig_out = sum(1 for e in events if e["kind"] == "migrate_out")
+        # live KV handoff folds in exactly like migration; a refused
+        # handoff leaves a handoff_out + handoff_rollback pair that nets
+        # to zero (the request never left this instance's books)
+        n_ho_in = sum(1 for e in events if e["kind"] == "handoff_in")
+        n_ho_out = (sum(1 for e in events if e["kind"] == "handoff_out")
+                    - sum(1 for e in events
+                          if e["kind"] == "handoff_rollback"))
         check(n_finish == footer["n_finished"],
               f"{n_finish} finish events != {footer['n_finished']} finished "
               f"requests")
-        check(n_admit + n_mig_in == footer["n_finished"] + footer["n_active"]
-              + footer["n_parked"] + n_mig_out,
-              f"{n_admit} admits + {n_mig_in} migrated in != finished "
-              f"{footer['n_finished']} + active {footer['n_active']} + "
-              f"parked {footer['n_parked']} + {n_mig_out} migrated out")
-        check(n_park + n_mig_in == n_resume + footer["n_parked"] + n_mig_out,
-              f"{n_park} parks + {n_mig_in} migrated in != {n_resume} "
-              f"resumes + {footer['n_parked']} still parked + {n_mig_out} "
-              f"migrated out")
+        check(n_admit + n_mig_in + n_ho_in
+              == footer["n_finished"] + footer["n_active"]
+              + footer["n_parked"] + n_mig_out + n_ho_out,
+              f"{n_admit} admits + {n_mig_in} migrated in + {n_ho_in} "
+              f"handed in != finished {footer['n_finished']} + active "
+              f"{footer['n_active']} + parked {footer['n_parked']} + "
+              f"{n_mig_out} migrated out + {n_ho_out} handed out")
+        check(n_park + n_mig_in + n_ho_in
+              == n_resume + footer["n_parked"] + n_mig_out + n_ho_out,
+              f"{n_park} parks + {n_mig_in} migrated in + {n_ho_in} handed "
+              f"in != {n_resume} resumes + {footer['n_parked']} still "
+              f"parked + {n_mig_out} migrated out + {n_ho_out} handed out")
 
         # I11: cross-instance migration conservation (fleet traces only)
         if "mig_out_bytes_total" in footer:
@@ -610,6 +656,41 @@ def audit_trace(trace: dict) -> AuditReport:
                   f"trace migration wait {sum_wait}s != engine total "
                   f"{footer['mig_wait_total_s']}s - pending "
                   f"{footer['pending_mig_wait_s']}s")
+
+        # I12: KV handoff conservation (PEER tier). Per direction, summed
+        # per-iteration peer drains equal the allocator's cumulative peer
+        # counters minus what is still pending a drain, and the engine's
+        # handoff byte counters are exactly those pages' bytes. The
+        # cross-instance half (every exporter's bytes land on exactly one
+        # importer, per link) is checked by ``Fleet.audit``, which holds
+        # all endpoints' traces.
+        if "peer_out_pages_total" in footer:
+            check(n_ho_in == footer["n_handoff_in"],
+                  f"{n_ho_in} handoff_in events != footer "
+                  f"{footer['n_handoff_in']}")
+            check(n_ho_out == footer["n_handoff_out"],
+                  f"{n_ho_out} net handoff_out events != footer "
+                  f"{footer['n_handoff_out']}")
+            sum_pin = sum(r.get("peer_in_bytes", 0.0) for r in its)
+            sum_pout = sum(r.get("peer_out_bytes", 0.0) for r in its)
+            check(sum_pin == (footer["peer_in_pages_total"]
+                              - footer["pending_peer_in_pages"]) * pb,
+                  f"trace peer-in bytes {sum_pin:.0f}B != allocator drained "
+                  f"{(footer['peer_in_pages_total'] - footer['pending_peer_in_pages']) * pb:.0f}B")
+            check(sum_pout == (footer["peer_out_pages_total"]
+                               - footer["pending_peer_out_pages"]) * pb,
+                  f"trace peer-out bytes {sum_pout:.0f}B != allocator "
+                  f"drained "
+                  f"{(footer['peer_out_pages_total'] - footer['pending_peer_out_pages']) * pb:.0f}B")
+            check(footer["handoff_in_bytes_total"]
+                  == footer["peer_in_pages_total"] * pb,
+                  f"handoff-in bytes {footer['handoff_in_bytes_total']:.0f}B "
+                  f"!= {footer['peer_in_pages_total']} peer pages")
+            check(footer["handoff_out_bytes_total"]
+                  == footer["peer_out_pages_total"] * pb,
+                  f"handoff-out bytes "
+                  f"{footer['handoff_out_bytes_total']:.0f}B != "
+                  f"{footer['peer_out_pages_total']} peer pages")
 
         # I10: copy-stage conservation (only present once the engine runs a
         # data plane). The final sync() in run() completes trailing pages

@@ -33,6 +33,9 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                       incremental_prefill: bool = False,
                       autotune: bool = False,
                       prefetch_pages_per_boundary: int = 1,
+                      role: str = "mixed",
+                      peer_bw_bytes_s: float = 16e9,
+                      peer_latency_s: float = 1e-7,
                       batches=(1, 2, 4, 8), seqs=(16, 32, 64)):
     """Reduced-qwen engine + analyzer. Size HBM either directly (``hbm_gb``)
     or as resident weights plus ``extra_device_pages`` KV pages (the
@@ -78,5 +81,8 @@ def mk_reduced_engine(*, name="e0", d_model=32, heads=2, layers=8, d_ff=64,
                                      incremental_prefill=incremental_prefill,
                                      autotune=autotune,
                                      prefetch_pages_per_boundary=
-                                     prefetch_pages_per_boundary))
+                                     prefetch_pages_per_boundary,
+                                     role=role,
+                                     peer_bw_bytes_s=peer_bw_bytes_s,
+                                     peer_latency_s=peer_latency_s))
     return eng, an

@@ -135,7 +135,7 @@ def _total_refcounts(kv) -> int:
 def _live_references(kv) -> int:
     """Block-table entries + COW reserves across all live requests."""
     return (sum(len(refs) for refs in kv._refs.values())
-            + len(kv._reserve))
+            + kv.n_reserve_frames())
 
 
 @given(codes=st.lists(st.integers(0, (1 << 30) - 1), min_size=0, max_size=60),
@@ -217,7 +217,8 @@ def test_refcounted_dedup_random_op_sequences(codes, dev_pages, host_pages):
                 res = kv.resize_device(new_bytes)
                 live_dev = sorted({p for r in state
                                    for p in kv.device_pages_of(r)}
-                                  | {v.page for v in kv._reserve.values()
+                                  | {v.page for m in kv._reserves.values()
+                                     for v in m.values()
                                      if v.tier == DEVICE})
                 assert sorted(n for _, n in res.remap) == live_dev
             else:
@@ -348,7 +349,7 @@ def test_three_tier_random_op_sequences(codes, dev_pages, host_pages,
         # ---- invariants after every operation -----------------------------
         kv.check_invariants()
         live = (sum(len(refs) for refs in kv._refs.values())
-                + len(kv._reserve) + _cache_claims(kv))
+                + kv.n_reserve_frames() + _cache_claims(kv))
         assert _total_refcounts_3t(kv) == live, \
             "refcount sum != live refs + reserves + cache claims"
         for rid, tok in tokens.items():

@@ -1,0 +1,146 @@
+"""Disaggregated prefill/decode fleet differential: role-typed tiers change
+WHERE tokens are computed and WHEN bytes move, never the numbers.
+
+Three servings of the same workload — a 1-prefill + 1-decode disaggregated
+fleet, a 2-instance symmetric affinity fleet, and one pooled instance with
+the combined capacity — must produce bitwise-identical greedy tokens per
+request (shape-bucketed prefill makes KV pages placement-independent, and
+the handoff payload is the same host-frame snapshot the park/resume path
+round-trips). On top of the bitwise gate: zero SLO violations anywhere, and
+the handoff conservation invariant (bytes exported == bytes imported, per
+link and fleet-wide — trace invariant I12 plus ``Fleet.audit``'s
+cross-instance half) clean over the full trace."""
+import numpy as np
+import pytest
+
+from repro.data.workload import SLOClass, WorkloadConfig, generate_workload
+from repro.serving.fleet import Fleet
+from repro.serving.request import Request
+
+from _engine_builders import mk_reduced_engine
+
+# compile-heavy (full JAX jit of models/kernels): excluded from the fast CI
+# tier, run in the nightly full suite
+pytestmark = pytest.mark.slow
+
+MAX_SEQ, PAGE = 96, 16
+
+
+def _mk_instance(name, role="mixed", scale=1):
+    eng, _ = mk_reduced_engine(
+        name=name, max_batch=scale * 4, max_seq=MAX_SEQ, page_size=PAGE,
+        extra_device_pages=scale * 8, host_pages=scale * 40,
+        preemption=True, role=role)
+    return eng
+
+
+def _workload(n=14, seed=23):
+    wcfg = WorkloadConfig(
+        seed=seed, process="poisson", rate_per_s=3000.0,
+        mean_rounds=1.0, mean_think_s=0.0005, tenants=2,
+        system_prompt_len=32, median_turn_len=12, turn_len_sigma=0.3,
+        max_prompt_len=72, mean_output_len=6.0, max_output_len=10,
+        vocab_size=128,
+        slo_classes=(SLOClass("standard", 4.0, 0.05, weight=1.0),))
+    return generate_workload(wcfg, n)
+
+
+def _clone(reqs):
+    return [Request(rid=r.rid, prompt=r.prompt.copy(),
+                    max_new_tokens=r.max_new_tokens,
+                    ttft_slo_s=r.ttft_slo_s, tpot_slo_s=r.tpot_slo_s,
+                    arrival_s=r.arrival_s, tenant=r.tenant) for r in reqs]
+
+
+def _tokens(engines):
+    return {r.rid: tuple(r.generated) for e in engines for r in e.finished}
+
+
+def test_disagg_bitwise_vs_affinity_vs_pooled():
+    reqs = _workload()
+
+    disagg = Fleet([_mk_instance("p0", role="prefill"),
+                    _mk_instance("d0", role="decode")], policy="affinity")
+    s_dis = disagg.run(_clone(reqs), max_iters=50_000)
+
+    aff = Fleet([_mk_instance("a0"), _mk_instance("a1")], policy="affinity")
+    s_aff = aff.run(_clone(reqs), max_iters=50_000)
+
+    pooled = _mk_instance("pooled", scale=2)
+    pooled.run(_clone(reqs), max_iters=50_000)
+
+    t_dis, t_aff = _tokens(disagg.engines), _tokens(aff.engines)
+    t_pool = _tokens([pooled])
+    assert len(t_dis) == len(t_aff) == len(t_pool) == len(reqs)
+    assert t_dis == t_aff == t_pool          # the bitwise gate
+
+    # the disaggregation actually disaggregated: every request with decode
+    # work prefilled on p0, handed off through the PEER tier, and decoded
+    # to completion on d0 (a single-token request IS its prefill — nothing
+    # to hand off, it completes on the prefill side)
+    n_decode = sum(1 for r in reqs if r.max_new_tokens > 1)
+    assert s_dis["handoffs"] == n_decode
+    assert s_dis["per_instance"]["p0"]["finished"] == len(reqs) - n_decode
+    assert s_dis["per_instance"]["d0"]["finished"] == n_decode
+    assert s_dis["per_instance"]["p0"]["handoffs_out"] == n_decode
+    assert s_dis["per_instance"]["d0"]["handoffs_in"] == n_decode
+    assert s_dis["handoff_bytes"] > 0
+
+    # zero SLO violations anywhere
+    assert s_dis["slo_ok"] and s_aff["slo_ok"]
+
+    # full trace audits (per-instance I1-I12) + the fleet-level handoff
+    # conservation cross-check: bytes exported == bytes imported, per link
+    for fleet in (disagg, aff):
+        ok, violations = fleet.audit()
+        assert ok, violations
+    assert pooled.trace.audit().ok
+
+
+def test_disagg_refused_handoff_rolls_back_then_flushes():
+    """A decode instance whose host tier is too small to absorb any ticket
+    refuses every import: a forced export rolls back loudly-conserved (no
+    peer bytes booked in either direction), and the drained-fleet flush
+    eventually releases ``hold_resumes`` so the prefill instance decodes
+    its stranded parked set locally — graceful degradation, tokens still
+    bitwise vs a mixed single engine."""
+    reqs = _workload(n=4, seed=5)
+
+    ref = _mk_instance("ref")
+    ref.run(_clone(reqs), max_iters=50_000)
+
+    p0 = _mk_instance("p1", role="prefill")
+    # 2 host pages: every ticket (>= 3-page prompts) fails certification
+    d0, _ = mk_reduced_engine(name="d1", max_batch=4, max_seq=MAX_SEQ,
+                              page_size=PAGE, extra_device_pages=8,
+                              host_pages=2, preemption=True, role="decode")
+    fleet = Fleet([p0, d0], policy="affinity")
+
+    # drive p0 until a freshly-prefilled request parks into the staging
+    # set, then force the handoff the fleet's pre-certification would have
+    # skipped: the import must refuse and the rollback must net to zero
+    for r in _clone(reqs):
+        fleet._submit(r)
+    while not p0.scheduler.preempted:
+        p0.step()
+    rid = p0.scheduler.preempted[0].rid
+    out = p0.export_handoff(rid)
+    assert out is not None
+    got, ticket = out
+    assert not d0.import_handoff(got, ticket)      # cannot certify: refuse
+    p0.rollback_handoff(got, ticket)
+    assert any(r.rid == rid for r in p0.scheduler.preempted)  # re-adopted
+    # export accounting fully cancelled — the conservation audit sees a
+    # net zero on both the pending and the lifetime counters
+    assert p0.kv.pending_peer_out_pages == 0
+    assert p0.kv.peer_out_pages_total == 0
+    assert p0.handoff_out_bytes_total == 0 and p0.n_handoff_out == 0
+    assert d0.kv.pending_peer_in_pages == 0 and d0.n_handoff_in == 0
+
+    s = fleet.run([], max_iters=50_000)
+    assert s["handoffs"] == 0                 # nothing ever certified
+    assert not p0.scheduler.hold_resumes      # flush released the staging
+    assert _tokens(fleet.engines) == _tokens([ref])
+    assert {r.rid for r in p0.finished} == {r.rid for r in reqs}
+    ok, violations = fleet.audit()
+    assert ok, violations

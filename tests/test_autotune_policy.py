@@ -20,12 +20,15 @@ TIMES = LayerTimes(t_compute_s=1e-6, t_transfer_s=1e-3, num_layers=4,
 
 
 def gauges(*, tpot=1.0, min_i=1, max_i=4, queue=0, batch=1,
-           resize=lambda i: 0.0, capacity=None, kv_in=0.0, kv_out=0.0):
+           resize=lambda i: 0.0, capacity=None, kv_in=0.0, kv_out=0.0,
+           peer_in=0.0, peer_out=0.0, peer_bw=0.0, peer_lat=0.0):
     return TunerGauges(batch=batch, queue_depth=queue, min_interval=min_i,
                        max_interval=max_i, num_units=4, times=TIMES,
                        kv_in_bytes=kv_in, kv_out_bytes=kv_out,
                        tpot_budget_s=tpot, resize_out_bytes=resize,
-                       batch_capacity=capacity)
+                       batch_capacity=capacity,
+                       peer_in_bytes=peer_in, peer_out_bytes=peer_out,
+                       peer_bw=peer_bw, peer_latency_s=peer_lat)
 
 
 def test_candidates_respect_offline_range_without_fallback():
@@ -124,6 +127,32 @@ def test_backlog_mode_optimizes_service_rate_not_host_bytes():
     # interval 1 (4ms) drops out even though its capacity is highest
     tight = gauges(tpot=3e-3 / 0.8, queue=3, capacity=cap)
     assert t.propose(tight, 2) == 2
+
+
+def test_backlog_mode_requires_packing_capacity_gauge():
+    # the `else 1` constant fallback is gone: backlog mode without the
+    # scheduler's packing-plan gauge must fail loudly, not silently
+    # degrade to a latency-only objective
+    t = IntervalTuner(TunerConfig(lift_patience=1))
+    with pytest.raises(ValueError, match="batch_capacity"):
+        t.propose(gauges(tpot=10.0 / 0.8, queue=3, capacity=None), 1)
+    # empty queue never consults the gauge — no regression for callers
+    # that only ever run the host-memory objective
+    assert t.propose(gauges(tpot=10.0 / 0.8, capacity=None), 1) == 1
+
+
+def test_peer_traffic_folds_into_prediction():
+    # pending peer-link handoff bytes ride their own concurrent channel:
+    # predicted dt = max(weight-PCIe time, peer transfer time). 3000 bytes
+    # at 1e6 B/s -> 3ms peer term dominates every interval's PCIe time and
+    # busts a 2.5ms budget, so the tuner sheds transfers entirely.
+    t = IntervalTuner(TunerConfig(lift_patience=1))
+    quiet = gauges(tpot=2.5e-3 / 0.8)
+    assert t.propose(quiet, 4) == 2      # smallest feasible (2ms <= 2.5ms)
+    busy = gauges(tpot=2.5e-3 / 0.8, peer_in=3000.0, peer_bw=1e6)
+    assert t.predicted_dt_s(busy, 4, 4) == pytest.approx(3e-3, rel=1e-2)
+    assert t.propose(busy, 2) == 4       # nothing feasible: shed max
+    assert t.retreats == 1
 
 
 # --------------------------------------------------------------------------

@@ -185,6 +185,40 @@ def test_cross_instance_migration_resumes_bitwise():
     assert ok, violations
 
 
+def test_queued_request_reroutes_to_drained_peer():
+    """Satellite regression: routes bind per iteration boundary, not once
+    at arrival. A request stuck QUEUED behind a long-runner re-scores after
+    every fleet step and moves to the peer that has since drained — the
+    withdraw/re-place path, not a migration (no KV ever moved)."""
+    rng = np.random.default_rng(9)
+
+    def mk(name):
+        eng, _ = mk_reduced_engine(name=name, max_batch=1, max_seq=MAX_SEQ,
+                                   page_size=PAGE, extra_device_pages=8,
+                                   host_pages=20, preemption=True)
+        return eng
+
+    e0, e1 = mk("q0"), mk("q1")
+    fleet = Fleet([e0, e1], policy="affinity")
+    # long-runner occupies e0's single slot; a short request drains e1
+    # quickly; the third arrival queues behind the long-runner and must
+    # re-bind to e1 once it empties
+    long_r = Request(rid=0, prompt=rng.integers(0, 128, 24).astype(np.int32),
+                     max_new_tokens=24, ttft_slo_s=5.0, tpot_slo_s=1.0)
+    short = Request(rid=1, prompt=rng.integers(0, 128, 16).astype(np.int32),
+                    max_new_tokens=2, ttft_slo_s=5.0, tpot_slo_s=1.0)
+    waiter = Request(rid=2, prompt=rng.integers(0, 128, 16).astype(np.int32),
+                     max_new_tokens=4, ttft_slo_s=5.0, tpot_slo_s=1.0)
+    fleet.run([long_r, short, waiter], max_iters=5_000, submit_all=True)
+
+    assert len(_gen_tokens(fleet.engines)) == 3
+    moved = [m for m in fleet.reroutes if m["rid"] == 2]
+    assert moved and moved[-1]["dst"] == "q1"
+    assert any(r.rid == 2 for r in e1.finished)
+    ok, violations = fleet.audit()
+    assert ok, violations
+
+
 def test_migration_rollback_when_peer_full():
     """A peer without host room refuses the ticket; the source re-adopts
     the request into the frames the export freed and finishes it locally,

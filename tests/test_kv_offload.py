@@ -19,7 +19,7 @@ from repro.core.simulator import schedule_for_interval, simulate_iteration
 from repro.kernels import ops
 from repro.serving.kv_cache import PageConfig, PagedKVAllocator
 from repro.serving.kv_offload import (DEVICE, DISK, HOST, DiskKVPool,
-                                      LinkSpec, SwapScheduler,
+                                      LinkSpec, PageRef, SwapScheduler,
                                       TieredKVAllocator)
 
 
@@ -847,3 +847,137 @@ def test_prefix_cache_single_owner_over_cap_trims_at_free():
     kv.check_invariants()
     assert len(kv.cached_pages()) == 2     # bound holds right away
     assert kv.host.used_pages == 2
+
+
+# ---------------------------------------------------------------------------
+# Forked beams: per-sharer COW reserves on arbitrary shared pages
+# ---------------------------------------------------------------------------
+
+def test_fork_shares_whole_block_table_refcounts():
+    kv = TieredKVAllocator(8 * 16, 8 * 16, _pcfg())
+    refs = kv.alloc(1, 3 * 4)
+    assert refs is not None
+    forked = kv.fork(1, 2)
+    assert forked is not None and len(forked) == 3
+    assert kv.refs(2) == kv.refs(1)              # same frames, position-wise
+    for r in kv.refs(1):
+        assert kv.refcount(r) == 2
+    kv.check_invariants()
+    # freeing one sharer leaves the other's table fully intact
+    kv.free(1)
+    assert len(kv.refs(2)) == 3
+    for r in kv.refs(2):
+        assert kv.refcount(r) == 1
+    kv.free(2)
+    assert kv.device.used_pages == 0 and kv.host.used_pages == 0
+
+
+def test_fork_refuses_live_dst_and_dead_src():
+    kv = TieredKVAllocator(8 * 16, 8 * 16, _pcfg())
+    kv.alloc(1, 4)
+    kv.alloc(2, 4)
+    assert kv.fork(1, 2) is None                 # dst already live
+    assert kv.fork(99, 3) is None                # src unknown
+    kv.check_invariants()
+
+
+def test_add_reserve_per_sharer_on_arbitrary_shared_page():
+    """Each sharer of each shared page gets its OWN private spare frame —
+    N beams diverging at the same position must never race for one
+    reserve, and a mid-table page is as reservable as the tail."""
+    kv = TieredKVAllocator(8 * 16, 8 * 16, _pcfg())
+    kv.alloc(1, 3 * 4)
+    kv.fork(1, 2)
+    r1 = kv.add_reserve(1, 1)                    # mid-table shared page
+    r2 = kv.add_reserve(2, 1)
+    assert r1 is not None and r2 is not None
+    assert r1.page != r2.page                    # private per sharer
+    assert kv.reserves_of(1) == {1: r1}
+    assert kv.reserves_of(2) == {1: r2}
+    assert kv.n_reserve_frames() == 2
+    # idempotent: a covered page hands back the existing reserve
+    assert kv.add_reserve(1, 1) == r1
+    assert kv.n_reserve_frames() == 2
+    kv.check_invariants()
+
+
+def test_add_reserve_private_page_needs_none():
+    kv = TieredKVAllocator(8 * 16, 8 * 16, _pcfg())
+    kv.alloc(1, 3 * 4)
+    assert kv.add_reserve(1, 0) is None          # refcount 1: no COW risk
+    assert kv.n_reserve_frames() == 0
+
+
+def test_add_reserve_exhausted_pools_claims_nothing():
+    kv = TieredKVAllocator(2 * 16, 1 * 16, _pcfg())   # 2 dev + 1 host pages
+    kv.alloc(1, 2 * 4)
+    kv.fork(1, 2)
+    assert kv.add_reserve(1, 0) is not None      # host fallback frame
+    assert kv.add_reserve(2, 0) is None          # both pools dry: no claim
+    assert kv.n_reserve_frames() == 1
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# PEER tier accounting: handoff export/import conservation + refusal path
+# ---------------------------------------------------------------------------
+
+def test_peer_handoff_byte_conservation_across_allocators():
+    """Exporter and importer book the same page count; both sides' pending
+    counters drain into exactly one SwapPlan's peer terms and zero out —
+    the per-instance halves of the I12 conservation invariant."""
+    src = TieredKVAllocator(4 * 16, 8 * 16, _pcfg())
+    dst = TieredKVAllocator(4 * 16, 8 * 16, _pcfg())
+    src.alloc(1, 3 * 4)
+    assert src.park(1) is not None               # whole table host-ward
+    pages = src.export_parked(1)
+    assert pages is not None and len(pages) == 3
+    src.free(1)
+    src.note_peer_export(len(pages))
+
+    got = dst.import_parked(1, len(pages))
+    assert got is not None and len(got) == 3
+    dst.note_peer_import(len(pages))
+
+    assert src.peer_out_pages_total == dst.peer_in_pages_total == 3
+    s_src, s_dst = SwapScheduler(src), SwapScheduler(dst)
+    p_out, p_in = s_src.plan_iteration([]), s_dst.plan_iteration([])
+    assert p_out.peer_out_bytes == p_in.peer_in_bytes == 3 * src.page_bytes
+    assert src.pending_peer_out_pages == dst.pending_peer_in_pages == 0
+    # drained once: the next plan charges nothing
+    assert s_src.plan_iteration([]).peer_out_bytes == 0
+    assert s_dst.plan_iteration([]).peer_in_bytes == 0
+    src.check_invariants()
+    dst.check_invariants()
+
+
+def test_peer_export_refuses_partial_or_reserved_parks():
+    kv = TieredKVAllocator(4 * 16, 8 * 16, _pcfg())
+    kv.alloc(1, 2 * 4)
+    assert kv.export_parked(1) is None           # device-resident: not parked
+    kv.park(1)
+    kv.fork(1, 2)
+    assert kv.add_reserve(1, 0) is not None
+    assert kv.export_parked(1) is None           # reserve held: stays put
+    assert kv.export_parked(2) is not None       # reserve-free sharer exports
+    kv.check_invariants()
+
+
+def test_peer_import_refusal_claims_nothing_and_rollback_reclaims():
+    """A too-small host tier refuses the import with ZERO frames claimed;
+    the exporter can then re-import into the frames its own export just
+    freed — the allocator-level contract the engine's rollback leans on."""
+    src = TieredKVAllocator(4 * 16, 8 * 16, _pcfg())
+    dst = TieredKVAllocator(4 * 16, 2 * 16, _pcfg())   # 2 host pages only
+    src.alloc(1, 3 * 4)
+    src.park(1)
+    assert src.export_parked(1) is not None
+    src.free(1)
+    used_before = dst.host.used_pages
+    assert dst.import_parked(1, 3) is None       # cannot absorb: refuse
+    assert dst.host.used_pages == used_before    # nothing claimed
+    back = src.import_parked(1, 3)               # rollback re-claim
+    assert back is not None and len(back) == 3
+    assert src.refs(1) == [PageRef(HOST, p) for p in back]
+    src.check_invariants()
+    dst.check_invariants()
